@@ -1,0 +1,143 @@
+"""Analytic per-device HLO-equivalent FLOPs per (arch × input shape).
+
+Counts everything the compiled step actually executes — including the
+overheads that separate HLO FLOPs from the 6·N·D model FLOPs:
+  * attention score/PV quadratic terms (causal ⇒ ×0.5),
+  * padded heads / padded vocab (TP divisibility),
+  * MoE capacity over-dispatch (capacity_factor; dropless at decode),
+  * SSD intra-chunk quadratic + inter-chunk combine,
+  * training = 3× forward (fwd + 2× bwd) + 1× forward recompute (full remat),
+  * FL local-step SGD/correction adds (3 flops/param),
+conventions: 1 MAC = 2 FLOPs; elementwise/normalization terms are included
+at 1 FLOP/element where they are O(tokens·d) (they matter for small archs).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+from repro.configs.registry import InputShape
+
+
+@dataclasses.dataclass
+class FlopBreakdown:
+    attn_proj: float = 0.0
+    attn_quadratic: float = 0.0
+    mlp: float = 0.0
+    moe: float = 0.0
+    ssm: float = 0.0
+    embed_head: float = 0.0
+    elementwise: float = 0.0
+    optimizer: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return (self.attn_proj + self.attn_quadratic + self.mlp + self.moe
+                + self.ssm + self.embed_head + self.elementwise + self.optimizer)
+
+
+def _attn_layer(cfg: ArchConfig, T: float, kv_len: float, causal_half: bool):
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.eff_heads, cfg.eff_kv_heads
+    d = cfg.d_model
+    proj = 2 * T * d * (H * hd) * 2 + 2 * T * d * (KV * hd) * 2
+    quad = 2 * T * kv_len * H * hd * 2          # scores + PV
+    if causal_half:
+        quad *= 0.5
+    return proj, quad
+
+
+def _mlp_layer(cfg: ArchConfig, T: float):
+    return 2 * T * 3 * cfg.d_model * cfg.d_ff
+
+
+def _moe_layer(cfg: ArchConfig, T: float, dropless: bool):
+    # router + dispatched expert FFNs at capacity
+    router = 2 * T * cfg.d_model * cfg.eff_experts
+    eff_tokens = T * cfg.experts_per_token
+    if not dropless:
+        eff_tokens *= cfg.capacity_factor
+    ffn = 2 * eff_tokens * 3 * cfg.d_model * cfg.moe_d_ff
+    return router + ffn
+
+
+def _ssm_layer(cfg: ArchConfig, T: float, decode: bool):
+    d, di, st, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+    proj = 2 * T * d * (2 * di + 2 * st + nh) + 2 * T * di * d
+    conv = 2 * T * (di + 2 * st) * cfg.ssm_conv_width
+    if decode:
+        # recurrent update: h·dA + dt·B⊗x + C·h  per head
+        ssd = T * nh * hd * st * 3 * 2
+    else:
+        Q = cfg.ssm_chunk
+        # intra-chunk per chunk/head: CBᵀ (2Q²st) + att·x (2Q²hd, tril ⇒ ×.5 skipped:
+        # the kernel computes the full block) + state build (2Q·hd·st)
+        per_tok_head = 2 * Q * st + 2 * Q * hd + 2 * hd * st
+        # inter-chunk offsets: y_off C·state (2·hd·st per tok/head) + combine
+        per_tok_head += 2 * hd * st
+        ssd = T * nh * per_tok_head
+    return proj + conv + ssd
+
+
+def analytic_flops_global(cfg: ArchConfig, shape: InputShape,
+                          fl_train: bool = True) -> FlopBreakdown:
+    """GLOBAL flops for one step of this (arch, shape); divide by chips for
+    the per-device roofline term. cfg must be the PADDED config."""
+    fb = FlopBreakdown()
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    decode = kind == "decode"
+    T = B * (1 if decode else S)              # tokens through the stack
+    if cfg.sliding_window:
+        kv_len = min(cfg.sliding_window, S)   # window bounds the kv extent
+        causal_half = False
+    else:
+        kv_len = S
+        causal_half = not decode              # causal averages to S/2
+
+    V = cfg.eff_vocab
+    d = cfg.d_model
+
+    def add_attn(n_layers, mlp="dense"):
+        p, q = _attn_layer(cfg, T, kv_len, causal_half)
+        fb.attn_proj += n_layers * p
+        fb.attn_quadratic += n_layers * q
+        if mlp == "dense":
+            fb.mlp += n_layers * _mlp_layer(cfg, T)
+        elif mlp == "moe":
+            fb.moe += n_layers * _moe_layer(cfg, T, dropless=decode)
+
+    fam = cfg.family
+    L = cfg.num_layers
+    if fam in ("dense", "vlm", "audio"):
+        add_attn(L)
+    elif fam == "moe":
+        add_attn(L, mlp="moe")
+    elif fam == "ssm":
+        fb.ssm += L * _ssm_layer(cfg, T, decode)
+    else:  # hybrid
+        period = cfg.shared_attn_period
+        n_shared = L // period
+        n_mamba = L - n_shared
+        fb.ssm += n_mamba * _ssm_layer(cfg, T, decode)
+        p, q = _attn_layer(cfg, T, kv_len, causal_half)
+        fb.attn_proj += n_shared * p
+        fb.attn_quadratic += n_shared * q
+        fb.mlp += n_shared * _mlp_layer(cfg, T)
+
+    # unembed: all positions in train; last position only otherwise
+    head_T = T if kind == "train" else B
+    fb.embed_head += 2 * head_T * d * V
+    # norms/residuals/rope: ~12 elementwise ops per token·d per layer
+    fb.elementwise += 12 * T * d * L
+
+    mult = 1.0
+    if kind == "train":
+        mult = 4.0        # fwd + 2×bwd + full-remat fwd recompute
+        if fl_train:
+            fb.optimizer += 3 * cfg.param_count()   # corrected-SGD update
+    for f in ("attn_proj", "attn_quadratic", "mlp", "moe", "ssm",
+              "embed_head", "elementwise"):
+        setattr(fb, f, getattr(fb, f) * mult)
+    return fb

@@ -1,0 +1,73 @@
+"""Shared harness for the paper-reproduction benchmarks.
+
+Every fig*/table* module exposes ``run(quick: bool) -> list[dict]``; rows are
+printed by benchmarks/run.py as ``name,us_per_call,derived`` CSV and dumped to
+results/<module>.json for EXPERIMENTS.md.
+
+Scale note: the paper uses covtype (N=581k, K=100, N_k=5810) and w8a (N=49.7k,
+K=16). Full scale runs fine but is slow on the 1-core CPU container; `quick`
+uses N=20k, K=20 for covtype-like and N=10k, K=8 for w8a-like, which preserves
+every qualitative ordering (verified against a full-scale spot check).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from functools import lru_cache
+
+import numpy as np
+
+from repro.core import AlgoHParams, run_federated, solve_reference
+from repro.data import make_binary_classification, partition
+from repro.models.logreg import make_logreg_problem
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+@lru_cache(maxsize=16)
+def logreg_setup(
+    dataset: str = "covtype",
+    n: int = 20_000,
+    k: int = 20,
+    scheme: str = "iid",
+    gamma: float = 1e-3,
+    seed: int = 0,
+):
+    X, y = make_binary_classification(dataset, n=n, seed=seed)
+    clients = partition(X, y, num_clients=k, scheme=scheme, seed=seed)
+    prob = make_logreg_problem(clients, gamma=gamma)
+    wstar = solve_reference(prob, iters=100)
+    return prob, wstar
+
+
+def bench_algo(
+    prob, wstar, algo: str, hp: AlgoHParams, rounds: int, label: str
+) -> dict:
+    t0 = time.perf_counter()
+    h = run_federated(prob, algo, hp, rounds, w_star=wstar)
+    wall = time.perf_counter() - t0
+    n_rounds = len(h.rounds)
+    return {
+        "name": label,
+        "us_per_call": 1e6 * wall / max(n_rounds, 1),
+        "derived": float(h.rel_error[-1]),
+        "algo": algo,
+        "rounds": n_rounds,
+        "final_loss": float(h.loss[-1]),
+        "final_grad_norm": float(h.grad_norm[-1]),
+        "comm_floats": float(h.comm_floats[-1]),
+        "rel_error_curve": [float(v) for v in h.rel_error],
+        "loss_curve": [float(v) for v in h.loss],
+    }
+
+
+def save_results(module: str, rows: list[dict]) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{module}.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+def print_csv(rows: list[dict]) -> None:
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']:.6e}")

@@ -1,0 +1,27 @@
+"""Figure 1(b,e): vary local epochs L. Key claim: FedOSAA-SVRG with L=3 is
+comparable to FedSVRG with L=30 (10× local-computation saving)."""
+from __future__ import annotations
+
+from repro.core import AlgoHParams
+
+from benchmarks.common import bench_algo, logreg_setup, print_csv, save_results
+
+EPOCHS = (3, 10, 30)
+
+
+def run(quick: bool = True) -> list[dict]:
+    n, k = (20_000, 20) if quick else (58_100, 100)
+    rounds = 20 if quick else 40
+    prob, wstar = logreg_setup("covtype", n=n, k=k)
+    rows = []
+    for L in EPOCHS:
+        hp = AlgoHParams(eta=1.0, local_epochs=L)
+        for algo in ("fedsvrg", "fedosaa_svrg", "scaffold", "fedosaa_scaffold"):
+            rows.append(bench_algo(prob, wstar, algo, hp, rounds,
+                                   f"fig1_epochs/{algo}/L{L}"))
+    save_results("fig1_epochs_sweep", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    print_csv(run())

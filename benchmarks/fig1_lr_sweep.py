@@ -1,0 +1,32 @@
+"""Figure 1(a,d): vary local learning rate η — FedOSAA-SVRG vs FedSVRG vs
+Newton-GMRES, and FedOSAA-SCAFFOLD vs SCAFFOLD (covtype-like, K clients)."""
+from __future__ import annotations
+
+from repro.core import AlgoHParams
+
+from benchmarks.common import bench_algo, logreg_setup, print_csv, save_results
+
+ETAS = (0.01, 0.1, 1.0, 2.0)
+
+
+def run(quick: bool = True) -> list[dict]:
+    n, k = (20_000, 20) if quick else (58_100, 100)
+    rounds = 20 if quick else 40
+    prob, wstar = logreg_setup("covtype", n=n, k=k)
+    rows = []
+    for eta in ETAS:
+        hp = AlgoHParams(eta=eta, local_epochs=10)
+        for algo in ("fedsvrg", "fedosaa_svrg", "fedosaa_scaffold", "scaffold"):
+            rows.append(bench_algo(prob, wstar, algo, hp, rounds,
+                                   f"fig1_lr/{algo}/eta{eta}"))
+        # Newton-GMRES has no η; bench once per sweep point for reference cost
+        if eta == 1.0:
+            rows.append(bench_algo(prob, wstar, "newton_gmres",
+                                   AlgoHParams(local_epochs=10), rounds,
+                                   "fig1_lr/newton_gmres/ref"))
+    save_results("fig1_lr_sweep", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    print_csv(run())

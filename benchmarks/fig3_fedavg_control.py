@@ -1,0 +1,26 @@
+"""Figure 3 / Appendix D.4: FedOSAA-AVG negative control. AA cannot rescue
+FedAvg — without a gradient-correction term both fail to reach w*."""
+from __future__ import annotations
+
+from repro.core import AlgoHParams
+
+from benchmarks.common import bench_algo, logreg_setup, print_csv, save_results
+
+
+def run(quick: bool = True) -> list[dict]:
+    n, k = (20_000, 20) if quick else (58_100, 100)
+    rounds = 25 if quick else 50
+    prob, wstar = logreg_setup("covtype", n=n, k=k)
+    rows = []
+    for eta in (0.1, 1.0):
+        for L in (5, 10):
+            for algo in ("fedavg", "fedosaa_avg", "fedosaa_svrg"):
+                hp = AlgoHParams(eta=eta, local_epochs=L)
+                rows.append(bench_algo(prob, wstar, algo, hp, rounds,
+                                       f"fig3/{algo}/eta{eta}_L{L}"))
+    save_results("fig3_fedavg_control", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    print_csv(run())

@@ -1,0 +1,36 @@
+"""Figures 4 & 5: sweeps over regularization γ (conditioning) and number of
+clients K, on both covtype-like and w8a-like data."""
+from __future__ import annotations
+
+from repro.core import AlgoHParams
+
+from benchmarks.common import bench_algo, logreg_setup, print_csv, save_results
+
+ALGOS = ("fedsvrg", "fedosaa_svrg", "giant", "newton_gmres")
+
+
+def run(quick: bool = True) -> list[dict]:
+    rounds = 15 if quick else 40
+    rows = []
+    # γ sweep at fixed K (paper fig 4 row 2 / fig 5 row 1)
+    for dataset, n, k in (("covtype", 20_000 if quick else 58_100, 10),
+                          ("w8a", 10_000 if quick else 49_749, 16)):
+        for gamma in (1e-2, 1e-3):
+            prob, wstar = logreg_setup(dataset, n=n, k=k, gamma=gamma)
+            for algo in ALGOS:
+                hp = AlgoHParams(eta=1.0, local_epochs=10)
+                rows.append(bench_algo(prob, wstar, algo, hp, rounds,
+                                       f"fig45/{dataset}/gamma{gamma}/{algo}"))
+    # K sweep at fixed γ (paper fig 4 row 1)
+    for k in (10, 50) if quick else (10, 100):
+        prob, wstar = logreg_setup("covtype", n=20_000 if quick else 58_100, k=k)
+        for algo in ALGOS:
+            hp = AlgoHParams(eta=1.0, local_epochs=10)
+            rows.append(bench_algo(prob, wstar, algo, hp, rounds,
+                                   f"fig45/covtype/K{k}/{algo}"))
+    save_results("fig45_gamma_clients", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    print_csv(run())

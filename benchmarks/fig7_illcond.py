@@ -1,0 +1,30 @@
+"""Figure 7: ill-conditioned problems (γ=1e-4, w8a-like). GIANT without line
+search can diverge; FedOSAA without line search stays stable; GIANT+LS is
+best but pays an extra communication round."""
+from __future__ import annotations
+
+from repro.core import AlgoHParams
+
+from benchmarks.common import bench_algo, logreg_setup, print_csv, save_results
+
+
+def run(quick: bool = True) -> list[dict]:
+    n, k = (10_000, 16) if quick else (49_749, 16)
+    rounds = 20 if quick else 40
+    prob, wstar = logreg_setup("w8a", n=n, k=k, gamma=1e-4)
+    rows = []
+    specs = [
+        ("fedosaa_svrg", AlgoHParams(eta=1.0, local_epochs=10), "no_ls"),
+        ("fedsvrg", AlgoHParams(eta=1.0, local_epochs=10), "no_ls"),
+        ("giant", AlgoHParams(local_epochs=10), "no_ls"),
+        ("giant", AlgoHParams(local_epochs=10, line_search=True), "ls"),
+        ("newton_gmres", AlgoHParams(local_epochs=10), "no_ls"),
+    ]
+    for algo, hp, tag in specs:
+        rows.append(bench_algo(prob, wstar, algo, hp, rounds, f"fig7/{algo}/{tag}"))
+    save_results("fig7_illcond", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    print_csv(run())

@@ -1,0 +1,16 @@
+"""Beyond-paper: FedOSAA on a real transformer LM (smollm-135m reduced).
+Filled in once the model zoo lands; returns [] if models aren't available."""
+from __future__ import annotations
+
+
+def run(quick: bool = True) -> list[dict]:
+    try:
+        from benchmarks._lm_fedosaa_impl import run_impl
+    except ImportError:
+        return []
+    return run_impl(quick=quick)
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_csv
+    print_csv(run())

@@ -1,0 +1,65 @@
+"""Benchmark driver: one module per paper table/figure + the roofline harness.
+
+Prints ``name,us_per_call,derived`` CSV per the repo contract.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run               # quick (CI) scale
+  PYTHONPATH=src python -m benchmarks.run --full        # paper scale
+  PYTHONPATH=src python -m benchmarks.run --only fig2   # subset
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "table1_comm",
+    "fig1_lr_sweep",
+    "fig1_epochs_sweep",
+    "fig1_batch_sweep",
+    "fig2_distributions",
+    "fig3_fedavg_control",
+    "fig45_gamma_clients",
+    "fig6_walltime",
+    "fig7_illcond",
+    "fig8_nn",
+    "ext_stability",      # beyond-paper: damping/filtering/moving-average
+    "ext_carry_history",  # beyond-paper: cross-round AA history (App. A opt. 1)
+    "lm_fedosaa",         # beyond-paper: FedOSAA on a transformer LM
+    "roofline",           # deliverable g: derived from the dry-run artifacts
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale runs")
+    ap.add_argument("--only", type=str, default="", help="substring filter")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+            rows = mod.run(quick=not args.full)
+            for r in rows:
+                print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']:.6e}")
+            print(f"# {mod_name}: {len(rows)} rows in {time.perf_counter()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failures.append(mod_name)
+            print(f"# {mod_name}: FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

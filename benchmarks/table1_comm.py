@@ -1,0 +1,43 @@
+"""Table 1: communication cost per aggregation round — verified against the
+runtime counters of every algorithm (rounds × d floats)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import AlgoHParams, init_state, make_round_fn
+from repro.core.algorithms import ALGORITHMS, COMM_TABLE
+
+from benchmarks.common import logreg_setup, print_csv, save_results
+
+
+def run(quick: bool = True) -> list[dict]:
+    prob, _ = logreg_setup("covtype", n=5_000, k=8)
+    d = 54
+    rows = []
+    hp = AlgoHParams(eta=1.0, local_epochs=3, dane_newton_iters=2, dane_cg_iters=10)
+    for algo in ALGORITHMS:
+        state = init_state(prob, jax.random.PRNGKey(0))
+        fn = jax.jit(make_round_fn(algo, prob, hp))
+        state, m = fn(state)           # compile
+        t0 = time.perf_counter()
+        state, m = fn(state)
+        jax.block_until_ready(m.loss)
+        wall = time.perf_counter() - t0
+        rtrips, units = COMM_TABLE[algo]
+        measured = float(m.comm_floats)
+        rows.append({
+            "name": f"table1/{algo}",
+            "us_per_call": 1e6 * wall,
+            "derived": measured / d,        # == Table 1 'cost' column (×d)
+            "round_trips": rtrips,
+            "table_units": units,
+            "matches_table": abs(measured - units * d) < 1e-3,
+        })
+    save_results("table1_comm", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    print_csv(run())

@@ -1,0 +1,30 @@
+"""Regenerate the roofline table inside EXPERIMENTS.md from the latest
+dry-run artifacts (run after `repro.launch.dryrun --all`)."""
+from __future__ import annotations
+
+import os
+import re
+
+from benchmarks.roofline import load, markdown_table
+
+HERE = os.path.dirname(__file__)
+MD = os.path.join(HERE, "..", "EXPERIMENTS.md")
+
+
+def main() -> None:
+    rows = load("16x16")
+    table = markdown_table(rows)
+    with open(MD) as f:
+        text = f.read()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    pattern = re.compile(re.escape(marker) + r".*?(?=\n\nReading the table)",
+                         re.DOTALL)
+    replacement = marker + "\n\n" + table
+    new = pattern.sub(lambda _: replacement, text, count=1)
+    with open(MD, "w") as f:
+        f.write(new)
+    print(f"inserted {len(rows)}-row roofline table into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

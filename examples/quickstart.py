@@ -1,0 +1,36 @@
+"""Quickstart: FedOSAA vs FedSVRG on federated logistic regression.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Reproduces the paper's headline result in ~1 minute on CPU: one Anderson-
+acceleration step after the SVRG local epochs turns a first-order method into
+a Newton-GMRES-class method, at identical communication cost.
+"""
+import jax
+
+from repro.core import AlgoHParams, run_federated, solve_reference
+from repro.data import make_binary_classification, partition
+from repro.models.logreg import make_logreg_problem
+
+
+def main():
+    # federated setup: 10 clients, IID split of a covtype-like dataset
+    X, y = make_binary_classification("covtype", n=10_000, seed=0)
+    clients = partition(X, y, num_clients=10, scheme="iid")
+    problem = make_logreg_problem(clients, gamma=1e-3)
+    w_star = solve_reference(problem)          # reference minimizer
+
+    hp = AlgoHParams(eta=1.0, local_epochs=10)  # paper defaults
+    print(f"{'round':>5} | {'FedSVRG':>12} | {'FedOSAA-SVRG':>12}   (relative error)")
+    h_svrg = run_federated(problem, "fedsvrg", hp, 15, w_star=w_star)
+    h_osaa = run_federated(problem, "fedosaa_svrg", hp, 15, w_star=w_star)
+    for t in range(len(h_svrg.rounds)):
+        print(f"{t:5d} | {h_svrg.rel_error[t]:12.3e} | {h_osaa.rel_error[t]:12.3e}")
+    print(f"\nSame communication (2d floats/round), same local gradient count "
+          f"(L+1={hp.local_epochs + 1}):")
+    print(f"  FedSVRG      final rel-err: {h_svrg.rel_error[-1]:.3e}")
+    print(f"  FedOSAA-SVRG final rel-err: {h_osaa.rel_error[-1]:.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Serving demo: batched prefill + decode with KV caches / SSM states for any
+assigned architecture (reduced variant on CPU).
+
+  PYTHONPATH=src python examples/serve_demo.py --arch mamba2-2.7b --new-tokens 16
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models.decoder import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    model = build_model(cfg)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+
+    B, P, N = args.batch, args.prompt_len, args.new_tokens
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                                 cfg.vocab_size, jnp.int32)
+    t0 = time.time()
+    last_logits, caches = jax.jit(
+        lambda p, t: model.prefill(p, t, None, cache_len=P + N)
+    )(params, prompts)
+    print(f"prefill[{B}x{P}] in {time.time()-t0:.2f}s")
+
+    dec = jax.jit(model.decode_step)
+    tok = jnp.argmax(last_logits[:, :cfg.vocab_size], -1)[:, None].astype(jnp.int32)
+    generated = [tok]
+    t0 = time.time()
+    for i in range(N - 1):
+        pos = jnp.full((B, 1), P + i, jnp.int32)
+        logits, caches = dec(params, caches, tok, pos)
+        tok = jnp.argmax(logits[:, :cfg.vocab_size], -1)[:, None].astype(jnp.int32)
+        generated.append(tok)
+    dt = time.time() - t0
+    out = jnp.concatenate(generated, axis=1)
+    print(f"decoded {N-1} tokens/seq in {dt:.2f}s "
+          f"({B*(N-1)/max(dt,1e-9):.1f} tok/s batch throughput)")
+    print("sample token ids:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

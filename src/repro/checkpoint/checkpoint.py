@@ -1,0 +1,76 @@
+"""Checkpointing: npz-based pytree save/restore (no orbax offline).
+
+Flattens the pytree with '/'-joined key paths; restores into an identical
+structure. Sharded arrays are fetched to host (per-process save) and restored
+with ``jax.device_put`` against provided shardings when given.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten(tree: Pytree) -> dict[str, np.ndarray]:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            k.key if hasattr(k, "key") else str(getattr(k, "idx", k)) for k in kp
+        )
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            # npz cannot hold ml_dtypes (bf16 etc.): store as f32; restore
+            # casts back to the template dtype
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path: str, params: Pytree, step: int = 0,
+                    extra: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(params)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    meta = {"step": step, "keys": sorted(flat), **(extra or {})}
+    with open((path[:-4] if path.endswith(".npz") else path) + ".meta.json", "w") as f:
+        json.dump(meta, f)
+
+
+def restore_checkpoint(path: str, like: Pytree, shardings: Pytree | None = None) -> Pytree:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_leaves = (
+        jax.tree_util.tree_leaves(shardings) if shardings is not None
+        else [None] * len(leaves_like)
+    )
+    out = []
+    for (kp, leaf), shard in zip(leaves_like, shard_leaves):
+        key = "/".join(
+            k.key if hasattr(k, "key") else str(getattr(k, "idx", k)) for k in kp
+        )
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        if shard is not None:
+            out.append(jax.device_put(arr.astype(leaf.dtype), shard))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    metas = [f for f in os.listdir(ckpt_dir) if f.endswith(".meta.json")]
+    if not metas:
+        return None
+    steps = []
+    for m in metas:
+        with open(os.path.join(ckpt_dir, m)) as f:
+            steps.append(json.load(f).get("step", 0))
+    return max(steps)

@@ -1,0 +1,3 @@
+"""Config registry: all assigned architectures + paper-experiment configs."""
+from repro.configs.base import ArchConfig  # noqa: F401
+from repro.configs.registry import ARCHS, INPUT_SHAPES, get_arch, get_shape  # noqa: F401

@@ -1,0 +1,25 @@
+from repro.core.anderson import (  # noqa: F401
+    AAConfig,
+    AAStats,
+    aa_mixing_step,
+    lbfgs_two_loop,
+    multisecant_update,
+    trajectory_to_sy,
+)
+from repro.core.algorithms import (  # noqa: F401
+    ALGORITHMS,
+    COMM_TABLE,
+    AlgoHParams,
+    RoundMetrics,
+    ServerState,
+    init_state,
+    make_round_fn,
+)
+from repro.core.problem import (  # noqa: F401
+    ClientBatch,
+    FLProblem,
+    StackedClients,
+    sample_minibatch,
+    stack_client_arrays,
+)
+from repro.core.server import History, run_federated, solve_reference  # noqa: F401

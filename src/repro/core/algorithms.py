@@ -1,0 +1,507 @@
+"""Federated optimization algorithms (paper §2, §4, Appendix D.1).
+
+Implemented, all under one jittable round API:
+
+  fedavg            — McMahan et al. baseline (no correction)
+  fedsvrg           — SVRG-corrected local steps (= FedLin)
+  scaffold          — control-variate corrected local steps (paper's variant:
+                      c = ∇f(w^{t-1}), c_k = ∇f_k(w^{t-1}))
+  fedosaa_svrg      — THE PAPER: FedSVRG local steps + one AA step (Alg. 1)
+  fedosaa_scaffold  — SCAFFOLD local steps + one AA step (Alg. 2)
+  fedosaa_avg       — negative control (Appendix D.4): AA on uncorrected steps
+  lbfgs             — one-step L-BFGS on the same S/Y data (App. D.1)
+  giant             — local Newton-CG on the global gradient (Wang et al.)
+  newton_gmres      — GIANT with GMRES in place of CG (= Newton-MINRES)
+  dane              — exact local minimization of the DANE surrogate
+
+Every round function has signature  round(state) -> (state, RoundMetrics)
+and is a pure jax function: K clients are vmapped (stacked data), so a full
+round is ONE XLA computation. The distributed runtime (core/sharded.py) swaps
+the vmap for a shard_map over the ("pod","data") mesh axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.anderson import AAConfig, AAStats, lbfgs_two_loop, multisecant_update, trajectory_to_sy
+from repro.core.problem import ClientBatch, FLProblem, sample_minibatch
+from repro.utils import tree_math as tm
+
+Pytree = Any
+
+ALGORITHMS = (
+    "fedavg", "fedsvrg", "scaffold",
+    "fedosaa_svrg", "fedosaa_scaffold", "fedosaa_avg",
+    "lbfgs", "giant", "newton_gmres", "dane",
+)
+
+# Communication cost per aggregation round, in units of d floats and in
+# server<->client round-trips (paper Table 1).
+COMM_TABLE = {
+    "fedavg":           (1, 1.0),
+    "fedsvrg":          (2, 2.0),
+    "scaffold":         (1, 2.0),
+    "fedosaa_svrg":     (2, 2.0),
+    "fedosaa_scaffold": (1, 2.0),
+    "fedosaa_avg":      (1, 1.0),
+    "lbfgs":            (2, 2.0),
+    "giant":            (2, 2.0),
+    "newton_gmres":     (2, 2.0),
+    "dane":             (2, 2.0),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgoHParams:
+    """Tuning knobs shared by all algorithms (paper §4 / Appendix D.1)."""
+
+    eta: float = 1.0            # local learning rate η
+    local_epochs: int = 10      # L (== q CG/GMRES iterations for Newton-type)
+    batch_size: int | None = None   # None => full-batch local gradients
+    aa: AAConfig = AAConfig()
+    line_search: bool = False   # GIANT-style global backtracking
+    participation: float = 1.0  # fraction of clients active per round (ext.)
+    carry_history: int = 0      # extra (s,y) columns carried ACROSS rounds
+                                # (paper App. A option 1; FedOSAA-SVRG only)
+    dane_newton_iters: int = 20
+    dane_cg_iters: int = 100
+
+
+class ServerState(NamedTuple):
+    params: Pytree
+    c: Pytree        # server control variate (SCAFFOLD family; zeros otherwise)
+    c_k: Pytree      # [K, ...] client control variates
+    t: jax.Array
+    rng: jax.Array
+    hist_s: Pytree = None   # [K, H, ...] carried AA columns (App. A opt. 1)
+    hist_y: Pytree = None
+
+
+class RoundMetrics(NamedTuple):
+    loss: jax.Array          # global f(w^t) before the update
+    grad_norm: jax.Array     # ‖∇f(w^t)‖ (or control-variate norm for scaffold)
+    theta_mean: jax.Array    # mean AA optimization gain across clients (nan if n/a)
+    gram_cond_max: jax.Array # worst AA Gram conditioning (nan if n/a)
+    comm_floats: jax.Array   # floats on the wire this round (Table 1 units)
+
+
+def init_state(problem: FLProblem, rng: jax.Array,
+               hp: "AlgoHParams | None" = None) -> ServerState:
+    rng, init_rng = jax.random.split(rng)
+    params = problem.init(init_rng)
+    zeros = tm.tree_zeros_like(params)
+    K = problem.clients.num_clients
+    c_k = jax.tree.map(lambda z: jnp.zeros((K,) + z.shape, z.dtype), zeros)
+    hist_s = hist_y = None
+    if hp is not None and hp.carry_history > 0:
+        H = hp.carry_history
+        hist_s = jax.tree.map(
+            lambda z: jnp.zeros((K, H) + z.shape, z.dtype), zeros)
+        hist_y = jax.tree.map(
+            lambda z: jnp.zeros((K, H) + z.shape, z.dtype), zeros)
+    return ServerState(params, zeros, c_k, jnp.zeros((), jnp.int32), rng,
+                       hist_s, hist_y)
+
+
+# --------------------------------------------------------------------------
+# local trajectories
+# --------------------------------------------------------------------------
+
+def _local_trajectory(
+    problem: FLProblem,
+    hp: AlgoHParams,
+    w0: Pytree,
+    batch: ClientBatch,
+    residual_fn: Callable[[Pytree, jax.Array], Pytree],
+    rng: jax.Array,
+):
+    """Run L corrected-GD steps from w0 and return the full trajectory.
+
+    Returns (w_traj, r_traj) with leading axis L+1 — FedOSAA evaluates L+1
+    gradients (Alg. 1 needs r_L for the last Y column).
+    """
+    L = hp.local_epochs
+    rngs = jax.random.split(rng, L + 1)
+
+    def step(w, step_rng):
+        r = residual_fn(w, step_rng)
+        w_next = tm.tree_axpy(-hp.eta, r, w)
+        return w_next, (w, r)
+
+    w_L, (w_hist, r_hist) = jax.lax.scan(step, w0, rngs[:L])
+    r_L = residual_fn(w_L, rngs[L])
+    w_traj = jax.tree.map(
+        lambda h, last: jnp.concatenate([h, last[None]], axis=0), w_hist, w_L
+    )
+    r_traj = jax.tree.map(
+        lambda h, last: jnp.concatenate([h, last[None]], axis=0), r_hist, r_L
+    )
+    return w_traj, r_traj
+
+
+def _make_residual_fn(
+    problem: FLProblem, hp: AlgoHParams, batch: ClientBatch, correction: Pytree | None
+):
+    """r(w; ζ) = ∇f_k(w; ζ) + correction(ζ).
+
+    correction is either
+      * a pytree  (SCAFFOLD: c − c_k — minibatch independent), or
+      * a callable (w_anchor-based SVRG term: −∇f_k(w^t;ζ) + ∇f(w^t)), or
+      * None (FedAvg).
+    """
+    def residual(w, rng):
+        if hp.batch_size is None:
+            mb = batch
+        else:
+            mb = sample_minibatch(batch, rng, hp.batch_size)
+        g = problem.grad(w, mb)
+        if correction is None:
+            return g
+        if callable(correction):
+            return tm.tree_add(g, correction(mb))
+        return tm.tree_add(g, correction)
+
+    return residual
+
+
+# --------------------------------------------------------------------------
+# per-client updates (to be vmapped over the stacked client axis)
+# --------------------------------------------------------------------------
+
+def _client_svrg(problem, hp, use_aa, w_t, g_global, x, y, mask, rng,
+                 hist_s=None, hist_y=None):
+    batch = ClientBatch(x, y, mask)
+
+    def svrg_correction(mb):
+        # −∇f_k(w^t; ζ) + ∇f(w^t): the SAME minibatch ζ as the live gradient.
+        return tm.tree_sub(g_global, problem.grad(w_t, mb))
+
+    residual_fn = _make_residual_fn(problem, hp, batch, svrg_correction)
+    w_traj, r_traj = _local_trajectory(problem, hp, w_t, batch, residual_fn, rng)
+    nan_st = AAStats(jnp.nan, jnp.nan, jnp.nan, jnp.array(0))
+    if not use_aa:
+        w_k = jax.tree.map(lambda t: t[-1], w_traj)
+        return (w_k, nan_st) if hist_s is None else (w_k, nan_st, hist_s, hist_y)
+    s, y_stack = trajectory_to_sy(w_traj, r_traj, hp.aa.residual_ema)
+    if hist_s is not None:
+        # App. A option 1: prepend columns carried from previous rounds
+        # (stale anchors — valid secant pairs of nearby Jacobians; the
+        # filtered/regularized LS solve absorbs the inconsistency)
+        s_all = jax.tree.map(lambda h, f: jnp.concatenate([h, f], 0), hist_s, s)
+        y_all = jax.tree.map(lambda h, f: jnp.concatenate([h, f], 0), hist_y, y_stack)
+        w_k, stats = multisecant_update(w_t, g_global, s_all, y_all, hp.eta, hp.aa)
+        Hn = hp.carry_history
+        new_hs = jax.tree.map(lambda f: f[-Hn:], s)
+        new_hy = jax.tree.map(lambda f: f[-Hn:], y_stack)
+        return w_k, stats, new_hs, new_hy
+    w_k, stats = multisecant_update(w_t, g_global, s, y_stack, hp.eta, hp.aa)
+    return w_k, stats
+
+
+def _client_scaffold(problem, hp, use_aa, w_t, c, x, y, mask, c_k, rng):
+    batch = ClientBatch(x, y, mask)
+    correction = tm.tree_sub(c, c_k)
+    residual_fn = _make_residual_fn(problem, hp, batch, correction)
+    w_traj, r_traj = _local_trajectory(problem, hp, w_t, batch, residual_fn, rng)
+    if use_aa:
+        s, y_stack = trajectory_to_sy(w_traj, r_traj, hp.aa.residual_ema)
+        w_k, stats = multisecant_update(w_t, c, s, y_stack, hp.eta, hp.aa)
+    else:
+        w_k = jax.tree.map(lambda t: t[-1], w_traj)
+        stats = AAStats(jnp.nan, jnp.nan, jnp.nan, jnp.array(0))
+    new_c_k = problem.grad(w_t, batch)     # c_k ← ∇f_k(w^t), full batch (Alg. 2)
+    return w_k, new_c_k, stats
+
+
+def _client_avg(problem, hp, use_aa, w_t, x, y, mask, rng):
+    batch = ClientBatch(x, y, mask)
+    residual_fn = _make_residual_fn(problem, hp, batch, None)
+    w_traj, r_traj = _local_trajectory(problem, hp, w_t, batch, residual_fn, rng)
+    if not use_aa:
+        w_k = jax.tree.map(lambda t: t[-1], w_traj)
+        return w_k, AAStats(jnp.nan, jnp.nan, jnp.nan, jnp.array(0))
+    s, y_stack = trajectory_to_sy(w_traj, r_traj)
+    # negative control: AA against the LOCAL gradient (no correction exists)
+    g_local = jax.tree.map(lambda t: t[0], r_traj)
+    w_k, stats = multisecant_update(w_t, g_local, s, y_stack, hp.eta, hp.aa)
+    return w_k, stats
+
+
+def _client_lbfgs(problem, hp, w_t, g_global, x, y, mask, rng):
+    batch = ClientBatch(x, y, mask)
+
+    def svrg_correction(mb):
+        return tm.tree_sub(g_global, problem.grad(w_t, mb))
+
+    residual_fn = _make_residual_fn(problem, hp, batch, svrg_correction)
+    w_traj, r_traj = _local_trajectory(problem, hp, w_t, batch, residual_fn, rng)
+    s, y_stack = trajectory_to_sy(w_traj, r_traj)
+    direction = lbfgs_two_loop(g_global, s, y_stack, hp.eta)
+    w_k = tm.tree_sub(w_t, direction)
+    return w_k, AAStats(jnp.nan, jnp.nan, jnp.nan, jnp.array(0))
+
+
+def _cg_solve(matvec, b, iters: int):
+    """Plain CG on a pytree SPD system, fixed iteration count (GIANT's q)."""
+    x = tm.tree_zeros_like(b)
+    r = b
+    p = r
+    rs = tm.tree_dot(r, r)
+
+    def body(_, carry):
+        x, r, p, rs = carry
+        ap = matvec(p)
+        denom = tm.tree_dot(p, ap)
+        alpha = rs / jnp.maximum(denom, 1e-30)
+        x = tm.tree_axpy(alpha, p, x)
+        r = tm.tree_axpy(-alpha, ap, r)
+        rs_new = tm.tree_dot(r, r)
+        beta = rs_new / jnp.maximum(rs, 1e-30)
+        p = tm.tree_axpy(beta, p, r)
+        return x, r, p, rs_new
+
+    x, _, _, _ = jax.lax.fori_loop(0, iters, body, (x, r, p, rs))
+    return x
+
+
+def _client_giant(problem, hp, w_t, g_global, x, y, mask):
+    batch = ClientBatch(x, y, mask)
+    matvec = lambda v: problem.hvp(w_t, batch, v)
+    p_k = _cg_solve(matvec, g_global, hp.local_epochs)
+    return p_k
+
+
+def _client_newton_gmres(problem, hp, w_t, g_global, x, y, mask):
+    batch = ClientBatch(x, y, mask)
+    matvec = lambda v: problem.hvp(w_t, batch, v)
+    p_k, _ = jax.scipy.sparse.linalg.gmres(
+        matvec, g_global, maxiter=1, restart=hp.local_epochs, tol=0.0,
+        solve_method="incremental",
+    )
+    return p_k
+
+
+def _client_dane(problem, hp, w_t, g_global, x, y, mask):
+    """Exact local minimization of h_k(w)=f_k(w) − <∇f_k(w^t) − ∇f(w^t), w>
+    via damped Newton with backtracking (App. D.1: 'no tuning parameter')."""
+    batch = ClientBatch(x, y, mask)
+    g_k_t = problem.grad(w_t, batch)
+    shift = tm.tree_sub(g_k_t, g_global)        # ∇h_k = ∇f_k(w) − shift
+
+    def h_val(w):
+        return problem.loss(w, batch) - tm.tree_dot(shift, w)
+
+    def h_grad(w):
+        return tm.tree_sub(problem.grad(w, batch), shift)
+
+    def newton_step(w, _):
+        g = h_grad(w)
+        matvec = lambda v: problem.hvp(w, batch, v)
+        p = _cg_solve(matvec, g, hp.dane_cg_iters)
+        # backtracking on h along p
+        f0 = h_val(w)
+        gTp = tm.tree_dot(g, p)
+
+        def try_step(a):
+            return h_val(tm.tree_axpy(-a, p, w))
+
+        steps = jnp.array([1.0, 0.5, 0.25, 0.125, 0.0625])
+        vals = jnp.stack([try_step(a) for a in steps])
+        ok = vals < f0 - 1e-4 * steps * gTp
+        idx = jnp.argmax(ok)          # first satisfying Armijo; 0 if none true
+        a = jnp.where(jnp.any(ok), steps[idx], 0.0)
+        return tm.tree_axpy(-a, p, w), None
+
+    w_k, _ = jax.lax.scan(newton_step, w_t, None, length=hp.dane_newton_iters)
+    return w_k
+
+
+# --------------------------------------------------------------------------
+# participation mask (extension: partial client participation)
+# --------------------------------------------------------------------------
+
+def _participation_weights(problem: FLProblem, hp: AlgoHParams, rng: jax.Array):
+    w = problem.clients.weight
+    if hp.participation >= 1.0:
+        return w
+    K = w.shape[0]
+    active = jax.random.bernoulli(rng, hp.participation, (K,))
+    wm = jnp.where(active, w, 0.0)
+    return wm / jnp.maximum(jnp.sum(wm), 1e-30)
+
+
+def _aggregate(weights: jax.Array, stacked: Pytree, anchor: Pytree | None = None) -> Pytree:
+    """Σ_k weights_k · stacked_k.
+
+    When ``anchor`` is given, uses the delta form anchor + Σ w_k(x_k − anchor):
+    identical when Σweights = 1, and degrades to a no-op (instead of zeroing
+    the model) if a partial-participation round draws no clients.
+    """
+    if anchor is None:
+        return jax.tree.map(lambda s: jnp.tensordot(weights, s, axes=1), stacked)
+    return jax.tree.map(
+        lambda a, s: a + jnp.tensordot(weights, s - a[None], axes=1), anchor, stacked
+    )
+
+
+# --------------------------------------------------------------------------
+# round functions
+# --------------------------------------------------------------------------
+
+def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams):
+    """Return a jittable round(state) -> (state, RoundMetrics)."""
+    if algo not in ALGORITHMS:
+        raise ValueError(f"unknown algorithm {algo!r}; choose from {ALGORITHMS}")
+    d = tm.tree_size(problem.init(jax.random.PRNGKey(0)))
+    _, cost_units = COMM_TABLE[algo]
+    comm = jnp.asarray(cost_units * d, jnp.float32)
+    C = problem.clients
+
+    def common_metrics(w, g, stats_stack, extra_comm=0.0):
+        loss = problem.global_loss(w)
+        return RoundMetrics(
+            loss=loss,
+            grad_norm=tm.tree_norm(g),
+            theta_mean=jnp.nanmean(stats_stack.theta),
+            gram_cond_max=jnp.nanmax(stats_stack.gram_cond),
+            comm_floats=comm + extra_comm,
+        )
+
+    nan_stats = AAStats(
+        jnp.full((C.num_clients,), jnp.nan), jnp.full((C.num_clients,), jnp.nan),
+        jnp.full((C.num_clients,), jnp.nan), jnp.zeros((C.num_clients,), jnp.int32),
+    )
+
+    # ---------------- SVRG family ----------------
+    if algo in ("fedsvrg", "fedosaa_svrg"):
+        use_aa = algo == "fedosaa_svrg"
+
+        def round_fn(state: ServerState):
+            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
+            weights = _participation_weights(problem, hp, part_rng)
+            g_global = problem.global_grad(state.params)
+            rngs = jax.random.split(cl_rng, C.num_clients)
+            if hp.carry_history > 0 and state.hist_s is not None:
+                w_k, stats, new_hs, new_hy = jax.vmap(
+                    partial(_client_svrg, problem, hp, use_aa, state.params,
+                            g_global)
+                )(C.x, C.y, C.mask, rngs, state.hist_s, state.hist_y)
+                new_params = _aggregate(weights, w_k, anchor=state.params)
+                metrics = common_metrics(state.params, g_global, stats)
+                return state._replace(params=new_params, t=state.t + 1,
+                                      rng=rng, hist_s=new_hs, hist_y=new_hy), metrics
+            w_k, stats = jax.vmap(
+                partial(_client_svrg, problem, hp, use_aa, state.params, g_global)
+            )(C.x, C.y, C.mask, rngs)
+            new_params = _aggregate(weights, w_k, anchor=state.params)
+            metrics = common_metrics(state.params, g_global, stats)
+            return state._replace(params=new_params, t=state.t + 1, rng=rng), metrics
+
+        return round_fn
+
+    # ---------------- SCAFFOLD family ----------------
+    if algo in ("scaffold", "fedosaa_scaffold"):
+        use_aa = algo == "fedosaa_scaffold"
+
+        def round_fn(state: ServerState):
+            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
+            weights = _participation_weights(problem, hp, part_rng)
+            rngs = jax.random.split(cl_rng, C.num_clients)
+            w_k, new_c_k, stats = jax.vmap(
+                partial(_client_scaffold, problem, hp, use_aa, state.params, state.c)
+            )(C.x, C.y, C.mask, state.c_k, rngs)
+            new_params = _aggregate(weights, w_k, anchor=state.params)
+            new_c = _aggregate(C.weight, new_c_k)
+            metrics = common_metrics(state.params, new_c, stats)
+            return (
+                state._replace(params=new_params, c=new_c, c_k=new_c_k,
+                               t=state.t + 1, rng=rng),
+                metrics,
+            )
+
+        return round_fn
+
+    # ---------------- AVG family (incl. negative control) ----------------
+    if algo in ("fedavg", "fedosaa_avg"):
+        use_aa = algo == "fedosaa_avg"
+
+        def round_fn(state: ServerState):
+            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
+            weights = _participation_weights(problem, hp, part_rng)
+            rngs = jax.random.split(cl_rng, C.num_clients)
+            w_k, stats = jax.vmap(
+                partial(_client_avg, problem, hp, use_aa, state.params)
+            )(C.x, C.y, C.mask, rngs)
+            new_params = _aggregate(weights, w_k, anchor=state.params)
+            g = problem.global_grad(state.params)  # diagnostics only
+            metrics = common_metrics(state.params, g, stats)
+            return state._replace(params=new_params, t=state.t + 1, rng=rng), metrics
+
+        return round_fn
+
+    # ---------------- one-step L-BFGS ----------------
+    if algo == "lbfgs":
+
+        def round_fn(state: ServerState):
+            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
+            weights = _participation_weights(problem, hp, part_rng)
+            g_global = problem.global_grad(state.params)
+            rngs = jax.random.split(cl_rng, C.num_clients)
+            w_k, _ = jax.vmap(
+                partial(_client_lbfgs, problem, hp, state.params, g_global)
+            )(C.x, C.y, C.mask, rngs)
+            new_params = _aggregate(weights, w_k, anchor=state.params)
+            metrics = common_metrics(state.params, g_global, nan_stats)
+            return state._replace(params=new_params, t=state.t + 1, rng=rng), metrics
+
+        return round_fn
+
+    # ---------------- Newton-type ----------------
+    if algo in ("giant", "newton_gmres"):
+        client_fn = _client_giant if algo == "giant" else _client_newton_gmres
+
+        def round_fn(state: ServerState):
+            rng, part_rng = jax.random.split(state.rng)
+            weights = _participation_weights(problem, hp, part_rng)
+            g_global = problem.global_grad(state.params)
+            p_k = jax.vmap(
+                partial(client_fn, problem, hp, state.params, g_global)
+            )(C.x, C.y, C.mask)
+            p = _aggregate(weights, p_k)
+            extra = 0.0
+            if hp.line_search:
+                # GIANT line search: one extra communication of function values
+                steps = jnp.array([4.0, 2.0, 1.0, 0.5, 0.25, 0.125, 0.0625])
+                vals = jax.vmap(
+                    lambda a: problem.global_loss(tm.tree_axpy(-a, p, state.params))
+                )(steps)
+                a = steps[jnp.argmin(vals)]
+                extra = float(d)
+            else:
+                a = jnp.asarray(1.0)
+            new_params = tm.tree_axpy(-a, p, state.params)
+            metrics = common_metrics(state.params, g_global, nan_stats, extra)
+            return state._replace(params=new_params, t=state.t + 1, rng=rng), metrics
+
+        return round_fn
+
+    # ---------------- DANE ----------------
+    assert algo == "dane"
+
+    def round_fn(state: ServerState):
+        rng, part_rng = jax.random.split(state.rng)
+        weights = _participation_weights(problem, hp, part_rng)
+        g_global = problem.global_grad(state.params)
+        w_k = jax.vmap(
+            partial(_client_dane, problem, hp, state.params, g_global)
+        )(C.x, C.y, C.mask)
+        new_params = _aggregate(weights, w_k)
+        metrics = common_metrics(state.params, g_global, nan_stats)
+        return state._replace(params=new_params, t=state.t + 1, rng=rng), metrics
+
+    return round_fn

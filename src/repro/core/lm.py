@@ -1,0 +1,47 @@
+"""Bridge: federated optimization (core/algorithms) over LM models
+(models/decoder) — FedOSAA training of transformers/SSMs.
+
+Clients hold token corpora; the FLProblem's loss is the model's next-token
+cross entropy over the client's documents. Everything downstream (FedSVRG /
+FedOSAA rounds, AA step, server aggregation) is unchanged — the paper's
+algorithm is architecture-agnostic (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.problem import ClientBatch, FLProblem, StackedClients
+
+Pytree = Any
+
+
+def make_lm_clients(tokens: np.ndarray, num_clients: int,
+                    docs_per_client: int | None = None) -> StackedClients:
+    """tokens: [n_docs, S] int32. IID split into K clients."""
+    n_docs = tokens.shape[0]
+    per = docs_per_client or n_docs // num_clients
+    xs, ys = [], []
+    for k in range(num_clients):
+        chunk = tokens[k * per:(k + 1) * per]
+        xs.append(chunk)
+        ys.append(np.zeros((chunk.shape[0],), np.float32))   # labels unused
+    from repro.core.problem import stack_client_arrays
+    return stack_client_arrays(xs, ys)
+
+
+def make_lm_problem(model, clients: StackedClients) -> FLProblem:
+    def loss(params, batch: ClientBatch) -> jax.Array:
+        # batch.x: [n, S] tokens; batch.mask: [n] doc validity
+        lm_batch = {
+            "tokens": batch.x,
+            "loss_mask": jnp.broadcast_to(
+                batch.mask[:, None], batch.x.shape
+            ).astype(jnp.float32),
+        }
+        return model.loss(params, lm_batch)
+
+    return FLProblem(loss=loss, init=model.init, clients=clients)

@@ -1,0 +1,130 @@
+"""Federated problem abstraction.
+
+A federated problem = a differentiable loss + K clients' data. To make K=100
+clients cheap under jit we keep client datasets *stacked*: every array leaf
+has leading axis K (padded to the largest client, with a per-sample mask), so
+per-client gradients are one ``vmap`` instead of a python loop, and the same
+code path runs sharded over mesh axes ("pod","data") in the distributed
+runtime (core/sharded.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class ClientBatch(NamedTuple):
+    """One (possibly padded) batch of client data.
+
+    x: [n, ...] features; y: [n, ...] targets; mask: [n] 0/1 sample validity.
+    """
+
+    x: jax.Array
+    y: jax.Array
+    mask: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedClients:
+    """All K clients, padded & stacked on axis 0.
+
+    x: [K, n_max, ...], y: [K, n_max, ...], mask: [K, n_max],
+    weight: [K] = N_k / N  (aggregation weights, sums to 1).
+    """
+
+    x: jax.Array
+    y: jax.Array
+    mask: jax.Array
+    weight: jax.Array
+
+    @property
+    def num_clients(self) -> int:
+        return self.x.shape[0]
+
+    def client(self, k: int) -> ClientBatch:
+        return ClientBatch(self.x[k], self.y[k], self.mask[k])
+
+
+@dataclasses.dataclass(frozen=True)
+class FLProblem:
+    """loss(params, batch) must return the *mean* loss over valid samples of
+    the batch (mask-weighted), including any regularizer — i.e. it IS f_k when
+    evaluated on client k's full data.
+    """
+
+    loss: Callable[[Pytree, ClientBatch], jax.Array]
+    init: Callable[[jax.Array], Pytree]
+    clients: StackedClients
+
+    # ---- single-client oracles -------------------------------------------
+    def grad(self, params: Pytree, batch: ClientBatch) -> Pytree:
+        return jax.grad(self.loss)(params, batch)
+
+    def value_and_grad(self, params: Pytree, batch: ClientBatch):
+        return jax.value_and_grad(self.loss)(params, batch)
+
+    def hvp(self, params: Pytree, batch: ClientBatch, v: Pytree) -> Pytree:
+        """Hessian-vector product via forward-over-reverse — the only Hessian
+        access mode any algorithm in this repo uses (matches GIANT's model)."""
+        g = lambda p: jax.grad(self.loss)(p, batch)
+        return jax.jvp(g, (params,), (v,))[1]
+
+    # ---- all-clients (vmapped) oracles -----------------------------------
+    def client_grads(self, params: Pytree) -> Pytree:
+        """[K, ...] stacked full-batch gradients ∇f_k(params) for all k."""
+        return jax.vmap(lambda x, y, m: self.grad(params, ClientBatch(x, y, m)))(
+            self.clients.x, self.clients.y, self.clients.mask
+        )
+
+    def global_grad(self, params: Pytree) -> Pytree:
+        """∇f(params) = Σ_k (N_k/N) ∇f_k(params)."""
+        grads = self.client_grads(params)
+        w = self.clients.weight
+        return jax.tree.map(
+            lambda g: jnp.tensordot(w, g, axes=1), grads
+        )
+
+    def global_loss(self, params: Pytree) -> jax.Array:
+        losses = jax.vmap(
+            lambda x, y, m: self.loss(params, ClientBatch(x, y, m))
+        )(self.clients.x, self.clients.y, self.clients.mask)
+        return jnp.dot(self.clients.weight, losses)
+
+
+def sample_minibatch(
+    batch: ClientBatch, rng: jax.Array, batch_size: int
+) -> ClientBatch:
+    """Uniformly sample ``batch_size`` valid rows (with replacement — standard
+    for SVRG-style estimators and shape-static under jit)."""
+    n = batch.mask.shape[0]
+    p = batch.mask / jnp.maximum(jnp.sum(batch.mask), 1.0)
+    idx = jax.random.choice(rng, n, shape=(batch_size,), p=p)
+    return ClientBatch(batch.x[idx], batch.y[idx], jnp.ones(batch_size, batch.mask.dtype))
+
+
+def stack_client_arrays(
+    xs: list, ys: list
+) -> StackedClients:
+    """Pad a ragged python list of per-client (x, y) arrays into StackedClients."""
+    import numpy as np
+
+    K = len(xs)
+    n_max = max(x.shape[0] for x in xs)
+    total = sum(x.shape[0] for x in xs)
+    x0, y0 = np.asarray(xs[0]), np.asarray(ys[0])
+    X = np.zeros((K, n_max) + x0.shape[1:], dtype=x0.dtype)
+    Y = np.zeros((K, n_max) + y0.shape[1:], dtype=y0.dtype)
+    M = np.zeros((K, n_max), dtype=np.float32)
+    W = np.zeros((K,), dtype=np.float32)
+    for k, (x, y) in enumerate(zip(xs, ys)):
+        n = x.shape[0]
+        X[k, :n] = x
+        Y[k, :n] = y
+        M[k, :n] = 1.0
+        W[k] = n / total
+    return StackedClients(jnp.asarray(X), jnp.asarray(Y), jnp.asarray(M), jnp.asarray(W))

@@ -1,0 +1,7 @@
+from repro.data.partition import PARTITIONERS, heterogeneity_score, partition  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    DATASETS,
+    make_binary_classification,
+    make_lm_tokens,
+    make_mnist_like,
+)

@@ -1,0 +1,59 @@
+"""Jit'd public wrapper: one-shot flat-vector AA step via the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU they
+compile natively. The wrapper pads d up to the tile size and m up to the
+8-sublane granule, then strips the padding — padded Y columns are zero so
+they contribute nothing to the Gram matrix (gamma entries for them are zeroed
+after the solve).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.anderson.anderson import DEFAULT_TILE, gram_pallas, update_pallas
+from repro.kernels.anderson.ref import solve_gamma_ref
+
+_ON_CPU = None
+
+
+def _interpret_default() -> bool:
+    global _ON_CPU
+    if _ON_CPU is None:
+        _ON_CPU = jax.devices()[0].platform != "tpu"
+    return _ON_CPU
+
+
+def _pad_to(x, n, axis):
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("eta", "beta", "tikhonov", "tile", "interpret"))
+def aa_step_flat(w, g, s, y, *, eta: float, beta: float = 1.0,
+                 tikhonov: float = 1e-10, tile: int = DEFAULT_TILE,
+                 interpret: bool | None = None):
+    """One AA step on flat vectors. w,g: [d]; s,y: [m,d]. Returns w⁺ [d]."""
+    if interpret is None:
+        interpret = _interpret_default()
+    m, d = s.shape
+    t = min(tile, 256) if d < tile else tile
+    d_pad = ((d + t - 1) // t) * t
+    m_pad = ((m + 7) // 8) * 8
+    wp, gp = _pad_to(w, d_pad, 0), _pad_to(g, d_pad, 0)
+    sp = _pad_to(_pad_to(s, d_pad, 1), m_pad, 0)
+    yp = _pad_to(_pad_to(y, d_pad, 1), m_pad, 0)
+
+    gram, yg = gram_pallas(yp, gp, tile=t, interpret=interpret)
+    # solve only over the true m columns (padded rows/cols are zero)
+    gamma_true = solve_gamma_ref(gram[:m, :m], yg[:m], tikhonov)
+    gamma = jnp.zeros((m_pad,), jnp.float32).at[:m].set(gamma_true)
+    out = update_pallas(wp, gp, sp, yp, gamma, eta, beta, tile=t,
+                        interpret=interpret)
+    return out[:d]

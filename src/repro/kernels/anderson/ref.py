@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the Anderson kernels (the 3-pass naive version)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_ref(y: jax.Array, g: jax.Array):
+    """y: [m,d]; g: [d] -> (YᵀY [m,m], Yᵀg [m]) in f32."""
+    y32 = y.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    return y32 @ y32.T, y32 @ g32
+
+
+def update_ref(w, g, s, y, gamma, eta, beta):
+    """w⁺ = w − ηg − β(Sᵀγ − ηYᵀγ); inputs as in update_pallas."""
+    w32, g32 = w.astype(jnp.float32), g.astype(jnp.float32)
+    s32, y32 = s.astype(jnp.float32), y.astype(jnp.float32)
+    gm = gamma.astype(jnp.float32)
+    out = w32 - eta * g32 - beta * (gm @ s32 - eta * (gm @ y32))
+    return out.astype(w.dtype)
+
+
+def solve_gamma_ref(gram, yg, tikhonov: float = 1e-10):
+    m = gram.shape[0]
+    lam = tikhonov * jnp.trace(gram) / m
+    return jnp.linalg.solve(gram + lam * jnp.eye(m), yg)
+
+
+def aa_step_ref(w, g, s, y, eta, beta=1.0, tikhonov=1e-10):
+    """Full flat-vector AA step (Eq. 7), matching ops.aa_step_flat."""
+    gram, yg = gram_ref(y, g)
+    gamma = solve_gamma_ref(gram, yg, tikhonov)
+    return update_ref(w, g, s, y, gamma, eta, beta)

@@ -1,0 +1,63 @@
+"""Public wrapper: model-layout flash attention with GQA + padding handling.
+
+Takes [B, S, H, hd] tensors (the model's layout), maps GQA kv heads to q
+heads, pads S to the block granule (padded keys are masked out via the causal
+structure: pad queries produce garbage rows that are sliced away, pad keys
+sit at positions > every real query and are causally invisible).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import (
+    DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q, flash_attention_pallas,
+)
+
+_ON_CPU = None
+
+
+def _interpret_default() -> bool:
+    global _ON_CPU
+    if _ON_CPU is None:
+        _ON_CPU = jax.devices()[0].platform != "tpu"
+    return _ON_CPU
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool | None = None):
+    """q: [B, S, H, hd]; k, v: [B, S, KV, hd] with H % KV == 0 (GQA).
+    Returns [B, S, H, hd]."""
+    if interpret is None:
+        interpret = _interpret_default()
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    bq = min(block_q, max(8, S))
+    bk = min(block_k, max(8, S))
+    S_pad = ((S + max(bq, bk) - 1) // max(bq, bk)) * max(bq, bk)
+    if S_pad != S:
+        pad = ((0, 0), (0, S_pad - S), (0, 0), (0, 0))
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S_pad, hd)
+
+    out = flash_attention_pallas(
+        to_bh(q), to_bh(k), to_bh(v), causal=causal, window=window,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    out = out.reshape(B, H, S_pad, hd).transpose(0, 2, 1, 3)
+    return out[:, :S]

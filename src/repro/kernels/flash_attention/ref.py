@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for flash attention (materializes the full score matrix)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q,k,v: [BH, S, d]. Returns [BH, S, d]."""
+    S = q.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / (q.shape[-1] ** 0.5)
+    i = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = mask & (i[None, :] <= i[:, None])
+    if window > 0:
+        mask = mask & (i[None, :] > i[:, None] - window)
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

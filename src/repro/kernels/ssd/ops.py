@@ -1,0 +1,41 @@
+"""Public wrapper: adapts the Pallas SSD chunk kernel to the model's
+``ssd_fn`` interface (models/layers._ssd_chunked_scan)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.ssd import ssd_chunk_pallas
+
+_ON_CPU = None
+
+
+def _interpret_default() -> bool:
+    global _ON_CPU
+    if _ON_CPU is None:
+        _ON_CPU = jax.devices()[0].platform != "tpu"
+    return _ON_CPU
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(xc, dtc, dA_cumsum, Bc, Cc, interpret: bool | None = None):
+    """Model-layout entry point — drop-in ``ssd_fn`` for build_model.
+
+    xc: [B,nc,Q,nh,hd]; dtc/dA_cumsum: [B,nc,Q,nh]; Bc/Cc: [B,nc,Q,st].
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    B, nc, Q, nh, hd = xc.shape
+    st = Bc.shape[-1]
+    G = B * nc
+    x = xc.transpose(0, 1, 3, 2, 4).reshape(G, nh, Q, hd)
+    dt = dtc.transpose(0, 1, 3, 2).reshape(G, nh, Q)
+    da = dA_cumsum.transpose(0, 1, 3, 2).reshape(G, nh, Q)
+    Bg = Bc.reshape(G, Q, st)
+    Cg = Cc.reshape(G, Q, st)
+    y, state = ssd_chunk_pallas(x, dt, da, Bg, Cg, interpret=interpret)
+    y_diag = y.reshape(B, nc, nh, Q, hd).transpose(0, 1, 3, 2, 4)
+    chunk_state = state.reshape(B, nc, nh, hd, st)
+    return y_diag, chunk_state

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel (mirrors the default branch
+of models/layers._ssd_chunked_scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(xc, dtc, dA_cumsum, Bc, Cc):
+    """xc: [B,nc,Q,nh,hd]; dtc/dA_cumsum: [B,nc,Q,nh]; Bc/Cc: [B,nc,Q,st].
+    Returns (y_diag [B,nc,Q,nh,hd], chunk_state [B,nc,nh,hd,st])."""
+    Q = xc.shape[2]
+    seg = dA_cumsum[:, :, :, None, :] - dA_cumsum[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(causal, seg, -1e30))
+    cb = jnp.einsum("bcqs,bcks->bcqk", Cc, Bc)
+    att = cb[..., None] * decay
+    xdt = xc * dtc[..., None]
+    y_diag = jnp.einsum("bcqkh,bckhd->bcqhd", att, xdt)
+    decay_last = jnp.exp(dA_cumsum[:, :, -1:, :] - dA_cumsum)
+    chunk_state = jnp.einsum("bcqs,bcqh,bcqhd->bchds", Bc, dtc * decay_last, xc)
+    return y_diag, chunk_state

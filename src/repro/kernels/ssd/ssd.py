@@ -1,0 +1,100 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk compute.
+
+The SSD chunked algorithm (arXiv:2405.21060 §6) splits the recurrence into an
+intra-chunk quadratic part (this kernel) and an inter-chunk associative scan
+(stays in jnp — it is O(S/Q) tiny). The quadratic part is the FLOPs hot spot:
+per (batch, chunk, head) it builds the [Q, Q] decay-masked attention-like
+matrix and two small matmuls.
+
+Grid: (B·nc, nh) — one (chunk, head) tile per step. VMEM at Q=256, hd=64,
+st=128: decay+cb [Q,Q] f32 ≈ 0.5 MB, well within budget; all matmul operands
+are 128-lane aligned for the MXU when Q and st are multiples of 128 (the
+model's chunk=256, st∈{64,128} satisfy this; ops.py pads st=64 to 128 lanes
+implicitly via the layout).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, y_ref, st_ref, *,
+                      q_len: int):
+    """Blocks (leading grid dims dropped):
+    x_ref:  [Q, hd]   inputs for this (chunk, head)
+    dt_ref: [Q, 1]    softplus'd dt
+    da_ref: [Q, 1]    within-chunk cumsum of dt·A  (negative, decreasing)
+    b_ref:  [Q, st]   B_t  (shared across heads; duplicated per grid step)
+    c_ref:  [Q, st]   C_t
+    y_ref:  [Q, hd]   intra-chunk output
+    st_ref: [hd, st]  chunk final state contribution
+    """
+    x = x_ref[0, 0].astype(jnp.float32)      # [Q, hd]
+    dt = dt_ref[0, 0].astype(jnp.float32)     # [Q, 1]
+    da = da_ref[0, 0].astype(jnp.float32)     # [Q, 1]
+    B = b_ref[0].astype(jnp.float32)          # [Q, st]
+    C = c_ref[0].astype(jnp.float32)
+
+    # decay L[i,j] = exp(da_i − da_j) for i ≥ j; mask BEFORE exp (grad safety)
+    seg = da - da.reshape(1, q_len)                         # [Q, Q]
+    causal = (
+        jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 1)
+    )
+    decay = jnp.exp(jnp.where(causal, seg, NEG_INF))
+
+    cb = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                       # [Q, Q]
+    att = cb * decay
+    xdt = x * dt                                            # [Q, hd]
+    y_ref[0, 0] = jax.lax.dot_general(
+        att, xdt, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(y_ref.dtype)
+
+    # chunk state: Σ_j exp(da_last − da_j) · dt_j · B_j ⊗ x_j  -> [hd, st]
+    decay_last = jnp.exp(da[q_len - 1:q_len, :] - da.reshape(1, q_len))  # [1, Q]
+    w = (dt.reshape(1, q_len) * decay_last)                 # [1, Q]
+    xw = x * w.reshape(q_len, 1)                            # [Q, hd]
+    st_ref[0, 0] = jax.lax.dot_general(
+        xw, B, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(st_ref.dtype)
+
+
+def ssd_chunk_pallas(x, dt, da_cumsum, B, C, interpret: bool = False):
+    """x: [G, nh, Q, hd]; dt/da_cumsum: [G, nh, Q]; B, C: [G, Q, st]
+    (G = batch·n_chunks). Returns (y [G, nh, Q, hd], state [G, nh, hd, st])."""
+    G, nh, Q, hd = x.shape
+    st = B.shape[-1]
+    kernel = functools.partial(_ssd_chunk_kernel, q_len=Q)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(G, nh),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, hd), lambda g, h: (g, h, 0, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda g, h: (g, h, 0, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda g, h: (g, h, 0, 0)),
+            pl.BlockSpec((1, Q, st), lambda g, h: (g, 0, 0)),
+            pl.BlockSpec((1, Q, st), lambda g, h: (g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, hd), lambda g, h: (g, h, 0, 0)),
+            pl.BlockSpec((1, 1, hd, st), lambda g, h: (g, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, nh, Q, hd), jnp.float32),
+            jax.ShapeDtypeStruct((G, nh, hd, st), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        x,
+        dt[..., None],
+        da_cumsum[..., None],
+        B, C,
+    )
+    return y, state

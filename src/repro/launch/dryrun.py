@@ -1,0 +1,253 @@
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture × input shape) step on the production
+meshes — 16×16 single-pod and 2×16×16 multi-pod — with ShapeDtypeStruct
+inputs (no allocation), and records memory/cost/collective statistics for the
+roofline analysis (deliverable g).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all              # 40 pairs, single-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod  # 40 pairs, 512 chips
+"""
+# The VERY FIRST lines, before ANY other import: jax locks the device count
+# at first init, and the dry-run needs 512 placeholder host devices.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_arch, get_shape       # noqa: E402
+from repro.launch.mesh import make_production_mesh                        # noqa: E402
+from repro.launch.specs_io import (                                        # noqa: E402
+    batch_specs_for, cache_len_for, caches_shape, effective_cfg, params_shape,
+)
+from repro.launch.steps import (                                           # noqa: E402
+    make_aa_step, make_prefill_step, make_serve_step, make_train_step,
+)
+from repro.models.decoder import build_model                               # noqa: E402
+from repro.sharding.specs import (                                         # noqa: E402
+    batch_axis, cache_specs, make_plan, param_specs,
+)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]))\S*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the partitioned HLO.
+    (Result bytes ≈ bytes on the wire for AG/AR; a consistent, documented
+    convention — see benchmarks/roofline.py.)"""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_txt, op = m.group(1), m.group(2)
+        out[op] = out.get(op, 0) + _shape_bytes(shape_txt)
+        out[op + "_count"] = out.get(op + "_count", 0) + 1
+    return out
+
+
+def _named(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
+               include_aa: bool = True, extra_tag: str = "",
+               plan_overrides=None) -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = get_shape(shape_name)
+    cfg0 = effective_cfg(get_arch(arch), shape)
+    plan = make_plan(cfg0, mesh, multi_pod=multi_pod)
+    if plan_overrides:
+        plan = plan_overrides(plan)
+    cfg = plan.cfg
+    sh = plan.sharder()
+    # PerfH3 iter 1 (REFUTED): disabling remat for small models makes HBM
+    # traffic 2.7x WORSE (109.6 -> 298.6 GB on smollm/train_4k) — without
+    # remat the quadratic attention scores are saved for backward. Remat
+    # stays on for every train shape.
+    model = build_model(cfg, sh, remat=(shape.kind == "train"))
+
+    p_shape = params_shape(model)
+    p_specs = param_specs(p_shape, plan)
+    p_shard = _named(p_specs, mesh)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "regime": plan.regime,
+        "attn_variant": "sliding_window" if cfg.sliding_window else
+                        ("none" if not cfg.num_heads else "full_causal"),
+        "batch_axis": str(batch_axis(plan, shape.global_batch)),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+
+    if shape.kind == "train":
+        step = make_train_step(model)
+        batch_sds = batch_specs_for(cfg, shape)["batch"]
+        ba = batch_axis(plan, shape.global_batch)
+        b_shard = jax.tree.map(
+            lambda s: NamedSharding(mesh, P(ba, *([None] * (len(s.shape) - 1)))),
+            batch_sds,
+        )
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, b_shard, p_shard),
+            out_shardings=(p_shard, p_shard, None),
+            donate_argnums=(0,),
+        )
+        lowered = jitted.lower(p_shape, batch_sds, p_shape)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(model, cache_len=cache_len_for(cfg, shape))
+        io = batch_specs_for(cfg, shape)
+        ba = batch_axis(plan, shape.global_batch)
+        tok_shard = NamedSharding(mesh, P(ba, None))
+        args = [p_shape, io["tokens"]]
+        shards = [p_shard, tok_shard]
+        if "embeds" in io:
+            args.append(io["embeds"])
+            shards.append(NamedSharding(mesh, P(ba, None, None)))
+        jitted = jax.jit(step, in_shardings=tuple(shards))
+        lowered = jitted.lower(*args)
+    else:  # decode
+        step = make_serve_step(model)
+        C = cache_len_for(cfg, shape)
+        c_shape = caches_shape(model, shape.global_batch, C)
+        c_specs = cache_specs(c_shape, plan, shape.global_batch)
+        c_shard = _named(c_specs, mesh)
+        io = batch_specs_for(cfg, shape)
+        ba = batch_axis(plan, shape.global_batch)
+        tok_shard = NamedSharding(mesh, P(ba, None))
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, c_shard, tok_shard, tok_shard),
+            out_shardings=(None, c_shard),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(p_shape, c_shape, io["tokens"], io["pos"])
+        result["cache_len"] = C
+
+    compiled = lowered.compile()
+    result["compile_s"] = round(time.time() - t0, 1)
+
+    cost = compiled.cost_analysis() or {}
+    result["flops"] = float(cost.get("flops", 0.0))
+    result["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        result["memory"] = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", 0) or 0),
+        }
+    except Exception:
+        result["memory"] = None
+    result["collectives"] = collective_bytes(compiled.as_text())
+
+    # AA step (the paper's contribution) lowered per train pair
+    if shape.kind == "train" and include_aa:
+        hist = 3
+        s_shape = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((hist,) + x.shape, x.dtype), p_shape
+        )
+        s_specs = jax.tree.map(
+            lambda sp: P(None, *sp), p_specs, is_leaf=lambda x: isinstance(x, P)
+        )
+        s_shard = _named(s_specs, mesh)
+        aa = jax.jit(
+            make_aa_step(history=hist),
+            in_shardings=(p_shard, p_shard, s_shard, s_shard),
+            out_shardings=(p_shard, None),
+        )
+        aa_lowered = aa.lower(p_shape, p_shape, s_shape, s_shape)
+        aa_compiled = aa_lowered.compile()
+        aa_cost = aa_compiled.cost_analysis() or {}
+        result["aa_step"] = {
+            "flops": float(aa_cost.get("flops", 0.0)),
+            "bytes_accessed": float(aa_cost.get("bytes accessed", 0.0)),
+            "collectives": collective_bytes(aa_compiled.as_text()),
+        }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default="")
+    ap.add_argument("--shape", type=str, default="")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-aa", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    combos = []
+    if args.all:
+        combos = [(a, s) for a in ARCHS for s in INPUT_SHAPES]
+    else:
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in combos:
+        tag = f"{arch}__{shape}__{'2x16x16' if args.multi_pod else '16x16'}"
+        out_path = os.path.join(RESULTS_DIR, tag + ".json")
+        try:
+            res = dryrun_one(arch, shape, args.multi_pod, include_aa=not args.no_aa)
+            with open(out_path, "w") as f:
+                json.dump(res, f, indent=1)
+            mem = (res.get("memory") or {}).get("peak_bytes", 0)
+            print(f"OK   {tag}: compile={res['compile_s']}s "
+                  f"flops={res['flops']:.3e} peak={mem/2**30:.2f}GiB "
+                  f"coll={sum(v for k, v in res['collectives'].items() if not k.endswith('_count'))/2**30:.3f}GiB")
+        except Exception as e:
+            failures.append(tag)
+            print(f"FAIL {tag}: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"FAILURES ({len(failures)}): {failures}")
+        raise SystemExit(1)
+    print("all dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh construction (deliverable e).
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (smoke tests must see 1 CPU device; only dryrun.py sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod meshes: 16×16 = 256 chips single-pod; 2×16×16 = 512 two-pod.
+
+    FL mapping: clients live on ("pod","data"); tensor parallelism on
+    "model". The pod axis is the slowest (DCI links between pods).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke paths that still exercise pjit."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,80 @@
+"""ShapeDtypeStruct stand-ins for every dry-run input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the kwargs of the step function that the
+dry-run lowers for that (arch × input-shape) pair:
+
+  train_4k    -> train_step(params, batch{tokens[,embeds]}, correction)
+  prefill_32k -> prefill_step(params, tokens[, embeds])
+  decode_*    -> serve_step(params, caches, tokens[B,1], pos[B,1])
+
+Decode caches: full-attention archs get a KV cache of seq_len; for
+``long_500k`` the sliding-window variant is auto-enabled for attention archs
+(window 8192 ring buffer) — SSM/hybrid archs are O(1)-state natively.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.registry import InputShape
+
+Pytree = Any
+
+LONG_CONTEXT_WINDOW = 8192
+
+
+def effective_cfg(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """Arch variant actually lowered for this input shape: attention archs
+    switch to the sliding-window variant for long_500k (sub-quadratic
+    requirement); everything else is unchanged."""
+    if shape.name == "long_500k" and cfg.num_heads and not cfg.sliding_window:
+        return dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def cache_len_for(cfg: ArchConfig, shape: InputShape) -> int:
+    if cfg.sliding_window:
+        return cfg.sliding_window
+    return shape.seq_len
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def params_shape(model) -> Pytree:
+    """Shape-only init via eval_shape (no allocation)."""
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def batch_specs_for(cfg: ArchConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.frontend_tokens:
+            batch["embeds"] = _sds((B, cfg.frontend_tokens, cfg.d_model), dt)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.frontend_tokens:
+            out["embeds"] = _sds((B, cfg.frontend_tokens, cfg.d_model), dt)
+        return out
+    # decode
+    return {
+        "tokens": _sds((B, 1), jnp.int32),
+        "pos": _sds((B, 1), jnp.int32),
+    }
+
+
+def caches_shape(model, batch: int, cache_len: int) -> Pytree:
+    return jax.eval_shape(lambda: model.init_caches(batch, cache_len))
+
+
+def correction_shape(params: Pytree) -> Pytree:
+    """FL gradient-correction term: same structure as params (SVRG term)."""
+    return params

@@ -1,0 +1,64 @@
+"""Step functions lowered by the dry-run and used by the real drivers.
+
+``train_step`` is the FedOSAA *local* step: SVRG-corrected gradient descent
+(the workhorse of Algorithm 1 lines 10–14) — forward, backward, correction
+add, SGD update. The Anderson step operates on the parameter pytree once per
+L local steps and is lowered separately (``aa_step``) so its sharding and
+collective footprint are visible in their own right.
+
+``serve_step`` / ``prefill_step`` are the inference paths for the decode /
+prefill input shapes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.anderson import AAConfig, multisecant_update
+
+Pytree = Any
+
+
+def make_train_step(model, eta: float = 1e-2):
+    def train_step(params, batch, correction):
+        """One SVRG-corrected local GD step (Alg. 1 line 12–13).
+
+        correction = ∇f(w^t) − ∇f_k(w^t) (precomputed pytree); the residual
+        r = ∇f_k(w;ζ) + correction is also returned for the AA history.
+        """
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        r = jax.tree.map(lambda g, c: g + c.astype(g.dtype), grads, correction)
+        new_params = jax.tree.map(
+            lambda w, ri: (w - eta * ri.astype(w.dtype)).astype(w.dtype), params, r
+        )
+        return new_params, r, loss
+
+    return train_step
+
+
+def make_aa_step(eta: float = 1e-2, history: int = 3):
+    cfg = AAConfig(tikhonov=1e-8, damping=1.0)
+
+    def aa_step(w, g, s_stack, y_stack):
+        """One Anderson step over the full parameter pytree (Alg. 1 15–18)."""
+        new_w, stats = multisecant_update(w, g, s_stack, y_stack, eta, cfg)
+        return new_w, stats.theta
+
+    return aa_step
+
+
+def make_prefill_step(model, cache_len: int):
+    def prefill_step(params, tokens, embeds=None):
+        return model.prefill(params, tokens, embeds, cache_len=cache_len)
+
+    return prefill_step
+
+
+def make_serve_step(model):
+    def serve_step(params, caches, tokens, pos):
+        logits, new_caches = model.decode_step(params, caches, tokens, pos)
+        return logits, new_caches
+
+    return serve_step

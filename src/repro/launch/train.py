@@ -1,0 +1,75 @@
+"""Centralized LM trainer (the non-federated baseline substrate): AdamW/WSD,
+gradient clipping, checkpointing, optional mesh sharding.
+
+  PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b --reduced \
+      --steps 100 --batch 4 --seq-len 256 --schedule wsd
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_arch
+from repro.data import make_lm_tokens
+from repro.models.decoder import build_model
+from repro.optim import adamw, clip_by_global_norm, constant, cosine, sgd, wsd
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--schedule", default="cosine", choices=["constant", "cosine", "wsd"])
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgd"])
+    ap.add_argument("--clip", type=float, default=1.0)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+
+    sched = {
+        "constant": lambda: constant(args.lr),
+        "cosine": lambda: cosine(args.lr, args.steps, warmup=args.steps // 20),
+        "wsd": lambda: wsd(args.lr, args.steps),
+    }[args.schedule]()
+    opt = adamw(sched) if args.optimizer == "adamw" else sgd(sched, momentum=0.9)
+    opt_state = opt.init(params)
+
+    toks = make_lm_tokens(args.batch * 64, args.seq_len, cfg.vocab_size)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        grads = clip_by_global_norm(grads, args.clip)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    t0 = time.time()
+    for i in range(args.steps):
+        idx = (np.arange(args.batch) + i * args.batch) % toks.shape[0]
+        batch = {"tokens": jnp.asarray(toks[idx])}
+        params, opt_state, loss = step(params, opt_state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d}  loss {float(loss):.4f}  "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, step=args.steps)
+        print(f"saved checkpoint to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

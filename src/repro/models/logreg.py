@@ -1,0 +1,52 @@
+"""ℓ2-regularized logistic regression (paper Eq. 11)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import ClientBatch, FLProblem, StackedClients
+
+
+def make_logreg_problem(
+    clients: StackedClients, gamma: float = 1e-3, init_scale: float = 0.0
+) -> FLProblem:
+    """f_k(w) = mean_j log(1+exp(−y_j wᵀx_j)) + γ/2 ‖w‖²  over client k's data.
+
+    y ∈ {−1, +1}. Initial point w⁰ = 0 (paper §4) unless init_scale > 0.
+    """
+    d = clients.x.shape[-1]
+
+    def loss(w: jax.Array, batch: ClientBatch) -> jax.Array:
+        logits = batch.x @ w * batch.y
+        # log(1+exp(−z)) = softplus(−z), numerically stable
+        per = jax.nn.softplus(-logits)
+        n = jnp.maximum(jnp.sum(batch.mask), 1.0)
+        return jnp.sum(per * batch.mask) / n + 0.5 * gamma * jnp.dot(w, w)
+
+    def init(rng: jax.Array) -> jax.Array:
+        if init_scale == 0.0:
+            return jnp.zeros((d,), jnp.float32)
+        return init_scale * jax.random.normal(rng, (d,), jnp.float32)
+
+    return FLProblem(loss=loss, init=init, clients=clients)
+
+
+def logreg_accuracy(w: jax.Array, x: jax.Array, y: jax.Array) -> float:
+    pred = jnp.sign(x @ w)
+    return float(jnp.mean(pred == y))
+
+
+def logreg_condition_number(
+    clients: StackedClients, w: jax.Array, gamma: float
+) -> float:
+    """Condition number of the global Hessian at w (for §3.2 κ discussion).
+    Only viable for small d (dense Hessian)."""
+    X = clients.x.reshape(-1, clients.x.shape[-1])
+    Y = clients.y.reshape(-1)
+    M = clients.mask.reshape(-1)
+    z = X @ w * Y
+    s = jax.nn.sigmoid(-z)
+    weights = s * (1 - s) * M
+    H = (X.T * weights) @ X / jnp.maximum(jnp.sum(M), 1.0) + gamma * jnp.eye(X.shape[1])
+    evals = jnp.linalg.eigvalsh(H)
+    return float(evals[-1] / evals[0])

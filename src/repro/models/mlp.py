@@ -1,0 +1,61 @@
+"""Fully-connected ReLU MLP for the paper's NN experiments (Appendix D.5).
+
+MLP1 = one hidden layer of 256; MLP3 = three hidden layers of 256 — exactly
+the paper's configurations, with softmax cross-entropy loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import ClientBatch, FLProblem, StackedClients
+
+
+def make_mlp_problem(
+    clients: StackedClients,
+    hidden_layers: int = 1,
+    hidden_dim: int = 256,
+    num_classes: int = 10,
+    weight_decay: float = 0.0,
+) -> FLProblem:
+    in_dim = clients.x.shape[-1]
+    dims = [in_dim] + [hidden_dim] * hidden_layers + [num_classes]
+
+    def init(rng: jax.Array):
+        params = {}
+        keys = jax.random.split(rng, len(dims) - 1)
+        for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+            # He init for ReLU nets
+            params[f"w{i}"] = jax.random.normal(keys[i], (din, dout), jnp.float32) * jnp.sqrt(2.0 / din)
+            params[f"b{i}"] = jnp.zeros((dout,), jnp.float32)
+        return params
+
+    n_layers = len(dims) - 1
+
+    def forward(params, x):
+        h = x
+        for i in range(n_layers - 1):
+            h = jax.nn.relu(h @ params[f"w{i}"] + params[f"b{i}"])
+        return h @ params[f"w{n_layers-1}"] + params[f"b{n_layers-1}"]
+
+    def loss(params, batch: ClientBatch) -> jax.Array:
+        logits = forward(params, batch.x)
+        labels = batch.y.astype(jnp.int32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        n = jnp.maximum(jnp.sum(batch.mask), 1.0)
+        l = jnp.sum(nll * batch.mask) / n
+        if weight_decay:
+            l = l + 0.5 * weight_decay * sum(
+                jnp.sum(p * p) for p in jax.tree.leaves(params)
+            )
+        return l
+
+    problem = FLProblem(loss=loss, init=init, clients=clients)
+    problem.__dict__["forward"] = forward   # expose for accuracy eval
+    return problem
+
+
+def mlp_accuracy(problem: FLProblem, params, x, y) -> float:
+    logits = problem.__dict__["forward"](params, x)
+    return float(jnp.mean(jnp.argmax(logits, -1) == y.astype(jnp.int32)))

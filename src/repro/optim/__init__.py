@@ -1,0 +1,2 @@
+from repro.optim.optimizers import Optimizer, OptState, adamw, clip_by_global_norm, sgd  # noqa: F401
+from repro.optim.schedules import constant, cosine, wsd  # noqa: F401

@@ -1,0 +1,89 @@
+"""Optimizers (no optax in this container — built from scratch, pytree-native).
+
+The FL local update in the paper is plain (corrected) GD; AdamW + schedules
+are provided for the centralized LM baselines and the MiniCPM (WSD) config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Pytree          # first moment (zeros for sgd)
+    nu: Pytree          # second moment (zeros unless adam)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Pytree], OptState]
+    update: Callable[[Pytree, OptState, Pytree], tuple[Pytree, OptState]]
+    # update(grads, state, params) -> (new_params, new_state)
+
+
+def sgd(lr: float | Callable[[jax.Array], jax.Array],
+        momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        zeros = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return OptState(jnp.zeros((), jnp.int32), zeros, None)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state.mu, grads)
+            d = (jax.tree.map(lambda m, g: momentum * m + g, mu, grads)
+                 if nesterov else mu)
+        else:
+            mu, d = None, grads
+        new_params = jax.tree.map(
+            lambda w, gi: (w - lr_t * gi.astype(jnp.float32)).astype(w.dtype),
+            params, d,
+        )
+        return new_params, OptState(step, mu, None)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float | Callable, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32),
+                        z, jax.tree.map(jnp.zeros_like, z))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, g32)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(w, m, v):
+            d = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                d = d + weight_decay * w.astype(jnp.float32)
+            return (w.astype(jnp.float32) - lr_t * d).astype(w.dtype)
+
+        return jax.tree.map(upd, params, mu, nu), OptState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Pytree:
+    from repro.utils import tree_math as tm
+    norm = tm.tree_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)

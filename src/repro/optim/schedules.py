@@ -1,0 +1,37 @@
+"""LR schedules, including WSD (Warmup-Stable-Decay) from MiniCPM
+[arXiv:2404.06395] — the schedule the minicpm-2b assigned arch trains with."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 0, min_ratio: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * warm * cos
+    return fn
+
+
+def wsd(lr: float, total_steps: int, warmup_frac: float = 0.01,
+        decay_frac: float = 0.1, min_ratio: float = 0.01):
+    """Warmup-Stable-Decay: linear warmup, long flat plateau, sharp
+    exponential-style decay over the final ``decay_frac`` of training."""
+    warmup = max(int(total_steps * warmup_frac), 1)
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / warmup, 1.0)
+        decay_prog = jnp.clip(
+            (s - decay_start) / jnp.maximum(total_steps - decay_start, 1), 0, 1
+        )
+        decay = jnp.power(jnp.asarray(min_ratio, jnp.float32), decay_prog)
+        return lr * warm * decay
+    return fn

@@ -1,0 +1,170 @@
+"""Integration tests: every FL algorithm on a small logistic regression,
+asserting the paper's qualitative convergence ordering."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import AlgoHParams, init_state, make_round_fn, run_federated, solve_reference
+from repro.core.algorithms import ALGORITHMS, COMM_TABLE
+from repro.data import make_binary_classification, partition
+from repro.models.logreg import make_logreg_problem
+from repro.utils import tree_math as tm
+
+
+@pytest.fixture(scope="module")
+def logreg():
+    X, y = make_binary_classification("synthetic_small", n=2000, seed=0)
+    clients = partition(X, y, num_clients=8, scheme="iid")
+    prob = make_logreg_problem(clients, gamma=1e-3)
+    wstar = solve_reference(prob, iters=50)
+    return prob, wstar
+
+
+def rel_err(history, wstar):
+    return history.rel_error[-1]
+
+
+class TestConvergenceOrdering:
+    """The paper's Figure 1/2 claims as assertions."""
+
+    def test_fedosaa_beats_fedsvrg(self, logreg):
+        prob, wstar = logreg
+        hp = AlgoHParams(eta=1.0, local_epochs=10)
+        h_osaa = run_federated(prob, "fedosaa_svrg", hp, 10, w_star=wstar)
+        h_svrg = run_federated(prob, "fedsvrg", hp, 10, w_star=wstar)
+        assert rel_err(h_osaa, wstar) < 0.01 * rel_err(h_svrg, wstar)
+
+    def test_fedosaa_tracks_newton_gmres(self, logreg):
+        """FedOSAA ≈ Newton-GMRES (the paper's central approximation claim):
+        same order of magnitude of error after the same rounds."""
+        prob, wstar = logreg
+        hp = AlgoHParams(eta=1.0, local_epochs=10)
+        h_osaa = run_federated(prob, "fedosaa_svrg", hp, 8, w_star=wstar)
+        h_ng = run_federated(prob, "newton_gmres", hp, 8, w_star=wstar)
+        # both deep into linear convergence on an ill-conditioned synthetic
+        assert rel_err(h_osaa, wstar) < 1e-2
+        assert rel_err(h_ng, wstar) < 1e-3
+
+    def test_fedosaa_scaffold_beats_scaffold(self, logreg):
+        prob, wstar = logreg
+        hp = AlgoHParams(eta=1.0, local_epochs=10)
+        h_a = run_federated(prob, "fedosaa_scaffold", hp, 12, w_star=wstar)
+        h_b = run_federated(prob, "scaffold", hp, 12, w_star=wstar)
+        assert rel_err(h_a, wstar) < 0.5 * rel_err(h_b, wstar)
+
+    def test_fedosaa_beats_lbfgs(self, logreg):
+        """Paper: 'constantly better than the one-step L-BFGS method'."""
+        prob, wstar = logreg
+        hp = AlgoHParams(eta=1.0, local_epochs=10)
+        h_a = run_federated(prob, "fedosaa_svrg", hp, 10, w_star=wstar)
+        h_l = run_federated(prob, "lbfgs", hp, 10, w_star=wstar)
+        assert rel_err(h_a, wstar) < rel_err(h_l, wstar)
+
+    def test_fedosaa_avg_fails(self, logreg):
+        """Appendix D.4: AA cannot rescue FedAvg — no gradient correction
+        means convergence to the wrong point."""
+        prob, wstar = logreg
+        hp = AlgoHParams(eta=1.0, local_epochs=10)
+        h = run_federated(prob, "fedosaa_avg", hp, 15, w_star=wstar)
+        assert rel_err(h, wstar) > 1e-3   # stuck away from w*
+
+    def test_giant_converges(self, logreg):
+        prob, wstar = logreg
+        hp = AlgoHParams(local_epochs=10)
+        h = run_federated(prob, "giant", hp, 8, w_star=wstar)
+        assert rel_err(h, wstar) < 1e-4
+
+    def test_dane_converges_fast(self, logreg):
+        prob, wstar = logreg
+        hp = AlgoHParams(dane_newton_iters=8, dane_cg_iters=40)
+        h = run_federated(prob, "dane", hp, 5, w_star=wstar)
+        assert rel_err(h, wstar) < 1e-3
+
+    def test_small_lr_still_accelerates(self, logreg):
+        """Figure 1(a): FedOSAA improves across a wide η range, even η=0.01×
+        optimal — because it approximates Newton-GMRES regardless of η."""
+        prob, wstar = logreg
+        hp = AlgoHParams(eta=0.05, local_epochs=10)
+        h_osaa = run_federated(prob, "fedosaa_svrg", hp, 10, w_star=wstar)
+        h_svrg = run_federated(prob, "fedsvrg", hp, 10, w_star=wstar)
+        assert rel_err(h_osaa, wstar) < 0.1 * rel_err(h_svrg, wstar)
+
+    def test_l3_matches_svrg_l30(self, logreg):
+        """Figure 1(b): FedOSAA with L=3 ≈ FedSVRG with L=30."""
+        prob, wstar = logreg
+        h3 = run_federated(prob, "fedosaa_svrg", AlgoHParams(eta=1.0, local_epochs=3), 12, w_star=wstar)
+        h30 = run_federated(prob, "fedsvrg", AlgoHParams(eta=1.0, local_epochs=30), 12, w_star=wstar)
+        assert rel_err(h3, wstar) < 3 * rel_err(h30, wstar)
+
+
+class TestMechanics:
+    def test_all_algorithms_run_one_round(self, logreg):
+        prob, _ = logreg
+        hp = AlgoHParams(eta=0.5, local_epochs=3, dane_newton_iters=2, dane_cg_iters=5)
+        for algo in ALGORITHMS:
+            state = init_state(prob, jax.random.PRNGKey(0))
+            fn = jax.jit(make_round_fn(algo, prob, hp))
+            state2, m = fn(state)
+            assert np.isfinite(float(m.loss)), algo
+            assert int(state2.t) == 1, algo
+
+    def test_minibatch_svrg_runs_and_converges(self, logreg):
+        prob, wstar = logreg
+        hp = AlgoHParams(eta=0.5, local_epochs=5, batch_size=32)
+        h = run_federated(prob, "fedosaa_svrg", hp, 12, w_star=wstar)
+        # stochastic AA stagnates at the noise floor, but must beat init (=1.0)
+        assert rel_err(h, wstar) < 0.5
+
+    def test_carry_history_improves_convergence(self, logreg):
+        """Beyond-paper (App. A option 1): carrying secant pairs across
+        rounds enriches the Krylov space at zero gradient cost."""
+        prob, wstar = logreg
+        h_plain = run_federated(prob, "fedosaa_svrg",
+                                AlgoHParams(eta=1.0, local_epochs=5), 10, w_star=wstar)
+        h_carry = run_federated(prob, "fedosaa_svrg",
+                                AlgoHParams(eta=1.0, local_epochs=5, carry_history=5),
+                                10, w_star=wstar)
+        assert rel_err(h_carry, wstar) < rel_err(h_plain, wstar)
+
+    def test_partial_participation(self, logreg):
+        prob, wstar = logreg
+        hp = AlgoHParams(eta=1.0, local_epochs=5, participation=0.5)
+        h = run_federated(prob, "fedosaa_svrg", hp, 15, w_star=wstar)
+        assert rel_err(h, wstar) < 0.5
+
+    def test_comm_accounting_matches_table1(self, logreg):
+        prob, _ = logreg
+        d = 40
+        hp = AlgoHParams(eta=1.0, local_epochs=2, dane_newton_iters=1, dane_cg_iters=3)
+        for algo in ALGORITHMS:
+            state = init_state(prob, jax.random.PRNGKey(0))
+            fn = jax.jit(make_round_fn(algo, prob, hp))
+            _, m = fn(state)
+            _, units = COMM_TABLE[algo]
+            assert float(m.comm_floats) == pytest.approx(units * d), algo
+
+    def test_line_search_giant(self, logreg):
+        prob, wstar = logreg
+        hp = AlgoHParams(local_epochs=10, line_search=True)
+        h = run_federated(prob, "giant", hp, 6, w_star=wstar)
+        assert rel_err(h, wstar) < 1e-3
+
+    def test_imbalance_weights_sum_to_one(self, logreg):
+        X, y = make_binary_classification("synthetic_small", n=2000, seed=1)
+        for scheme in ("iid", "imbalance", "label_skew"):
+            clients = partition(X, y, num_clients=10, scheme=scheme)
+            np.testing.assert_allclose(float(clients.weight.sum()), 1.0, rtol=1e-5)
+
+
+class TestHeterogeneousDistributions:
+    """Figure 2: FedOSAA keeps working under imbalance and label skew."""
+
+    @pytest.mark.parametrize("scheme", ["imbalance", "label_skew"])
+    def test_fedosaa_converges_under_heterogeneity(self, scheme):
+        X, y = make_binary_classification("synthetic_small", n=2000, seed=0)
+        clients = partition(X, y, num_clients=10, scheme=scheme)
+        prob = make_logreg_problem(clients, gamma=1e-3)
+        wstar = solve_reference(prob, iters=50)
+        eta = 1.0 if scheme == "imbalance" else 0.5   # paper: smaller η for skew
+        h = run_federated(prob, "fedosaa_svrg", AlgoHParams(eta=eta, local_epochs=10), 15, w_star=wstar)
+        assert h.rel_error[-1] < 1e-2

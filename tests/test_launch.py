@@ -1,0 +1,136 @@
+"""Launch-layer unit tests: HLO collective parsing, input-spec construction,
+effective-config policy (sliding window for long_500k), mesh factory."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch, get_shape
+from repro.launch.dryrun import _shape_bytes, collective_bytes
+from repro.launch.specs_io import (
+    batch_specs_for, cache_len_for, effective_cfg, params_shape,
+)
+from repro.launch.steps import make_aa_step, make_train_step
+from repro.models.decoder import build_model
+
+
+class TestCollectiveParser:
+    def test_shape_bytes(self):
+        assert _shape_bytes("bf16[128,4096]") == 128 * 4096 * 2
+        assert _shape_bytes("f32[16]") == 64
+        assert _shape_bytes("(bf16[8,8], f32[4])") == 128 + 16
+        assert _shape_bytes("pred[10]") == 10
+
+    def test_collective_bytes_parses_ops(self):
+        hlo = """
+  %all-reduce.1 = bf16[256,512]{1,0} all-reduce(%x), replica_groups={}
+  %ag = f32[1024]{0} all-gather(%y), dimensions={0}
+  %aa = (bf16[64,64]{1,0}, bf16[64,64]{1,0}) all-to-all(%a, %b)
+  %rs.2 = f32[128]{0} reduce-scatter(%z), dimensions={0}
+  %cp = u32[16]{0} collective-permute(%w)
+"""
+        out = collective_bytes(hlo)
+        assert out["all-reduce"] == 256 * 512 * 2
+        assert out["all-gather"] == 4096
+        assert out["all-to-all"] == 2 * 64 * 64 * 2
+        assert out["reduce-scatter"] == 512
+        assert out["collective-permute"] == 64
+        assert out["all-reduce_count"] == 1
+
+    def test_ignores_non_collectives(self):
+        assert collective_bytes("%d = bf16[8] dot(%a, %b)") == {}
+
+
+class TestEffectiveCfg:
+    def test_long_context_forces_sliding_window(self):
+        shape = get_shape("long_500k")
+        for arch in ARCHS:
+            cfg = effective_cfg(get_arch(arch), shape)
+            if cfg.num_heads:
+                assert cfg.sliding_window > 0, arch
+                assert cache_len_for(cfg, shape) == cfg.sliding_window
+            else:  # pure SSM: O(1) state, no window needed
+                assert cfg.sliding_window == 0
+
+    def test_other_shapes_untouched(self):
+        for sname in ("train_4k", "prefill_32k", "decode_32k"):
+            cfg = effective_cfg(get_arch("qwen3-4b"), get_shape(sname))
+            assert cfg.sliding_window == 0
+
+    def test_decode_cache_len_is_seq_len(self):
+        cfg = effective_cfg(get_arch("qwen3-4b"), get_shape("decode_32k"))
+        assert cache_len_for(cfg, get_shape("decode_32k")) == 32_768
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("arch", ["smollm-135m", "internvl2-76b", "musicgen-medium"])
+    def test_train_batch_specs(self, arch):
+        cfg = get_arch(arch)
+        io = batch_specs_for(cfg, get_shape("train_4k"))
+        assert io["batch"]["tokens"].shape == (256, 4096)
+        if cfg.frontend_tokens:
+            assert io["batch"]["embeds"].shape == (256, cfg.frontend_tokens, cfg.d_model)
+
+    def test_decode_specs(self):
+        io = batch_specs_for(get_arch("mamba2-2.7b"), get_shape("decode_32k"))
+        assert io["tokens"].shape == (128, 1)
+        assert io["pos"].shape == (128, 1)
+
+    def test_params_shape_no_allocation(self):
+        cfg = get_arch("granite-20b")          # 20B params — must NOT allocate
+        model = build_model(cfg)
+        ps = params_shape(model)
+        total = sum(np.prod(l.shape) for l in jax.tree.leaves(ps))
+        assert total > 15e9
+        assert all(isinstance(l, jax.ShapeDtypeStruct) for l in jax.tree.leaves(ps))
+
+
+class TestSteps:
+    def test_train_step_runs_reduced(self):
+        cfg = get_arch("smollm-135m").reduced()
+        model = build_model(cfg)
+        params = jax.jit(model.init)(jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(model, eta=0.1))
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 64),
+                                              0, cfg.vocab_size, jnp.int32)}
+        correction = jax.tree.map(jnp.zeros_like, params)
+        new_params, r, loss = step(params, batch, correction)
+        assert np.isfinite(float(loss))
+        # residual must equal the gradient when correction is zero
+        g = jax.grad(model.loss)(params, batch)
+        gmax = max(float(jnp.max(jnp.abs(x))) for x in jax.tree.leaves(g))
+        for a, b in zip(jax.tree.leaves(r), jax.tree.leaves(g)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-6 * gmax)
+
+    def test_aa_step_reduces_quadratic_residual(self):
+        """make_aa_step on a toy quadratic trajectory behaves like AA."""
+        rng = np.random.default_rng(0)
+        d, m = 32, 3
+        A = np.diag(np.linspace(1, 5, d)).astype(np.float32)
+        b = rng.standard_normal(d).astype(np.float32)
+        eta = 0.15
+        w = rng.standard_normal(d).astype(np.float32)
+        ws, rs = [w], [A @ w - b]
+        for _ in range(m):
+            w = w - eta * (A @ w - b)
+            ws.append(w)
+            rs.append(A @ w - b)
+        s = jnp.asarray(np.diff(np.stack(ws), axis=0))
+        y = jnp.asarray(np.diff(np.stack(rs), axis=0))
+        aa = make_aa_step(eta=eta, history=m)
+        w_new, theta = aa({"w": jnp.asarray(ws[0])}, {"w": jnp.asarray(rs[0])},
+                          {"w": s}, {"w": y})
+        r_new = A @ np.asarray(w_new["w"]) - b
+        assert np.linalg.norm(r_new) < 0.5 * np.linalg.norm(rs[0])
+        assert 0.0 <= float(theta) <= 1.0
+
+
+def test_mesh_factory_shapes():
+    """make_production_mesh axes/shape contract (can't build 512 devices in
+    the test process — validate the spec via the documented contract)."""
+    import inspect
+    from repro.launch import mesh as mesh_mod
+    src = inspect.getsource(mesh_mod.make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+    assert '"pod", "data", "model"' in src

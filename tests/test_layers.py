@@ -1,0 +1,250 @@
+"""Layer-level correctness tests against independent references."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.models import layers as Lyr
+from repro.models.layers import Sharder
+
+SH = Sharder()
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD: chunked dual form == naive sequential recurrence
+# ---------------------------------------------------------------------------
+
+def ssd_sequential_ref(xh, dt, A, Bm, Cm):
+    """O(S·state) literal recurrence: h ← exp(dt·A)h + dt·B⊗x ; y = C·h."""
+    B, S, nh, hd = xh.shape
+    stt = Bm.shape[-1]
+    h = np.zeros((B, nh, hd, stt), np.float64)
+    ys = []
+    xh, dt, Bm, Cm = (np.asarray(a, np.float64) for a in (xh, dt, Bm, Cm))
+    A = np.asarray(A, np.float64)
+    for s in range(S):
+        dA = np.exp(dt[:, s] * A[None])                     # [B,nh]
+        h = h * dA[..., None, None] + np.einsum(
+            "bh,bhd,bs->bhds", dt[:, s], xh[:, s], Bm[:, s]
+        )
+        ys.append(np.einsum("bs,bhds->bhd", Cm[:, s], h))
+    return np.stack(ys, 1), h
+
+
+@pytest.mark.parametrize("S,chunk", [(32, 8), (64, 16), (64, 64), (48, 16)])
+def test_ssd_chunked_matches_sequential(S, chunk):
+    rng = np.random.default_rng(0)
+    B, nh, hd, stt = 2, 3, 4, 8
+    xh = jnp.asarray(rng.standard_normal((B, S, nh, hd)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, nh)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 4.0, (nh,)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, stt)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, stt)), jnp.float32)
+    y, final = Lyr._ssd_chunked_scan(xh, dt, A, Bm, Cm, chunk)
+    y_ref, h_ref = ssd_sequential_ref(xh, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final), h_ref, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    S_chunks=st.sampled_from([(16, 4), (32, 8), (24, 8)]),
+    seed=st.integers(0, 1000),
+    a_scale=st.floats(0.1, 8.0),
+)
+def test_property_ssd_chunk_invariance(S_chunks, seed, a_scale):
+    """SSD output must be invariant to the chunk size (pure reformulation)."""
+    S, c1 = S_chunks
+    rng = np.random.default_rng(seed)
+    B, nh, hd, stt = 1, 2, 4, 4
+    xh = jnp.asarray(rng.standard_normal((B, S, nh, hd)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.3, (B, S, nh)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.1, a_scale, (nh,)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, stt)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, stt)), jnp.float32)
+    y1, f1 = Lyr._ssd_chunked_scan(xh, dt, A, Bm, Cm, c1)
+    y2, f2 = Lyr._ssd_chunked_scan(xh, dt, A, Bm, Cm, S)   # one big chunk
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), rtol=3e-4, atol=3e-4)
+
+
+def test_mamba_decode_matches_forward():
+    """Token-by-token recurrent decode == chunked forward, full block level."""
+    cfg = get_arch("mamba2-2.7b").reduced()
+    p = Lyr.mamba_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model), jnp.float32) * 0.3
+    y_full, _ = Lyr.mamba_forward(p, x, cfg, SH)
+    state = Lyr.init_ssm_state(cfg, B, jnp.float32)
+    outs = []
+    for s in range(S):
+        y, state = Lyr.mamba_forward(p, x[:, s:s + 1], cfg, SH, state=state)
+        outs.append(y)
+    y_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(y_step), np.asarray(y_full), rtol=2e-3, atol=2e-3
+    )
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def moe_per_token_ref(p, x, cfg):
+    """Literal per-token dropless reference: y = Σ_k w_k FFN_{e_k}(x)."""
+    B, S, d = x.shape
+    xt = np.asarray(x, np.float64).reshape(-1, d)
+    router = np.asarray(p["router"], np.float64)
+    logits = xt @ router
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    k = cfg.experts_per_token
+    y = np.zeros_like(xt)
+    wig = np.asarray(p["wi_gate"], np.float64)
+    wiu = np.asarray(p["wi_up"], np.float64)
+    wo = np.asarray(p["wo"], np.float64)
+    for t in range(xt.shape[0]):
+        top = np.argsort(-probs[t])[:k]
+        w = probs[t][top]
+        w = w / w.sum()
+        for e, wi in zip(top, w):
+            h = xt[t] @ wig[e]
+            h = h / (1 + np.exp(-h)) * (xt[t] @ wiu[e])
+            y[t] += wi * (h @ wo[e])
+    return y.reshape(B, S, d)
+
+
+def test_moe_dropless_matches_per_token_ref():
+    cfg = get_arch("granite-moe-3b-a800m").reduced()
+    p = Lyr.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model), jnp.float32)
+    y, _ = Lyr.moe(p, x, cfg, SH, dropless=True)
+    y_ref = moe_per_token_ref(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-3, atol=2e-3)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor c, at most T·k tokens-slots exist and the output
+    must stay finite; dropped slots contribute exactly zero."""
+    cfg = get_arch("llama4-scout-17b-a16e").reduced()
+    p = Lyr.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32)
+    y, aux = Lyr.moe(p, x, cfg, SH, dropless=False)
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux) > 0.5   # load-balance loss ~1 at uniform routing
+
+
+def test_moe_aux_loss_penalizes_imbalance():
+    """Routing everything to one expert must raise the aux loss (≈E at full
+    collapse vs ≈1 at uniform)."""
+    cfg = get_arch("granite-moe-3b-a800m").reduced()
+    p = dict(Lyr.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32))
+    # positive inputs so a large positive router column forces expert 0
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (1, 32, cfg.d_model))) + 0.1
+    _, aux_uniform = Lyr.moe(p, x, cfg, SH)
+    p_collapsed = dict(p)
+    bias = jnp.zeros((cfg.d_model, cfg.num_experts)).at[:, 0].set(50.0)
+    p_collapsed["router"] = p["router"] + bias
+    _, aux_collapsed = Lyr.moe(p_collapsed, x, cfg, SH)
+    assert float(aux_collapsed) > 2.0 * float(aux_uniform)
+
+
+# ---------------------------------------------------------------------------
+# attention variants
+# ---------------------------------------------------------------------------
+
+def test_sliding_window_matches_masked_full():
+    """Sliding-window attention == full attention with an explicit band mask
+    applied to the scores (independent einsum reference)."""
+    cfg = get_arch("smollm-135m").reduced()
+    p = Lyr.attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S, W = 2, 32, 8
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    y_win, _ = Lyr.attention(p, x, cfg, SH, pos, window=W)
+
+    # reference: manual scores with band mask
+    hd, H, KV = cfg.resolved_head_dim, cfg.eff_heads, cfg.eff_kv_heads
+    q = Lyr.apply_rope((x @ p["wq"]).reshape(B, S, H, hd), pos, cfg.rope_theta)
+    k = Lyr.apply_rope((x @ p["wk"]).reshape(B, S, KV, hd), pos, cfg.rope_theta)
+    v = (x @ p["wv"]).reshape(B, S, KV, hd)
+    k = jnp.repeat(k, H // KV, 2)
+    v = jnp.repeat(v, H // KV, 2)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+    i = jnp.arange(S)
+    band = (i[None, :] <= i[:, None]) & (i[None, :] > i[:, None] - W)
+    sc = jnp.where(band[None, None], sc, -1e30)
+    pr = jax.nn.softmax(sc, -1)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", pr, v).reshape(B, S, H * hd) @ p["wo"]
+    np.testing.assert_allclose(np.asarray(y_win), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+def test_sliding_window_decode_ring_buffer():
+    """Windowed decode with a ring buffer of size W must match windowed
+    forward at every position past the window boundary."""
+    import dataclasses
+    cfg = dataclasses.replace(get_arch("smollm-135m").reduced(), sliding_window=8)
+    from repro.models.decoder import build_model
+    model = build_model(cfg)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    B, S, W = 2, 32, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab_size, jnp.int32)
+    logits_full, _ = jax.jit(model.forward)(params, tokens, None)
+
+    caches = model.init_caches(B, W)     # ring buffer = window size
+    dec = jax.jit(model.decode_step)
+    for i in range(S):
+        pos = jnp.full((B, 1), i, jnp.int32)
+        ls, caches = dec(params, caches, tokens[:, i:i + 1], pos)
+        np.testing.assert_allclose(
+            np.asarray(ls), np.asarray(logits_full[:, i]), rtol=2e-2, atol=2e-2
+        )
+
+
+def test_padded_heads_are_noops():
+    """A config padded for 16-way TP must produce IDENTICAL outputs to the
+    unpadded config at init (padded o_proj rows are zero)."""
+    cfg = get_arch("smollm-135m").reduced()          # 4 heads, kv 2
+    cfg_pad = cfg.padded(model_shards=8)             # pads q heads 4 -> 8
+    assert cfg_pad.eff_heads == 8
+    p = Lyr.attn_init(jax.random.PRNGKey(0), cfg_pad, jnp.float32)
+    B, S = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    y, _ = Lyr.attention(p, x, cfg_pad, SH, pos)
+    # zero out padded-head inputs too: identical result (o_proj rows already 0)
+    hd = cfg_pad.resolved_head_dim
+    p2 = dict(p)
+    mask_q = (jnp.arange(cfg_pad.eff_heads * hd) < cfg.num_heads * hd)
+    p2["wq"] = p["wq"] * mask_q[None, :]
+    y2, _ = Lyr.attention(p2, x, cfg_pad, SH, pos)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), rtol=1e-5, atol=1e-6)
+
+
+def test_rms_norm_reference():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64), jnp.float32)
+    g = jax.random.normal(jax.random.PRNGKey(1), (64,), jnp.float32)
+    y = Lyr.rms_norm(x, g)
+    ref = np.asarray(x) / np.sqrt(np.mean(np.asarray(x) ** 2, -1, keepdims=True) + 1e-6) * np.asarray(g)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-5, atol=1e-6)
+
+
+def test_rope_preserves_norm_and_relativity():
+    B, S, H, hd = 1, 16, 2, 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, hd), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    y = Lyr.apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5,
+    )
+    # relativity: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, hd), jnp.float32)
+    def dot_at(i, j):
+        qi = Lyr.apply_rope(q, jnp.full((1, 1), i, jnp.int32), 10_000.0)
+        kj = Lyr.apply_rope(k, jnp.full((1, 1), j, jnp.int32), 10_000.0)
+        return float(jnp.sum(qi * kj))
+    assert abs(dot_at(5, 3) - dot_at(10, 8)) < 1e-4

@@ -1,0 +1,110 @@
+"""Sharding-layer tests: spec generation totality + shard_map MoE equivalence
+on a 1-device mesh (multi-device lowering is proven by the dry-run suite)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_arch, get_shape
+from repro.launch.mesh import make_host_mesh
+from repro.launch.specs_io import batch_specs_for, caches_shape, effective_cfg, params_shape
+from repro.models import layers as Lyr
+from repro.models.decoder import build_model
+from repro.sharding.specs import cache_specs, make_plan, param_specs
+
+
+class FakeMesh:
+    """Shape-only mesh stand-in for spec generation (no devices)."""
+    def __init__(self, multi_pod=False):
+        self.shape = ({"pod": 2, "data": 16, "model": 16} if multi_pod
+                      else {"data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_total(arch, multi_pod):
+    """Every parameter leaf of every arch gets a sharding rule, and the spec
+    rank matches the leaf rank."""
+    mesh = FakeMesh(multi_pod)
+    shape = get_shape("train_4k")
+    cfg = effective_cfg(get_arch(arch), shape)
+    plan = make_plan(cfg, mesh, multi_pod=multi_pod)
+    model = build_model(plan.cfg)
+    p_shape = params_shape(model)
+    specs = param_specs(p_shape, plan)
+    for (kp, leaf), (_, spec) in zip(
+        jax.tree_util.tree_flatten_with_path(p_shape)[0],
+        jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))[0],
+    ):
+        assert len(spec) <= leaf.ndim, (kp, spec, leaf.shape)
+        # sharded dims must divide
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            assert dim % n == 0, (arch, kp, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "mamba2-2.7b", "zamba2-7b",
+                                  "granite-moe-3b-a800m"])
+def test_cache_specs_total(arch):
+    mesh = FakeMesh()
+    shape = get_shape("decode_32k")
+    cfg = effective_cfg(get_arch(arch), shape)
+    plan = make_plan(cfg, mesh)
+    model = build_model(plan.cfg)
+    c_shape = caches_shape(model, 128, 1024)
+    specs = cache_specs(c_shape, plan, 128)
+    assert jax.tree_util.tree_structure(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+    ) is not None
+
+
+class TestShardMapMoE:
+    def test_moe_sharded_equals_plain_on_host_mesh(self):
+        """Expert-parallel shard_map MoE == plain capacity MoE on a (1,1)
+        mesh (single 'model' rank => identical routing and arithmetic)."""
+        cfg = get_arch("granite-moe-3b-a800m").reduced()
+        mesh = make_host_mesh()
+        sh = Lyr.Sharder(mesh=mesh, axes={"batch": "data", "experts": "model",
+                                          "expert_ff": None})
+        p = Lyr.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32)
+        y_plain, aux_plain = Lyr.moe(p, x, cfg, Lyr.Sharder())
+        y_shard, aux_shard = Lyr.moe_sharded(p, x, cfg, sh)
+        np.testing.assert_allclose(
+            np.asarray(y_shard), np.asarray(y_plain), rtol=2e-3, atol=2e-3
+        )
+        np.testing.assert_allclose(float(aux_shard), float(aux_plain), rtol=1e-3)
+
+    def test_moe_sharded_dropless(self):
+        cfg = get_arch("llama4-scout-17b-a16e").reduced()
+        mesh = make_host_mesh()
+        sh = Lyr.Sharder(mesh=mesh, axes={"batch": "data", "experts": "model"})
+        p = Lyr.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model), jnp.float32)
+        y_shard, _ = Lyr.moe_sharded(p, x, cfg, sh, dropless=True)
+        y_plain, _ = Lyr.moe(p, x, cfg, Lyr.Sharder(), dropless=True)
+        np.testing.assert_allclose(
+            np.asarray(y_shard), np.asarray(y_plain), rtol=2e-3, atol=2e-3
+        )
+
+
+def test_padded_expert_masking():
+    """Dummy (padded) experts must never receive tokens."""
+    import dataclasses
+    cfg = get_arch("granite-moe-3b-a800m").reduced()
+    cfg = dataclasses.replace(cfg, padded_experts=cfg.num_experts + 2)
+    p = Lyr.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model), jnp.float32)
+    y, aux = Lyr.moe(p, x, cfg, Lyr.Sharder())
+    assert np.isfinite(np.asarray(y)).all()
+    # routing probabilities: recompute and check dummies get ~0 mass
+    logits = x.reshape(-1, cfg.d_model) @ p["router"]
+    dummy = jnp.arange(cfg.eff_experts) >= cfg.num_experts
+    probs = jax.nn.softmax(jnp.where(dummy[None], -1e30, logits), -1)
+    assert float(probs[:, cfg.num_experts:].max()) < 1e-9
