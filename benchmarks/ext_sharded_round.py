@@ -1,0 +1,92 @@
+"""Beyond-paper: vmap vs shard_map round wall-time on the dryrun meshes.
+
+Compares the single-process vmap runtime (core/algorithms.py) against the
+distributed shard_map runtime (core/sharded.py) for one FedOSAA round, on the
+512-host-device 2x16x16 dryrun mesh (and the single-pod 16x16). On emulated
+host devices the sharded round is *slower* in wall-time — 512 thread-level
+device emulations on a few cores — so ``derived`` here is the sharded/vmap
+wall-time ratio, a dispatch+collective overhead measurement, not a speedup
+claim; the roofline win only materializes on real pods where the K clients'
+local epochs run on disjoint chips.
+
+Standalone (needs the forced host device count BEFORE jax initializes, so it
+is not part of benchmarks/run.py's MODULES):
+
+  PYTHONPATH=src python -m benchmarks.ext_sharded_round
+  PYTHONPATH=src python -m benchmarks.ext_sharded_round --full   # more rounds
+"""
+from __future__ import annotations
+
+# MUST precede any jax import: the device count locks at first jax init.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse          # noqa: E402
+import time              # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.core import AlgoHParams, init_state, make_round_fn  # noqa: E402
+from repro.core.sharded import make_sharded_round_fn, num_client_shards  # noqa: E402
+from repro.data import make_binary_classification, partition   # noqa: E402
+from repro.launch.mesh import make_production_mesh             # noqa: E402
+from repro.models.logreg import make_logreg_problem            # noqa: E402
+
+from benchmarks.common import print_csv, save_results          # noqa: E402
+
+
+def _time_round(fn, state, rounds: int) -> float:
+    state, m = fn(state)                    # compile + warm up
+    jax.block_until_ready(m.loss)
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        state, m = fn(state)
+    jax.block_until_ready(m.loss)
+    return (time.perf_counter() - t0) / rounds
+
+
+def run(quick: bool = True) -> list[dict]:
+    rounds = 3 if quick else 10
+    num_clients, n = (64, 2048) if quick else (64, 20_000)
+    X, y = make_binary_classification("synthetic_small", n=n, seed=0)
+    clients = partition(X, y, num_clients=num_clients, scheme="iid")
+    prob = make_logreg_problem(clients, gamma=1e-3)
+    hp = AlgoHParams(eta=0.5, local_epochs=3)
+
+    rows = []
+    for algo in ("fedosaa_svrg", "fedosaa_scaffold"):
+        state0 = init_state(prob, jax.random.PRNGKey(0), hp)
+        t_vmap = _time_round(jax.jit(make_round_fn(algo, prob, hp)),
+                             state0, rounds)
+        for multi_pod in (False, True):
+            mesh_tag = "2x16x16" if multi_pod else "16x16"
+            if jax.device_count() < (512 if multi_pod else 256):
+                print(f"# skip {algo}/{mesh_tag}: only "
+                      f"{jax.device_count()} devices")
+                continue
+            mesh = make_production_mesh(multi_pod=multi_pod)
+            t_shard = _time_round(
+                jax.jit(make_sharded_round_fn(algo, prob, hp, mesh)),
+                state0, rounds)
+            rows.append({
+                "name": f"ext_sharded_round/{algo}/{mesh_tag}",
+                "us_per_call": 1e6 * t_shard,
+                "derived": t_shard / t_vmap,     # host-emulation overhead ×
+                "vmap_us_per_call": 1e6 * t_vmap,
+                "client_shards": num_client_shards(mesh),
+                "num_clients": num_clients,
+                "rounds": rounds,
+            })
+    save_results("ext_sharded_round", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    print_csv(run(quick=not args.full))

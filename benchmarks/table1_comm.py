@@ -7,7 +7,7 @@ import time
 import jax
 
 from repro.core import AlgoHParams, init_state, make_round_fn
-from repro.core.algorithms import ALGORITHMS, COMM_TABLE
+from repro.core.algorithms import ALGORITHMS, COMM_TABLE, comm_floats_per_round
 
 from benchmarks.common import logreg_setup, print_csv, save_results
 
@@ -25,15 +25,15 @@ def run(quick: bool = True) -> list[dict]:
         state, m = fn(state)
         jax.block_until_ready(m.loss)
         wall = time.perf_counter() - t0
-        rtrips, units = COMM_TABLE[algo]
+        cost = COMM_TABLE[algo]
         measured = float(m.comm_floats)
         rows.append({
             "name": f"table1/{algo}",
             "us_per_call": 1e6 * wall,
             "derived": measured / d,        # == Table 1 'cost' column (×d)
-            "round_trips": rtrips,
-            "table_units": units,
-            "matches_table": abs(measured - units * d) < 1e-3,
+            "round_trips": cost.round_trips,
+            "table_units": cost.float_units,
+            "matches_table": abs(measured - comm_floats_per_round(algo, d)) < 1e-3,
         })
     save_results("table1_comm", rows)
     return rows

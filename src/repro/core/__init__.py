@@ -10,11 +10,14 @@ from repro.core.algorithms import (  # noqa: F401
     ALGORITHMS,
     COMM_TABLE,
     AlgoHParams,
+    CommCost,
     RoundMetrics,
     ServerState,
+    comm_floats_per_round,
     init_state,
     make_round_fn,
 )
+from repro.core.sharded import make_sharded_round_fn  # noqa: F401
 from repro.core.problem import (  # noqa: F401
     ClientBatch,
     FLProblem,

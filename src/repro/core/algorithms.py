@@ -16,8 +16,18 @@ Implemented, all under one jittable round API:
 
 Every round function has signature  round(state) -> (state, RoundMetrics)
 and is a pure jax function: K clients are vmapped (stacked data), so a full
-round is ONE XLA computation. The distributed runtime (core/sharded.py) swaps
-the vmap for a shard_map over the ("pod","data") mesh axes.
+round is ONE XLA computation. The distributed runtime (core/sharded.py) runs
+the SAME per-client bodies and round cores, but partitions the client axis
+over the ("pod","data") mesh axes with shard_map and reduces via psum.
+
+Layering (shared between the two runtimes):
+
+  _client_*            per-client update bodies (one client's arrays in)
+  _*_round_core        one round's cross-client math, written against a
+                       CrossClientReduce so the SAME code runs under vmap
+                       (plain reductions) and shard_map (psum reductions)
+  make_round_fn        vmap runtime: prologue (rng/participation) + core
+  make_sharded_round_fn(core/sharded.py): same prologue, core under shard_map
 """
 from __future__ import annotations
 
@@ -40,20 +50,47 @@ ALGORITHMS = (
     "lbfgs", "giant", "newton_gmres", "dane",
 )
 
-# Communication cost per aggregation round, in units of d floats and in
-# server<->client round-trips (paper Table 1).
+class CommCost(NamedTuple):
+    """Per-round communication accounting (paper Table 1).
+
+    round_trips — synchronous server↔client exchanges per aggregation round.
+      Methods needing the global gradient ∇f(w^t) before local work (SVRG
+      family, L-BFGS, GIANT, Newton-GMRES, DANE) pay 2: one to collect local
+      gradients, one to broadcast (w^t, ∇f) and collect results. FedAvg and
+      SCAFFOLD piggyback everything on a single exchange.
+    float_units — client-uplink floats per round, in units of d (the Table 1
+      'cost' column): 1 for a model delta alone, 2 when a gradient or a
+      control variate travels alongside it.
+    """
+
+    round_trips: int
+    float_units: float
+
+
 COMM_TABLE = {
-    "fedavg":           (1, 1.0),
-    "fedsvrg":          (2, 2.0),
-    "scaffold":         (1, 2.0),
-    "fedosaa_svrg":     (2, 2.0),
-    "fedosaa_scaffold": (1, 2.0),
-    "fedosaa_avg":      (1, 1.0),
-    "lbfgs":            (2, 2.0),
-    "giant":            (2, 2.0),
-    "newton_gmres":     (2, 2.0),
-    "dane":             (2, 2.0),
+    "fedavg":           CommCost(1, 1.0),
+    "fedsvrg":          CommCost(2, 2.0),
+    "scaffold":         CommCost(1, 2.0),
+    "fedosaa_svrg":     CommCost(2, 2.0),
+    "fedosaa_scaffold": CommCost(1, 2.0),
+    "fedosaa_avg":      CommCost(1, 1.0),
+    "lbfgs":            CommCost(2, 2.0),
+    "giant":            CommCost(2, 2.0),
+    "newton_gmres":     CommCost(2, 2.0),
+    "dane":             CommCost(2, 2.0),
 }
+
+
+def comm_floats_per_round(algo: str, d: int, line_search: bool = False) -> float:
+    """Floats on the wire for one round of ``algo`` on a d-parameter model.
+
+    The GIANT-style backtracking line search needs the *aggregated* direction
+    p broadcast back to clients before the step size is chosen — one extra
+    d-float downlink on top of the Table 1 units.
+    """
+    cost = COMM_TABLE[algo]
+    extra = float(d) if (line_search and algo in ("giant", "newton_gmres")) else 0.0
+    return cost.float_units * d + extra
 
 
 @dataclasses.dataclass(frozen=True)
@@ -349,33 +386,195 @@ def _aggregate(weights: jax.Array, stacked: Pytree, anchor: Pytree | None = None
     )
 
 
+class CrossClientReduce:
+    """Cross-client reductions for the single-process (vmap) runtime.
+
+    The round cores below are written against this interface so the identical
+    code runs distributed: core/sharded.py subclasses it to reduce each
+    shard's partial result with psum/pmax over the ("pod","data") mesh axes.
+    On a 1-device mesh the psum is an identity, so the two runtimes agree
+    bit-for-bit.
+    """
+
+    def wsum(self, weights: jax.Array, stacked: Pytree,
+             anchor: Pytree | None = None) -> Pytree:
+        """Σ_k weights_k · stacked_k over every client (all shards)."""
+        return _aggregate(weights, stacked, anchor)
+
+    def nanmean(self, x: jax.Array) -> jax.Array:
+        """Mean of the non-nan entries of a per-client vector; nan if none."""
+        return jnp.nanmean(x)
+
+    def nanmax(self, x: jax.Array) -> jax.Array:
+        """Max of the non-nan entries of a per-client vector; nan if none."""
+        return jnp.nanmax(x)
+
+
+VMAP_REDUCE = CrossClientReduce()
+
+
 # --------------------------------------------------------------------------
-# round functions
+# round cores: one round's cross-client math, runtime-agnostic
+#
+# Each core takes the broadcast server quantities, the (possibly local shard
+# of the) stacked client arrays, and a CrossClientReduce. Under the vmap
+# runtime the arrays are the full [K, ...] stacks and R reduces in-process;
+# under shard_map (core/sharded.py) they are the [K/n_shards, ...] local
+# slices and R finishes every reduction with a psum, so a core never needs to
+# know which runtime it is running in.
+# --------------------------------------------------------------------------
+
+class MetricParts(NamedTuple):
+    """Cross-client metric reductions, before comm accounting is attached."""
+
+    loss: jax.Array
+    grad_norm: jax.Array
+    theta_mean: jax.Array
+    gram_cond_max: jax.Array
+
+
+def _stack_losses(problem: FLProblem, w: Pytree, x, y, mask) -> jax.Array:
+    return jax.vmap(lambda xx, yy, mm: problem.loss(w, ClientBatch(xx, yy, mm)))(
+        x, y, mask
+    )
+
+
+def _stack_grads(problem: FLProblem, w: Pytree, x, y, mask) -> Pytree:
+    return jax.vmap(lambda xx, yy, mm: problem.grad(w, ClientBatch(xx, yy, mm)))(
+        x, y, mask
+    )
+
+
+def _nan_stats(k: int) -> AAStats:
+    return AAStats(
+        jnp.full((k,), jnp.nan), jnp.full((k,), jnp.nan),
+        jnp.full((k,), jnp.nan), jnp.zeros((k,), jnp.int32),
+    )
+
+
+def _metric_parts(problem, R, w, g, stats, x, y, mask, dweight) -> MetricParts:
+    """f(w), ‖g‖ and AA health stats, reduced across every client."""
+    return MetricParts(
+        loss=R.wsum(dweight, _stack_losses(problem, w, x, y, mask)),
+        grad_norm=tm.tree_norm(g),
+        theta_mean=R.nanmean(stats.theta),
+        gram_cond_max=R.nanmax(stats.gram_cond),
+    )
+
+
+def _svrg_round_core(problem, hp, use_aa, R, w_t, x, y, mask, dweight, pweight,
+                     rngs, hist_s=None, hist_y=None):
+    """SVRG family: corrected local steps (+ optional AA), delta aggregation."""
+    g_global = R.wsum(dweight, _stack_grads(problem, w_t, x, y, mask))
+    if hist_s is not None:
+        w_k, stats, new_hs, new_hy = jax.vmap(
+            partial(_client_svrg, problem, hp, use_aa, w_t, g_global)
+        )(x, y, mask, rngs, hist_s, hist_y)
+    else:
+        w_k, stats = jax.vmap(
+            partial(_client_svrg, problem, hp, use_aa, w_t, g_global)
+        )(x, y, mask, rngs)
+        new_hs = new_hy = None
+    new_params = R.wsum(pweight, w_k, anchor=w_t)
+    parts = _metric_parts(problem, R, w_t, g_global, stats, x, y, mask, dweight)
+    return new_params, parts, new_hs, new_hy
+
+
+def _scaffold_round_core(problem, hp, use_aa, R, w_t, c, x, y, mask, c_k,
+                         dweight, pweight, rngs):
+    """SCAFFOLD family: control-variate steps; c aggregated with data weights."""
+    w_k, new_c_k, stats = jax.vmap(
+        partial(_client_scaffold, problem, hp, use_aa, w_t, c)
+    )(x, y, mask, c_k, rngs)
+    new_params = R.wsum(pweight, w_k, anchor=w_t)
+    new_c = R.wsum(dweight, new_c_k)
+    parts = _metric_parts(problem, R, w_t, new_c, stats, x, y, mask, dweight)
+    return new_params, new_c, new_c_k, parts
+
+
+def _avg_round_core(problem, hp, use_aa, R, w_t, x, y, mask, dweight, pweight,
+                    rngs):
+    """FedAvg family (incl. the fedosaa_avg negative control)."""
+    w_k, stats = jax.vmap(
+        partial(_client_avg, problem, hp, use_aa, w_t)
+    )(x, y, mask, rngs)
+    new_params = R.wsum(pweight, w_k, anchor=w_t)
+    g = R.wsum(dweight, _stack_grads(problem, w_t, x, y, mask))  # diagnostics
+    parts = _metric_parts(problem, R, w_t, g, stats, x, y, mask, dweight)
+    return new_params, parts
+
+
+def _lbfgs_round_core(problem, hp, R, w_t, x, y, mask, dweight, pweight, rngs):
+    g_global = R.wsum(dweight, _stack_grads(problem, w_t, x, y, mask))
+    w_k, _ = jax.vmap(
+        partial(_client_lbfgs, problem, hp, w_t, g_global)
+    )(x, y, mask, rngs)
+    new_params = R.wsum(pweight, w_k, anchor=w_t)
+    parts = _metric_parts(problem, R, w_t, g_global, _nan_stats(x.shape[0]),
+                          x, y, mask, dweight)
+    return new_params, parts
+
+
+def _newton_round_core(problem, hp, client_fn, R, w_t, x, y, mask, dweight,
+                       pweight):
+    """GIANT / Newton-GMRES: aggregate directions, optional global backtrack."""
+    g_global = R.wsum(dweight, _stack_grads(problem, w_t, x, y, mask))
+    p_k = jax.vmap(partial(client_fn, problem, hp, w_t, g_global))(x, y, mask)
+    p = R.wsum(pweight, p_k)
+    if hp.line_search:
+        # GIANT line search on the aggregated direction: clients evaluate
+        # f_k along p (one extra broadcast of p — see comm_floats_per_round).
+        steps = jnp.array([4.0, 2.0, 1.0, 0.5, 0.25, 0.125, 0.0625])
+        vals = jax.vmap(
+            lambda a: R.wsum(
+                dweight,
+                _stack_losses(problem, tm.tree_axpy(-a, p, w_t), x, y, mask),
+            )
+        )(steps)
+        a = steps[jnp.argmin(vals)]
+    else:
+        a = jnp.asarray(1.0)
+    new_params = tm.tree_axpy(-a, p, w_t)
+    parts = _metric_parts(problem, R, w_t, g_global, _nan_stats(x.shape[0]),
+                          x, y, mask, dweight)
+    return new_params, parts
+
+
+def _dane_round_core(problem, hp, R, w_t, x, y, mask, dweight, pweight):
+    g_global = R.wsum(dweight, _stack_grads(problem, w_t, x, y, mask))
+    w_k = jax.vmap(partial(_client_dane, problem, hp, w_t, g_global))(x, y, mask)
+    new_params = R.wsum(pweight, w_k)
+    parts = _metric_parts(problem, R, w_t, g_global, _nan_stats(x.shape[0]),
+                          x, y, mask, dweight)
+    return new_params, parts
+
+
+def finalize_metrics(parts: MetricParts, comm_floats: float) -> RoundMetrics:
+    return RoundMetrics(
+        loss=parts.loss,
+        grad_norm=parts.grad_norm,
+        theta_mean=parts.theta_mean,
+        gram_cond_max=parts.gram_cond_max,
+        comm_floats=jnp.asarray(comm_floats, jnp.float32),
+    )
+
+
+# --------------------------------------------------------------------------
+# round functions (vmap runtime)
 # --------------------------------------------------------------------------
 
 def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams):
-    """Return a jittable round(state) -> (state, RoundMetrics)."""
+    """Return a jittable round(state) -> (state, RoundMetrics).
+
+    Single-process runtime: the K stacked clients are vmapped. The distributed
+    runtime with identical numerics is core/sharded.py::make_sharded_round_fn.
+    """
     if algo not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algo!r}; choose from {ALGORITHMS}")
     d = tm.tree_size(problem.init(jax.random.PRNGKey(0)))
-    _, cost_units = COMM_TABLE[algo]
-    comm = jnp.asarray(cost_units * d, jnp.float32)
+    comm = comm_floats_per_round(algo, d, hp.line_search)
     C = problem.clients
-
-    def common_metrics(w, g, stats_stack, extra_comm=0.0):
-        loss = problem.global_loss(w)
-        return RoundMetrics(
-            loss=loss,
-            grad_norm=tm.tree_norm(g),
-            theta_mean=jnp.nanmean(stats_stack.theta),
-            gram_cond_max=jnp.nanmax(stats_stack.gram_cond),
-            comm_floats=comm + extra_comm,
-        )
-
-    nan_stats = AAStats(
-        jnp.full((C.num_clients,), jnp.nan), jnp.full((C.num_clients,), jnp.nan),
-        jnp.full((C.num_clients,), jnp.nan), jnp.zeros((C.num_clients,), jnp.int32),
-    )
+    R = VMAP_REDUCE
 
     # ---------------- SVRG family ----------------
     if algo in ("fedsvrg", "fedosaa_svrg"):
@@ -384,22 +583,18 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams):
         def round_fn(state: ServerState):
             rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
             weights = _participation_weights(problem, hp, part_rng)
-            g_global = problem.global_grad(state.params)
             rngs = jax.random.split(cl_rng, C.num_clients)
-            if hp.carry_history > 0 and state.hist_s is not None:
-                w_k, stats, new_hs, new_hy = jax.vmap(
-                    partial(_client_svrg, problem, hp, use_aa, state.params,
-                            g_global)
-                )(C.x, C.y, C.mask, rngs, state.hist_s, state.hist_y)
-                new_params = _aggregate(weights, w_k, anchor=state.params)
-                metrics = common_metrics(state.params, g_global, stats)
+            carry = hp.carry_history > 0 and state.hist_s is not None
+            new_params, parts, new_hs, new_hy = _svrg_round_core(
+                problem, hp, use_aa, R, state.params, C.x, C.y, C.mask,
+                C.weight, weights, rngs,
+                state.hist_s if carry else None,
+                state.hist_y if carry else None,
+            )
+            metrics = finalize_metrics(parts, comm)
+            if carry:
                 return state._replace(params=new_params, t=state.t + 1,
                                       rng=rng, hist_s=new_hs, hist_y=new_hy), metrics
-            w_k, stats = jax.vmap(
-                partial(_client_svrg, problem, hp, use_aa, state.params, g_global)
-            )(C.x, C.y, C.mask, rngs)
-            new_params = _aggregate(weights, w_k, anchor=state.params)
-            metrics = common_metrics(state.params, g_global, stats)
             return state._replace(params=new_params, t=state.t + 1, rng=rng), metrics
 
         return round_fn
@@ -412,12 +607,11 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams):
             rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
             weights = _participation_weights(problem, hp, part_rng)
             rngs = jax.random.split(cl_rng, C.num_clients)
-            w_k, new_c_k, stats = jax.vmap(
-                partial(_client_scaffold, problem, hp, use_aa, state.params, state.c)
-            )(C.x, C.y, C.mask, state.c_k, rngs)
-            new_params = _aggregate(weights, w_k, anchor=state.params)
-            new_c = _aggregate(C.weight, new_c_k)
-            metrics = common_metrics(state.params, new_c, stats)
+            new_params, new_c, new_c_k, parts = _scaffold_round_core(
+                problem, hp, use_aa, R, state.params, state.c,
+                C.x, C.y, C.mask, state.c_k, C.weight, weights, rngs,
+            )
+            metrics = finalize_metrics(parts, comm)
             return (
                 state._replace(params=new_params, c=new_c, c_k=new_c_k,
                                t=state.t + 1, rng=rng),
@@ -434,12 +628,11 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams):
             rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
             weights = _participation_weights(problem, hp, part_rng)
             rngs = jax.random.split(cl_rng, C.num_clients)
-            w_k, stats = jax.vmap(
-                partial(_client_avg, problem, hp, use_aa, state.params)
-            )(C.x, C.y, C.mask, rngs)
-            new_params = _aggregate(weights, w_k, anchor=state.params)
-            g = problem.global_grad(state.params)  # diagnostics only
-            metrics = common_metrics(state.params, g, stats)
+            new_params, parts = _avg_round_core(
+                problem, hp, use_aa, R, state.params, C.x, C.y, C.mask,
+                C.weight, weights, rngs,
+            )
+            metrics = finalize_metrics(parts, comm)
             return state._replace(params=new_params, t=state.t + 1, rng=rng), metrics
 
         return round_fn
@@ -450,13 +643,12 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams):
         def round_fn(state: ServerState):
             rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
             weights = _participation_weights(problem, hp, part_rng)
-            g_global = problem.global_grad(state.params)
             rngs = jax.random.split(cl_rng, C.num_clients)
-            w_k, _ = jax.vmap(
-                partial(_client_lbfgs, problem, hp, state.params, g_global)
-            )(C.x, C.y, C.mask, rngs)
-            new_params = _aggregate(weights, w_k, anchor=state.params)
-            metrics = common_metrics(state.params, g_global, nan_stats)
+            new_params, parts = _lbfgs_round_core(
+                problem, hp, R, state.params, C.x, C.y, C.mask,
+                C.weight, weights, rngs,
+            )
+            metrics = finalize_metrics(parts, comm)
             return state._replace(params=new_params, t=state.t + 1, rng=rng), metrics
 
         return round_fn
@@ -468,24 +660,11 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams):
         def round_fn(state: ServerState):
             rng, part_rng = jax.random.split(state.rng)
             weights = _participation_weights(problem, hp, part_rng)
-            g_global = problem.global_grad(state.params)
-            p_k = jax.vmap(
-                partial(client_fn, problem, hp, state.params, g_global)
-            )(C.x, C.y, C.mask)
-            p = _aggregate(weights, p_k)
-            extra = 0.0
-            if hp.line_search:
-                # GIANT line search: one extra communication of function values
-                steps = jnp.array([4.0, 2.0, 1.0, 0.5, 0.25, 0.125, 0.0625])
-                vals = jax.vmap(
-                    lambda a: problem.global_loss(tm.tree_axpy(-a, p, state.params))
-                )(steps)
-                a = steps[jnp.argmin(vals)]
-                extra = float(d)
-            else:
-                a = jnp.asarray(1.0)
-            new_params = tm.tree_axpy(-a, p, state.params)
-            metrics = common_metrics(state.params, g_global, nan_stats, extra)
+            new_params, parts = _newton_round_core(
+                problem, hp, client_fn, R, state.params, C.x, C.y, C.mask,
+                C.weight, weights,
+            )
+            metrics = finalize_metrics(parts, comm)
             return state._replace(params=new_params, t=state.t + 1, rng=rng), metrics
 
         return round_fn
@@ -496,12 +675,10 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams):
     def round_fn(state: ServerState):
         rng, part_rng = jax.random.split(state.rng)
         weights = _participation_weights(problem, hp, part_rng)
-        g_global = problem.global_grad(state.params)
-        w_k = jax.vmap(
-            partial(_client_dane, problem, hp, state.params, g_global)
-        )(C.x, C.y, C.mask)
-        new_params = _aggregate(weights, w_k)
-        metrics = common_metrics(state.params, g_global, nan_stats)
+        new_params, parts = _dane_round_core(
+            problem, hp, R, state.params, C.x, C.y, C.mask, C.weight, weights,
+        )
+        metrics = finalize_metrics(parts, comm)
         return state._replace(params=new_params, t=state.t + 1, rng=rng), metrics
 
     return round_fn

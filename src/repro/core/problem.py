@@ -3,9 +3,10 @@
 A federated problem = a differentiable loss + K clients' data. To make K=100
 clients cheap under jit we keep client datasets *stacked*: every array leaf
 has leading axis K (padded to the largest client, with a per-sample mask), so
-per-client gradients are one ``vmap`` instead of a python loop, and the same
-code path runs sharded over mesh axes ("pod","data") in the distributed
-runtime (core/sharded.py).
+per-client gradients are one ``vmap`` instead of a python loop — and the
+stacked layout is exactly what core/sharded.py::make_sharded_round_fn
+partitions over the ("pod","data") mesh axes in the distributed runtime
+(the leading K axis must divide over those axes' sizes).
 """
 from __future__ import annotations
 

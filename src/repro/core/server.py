@@ -53,13 +53,34 @@ def run_federated(
     w0: Pytree | None = None,
     stop_rel_error: float | None = None,
     stop_grad_norm: float | None = None,
+    runtime: str = "vmap",
+    mesh=None,
 ) -> History:
+    """Iterate ``num_rounds`` of ``algo`` and collect the metric history.
+
+    runtime — "vmap" (default): the K clients are vmapped on one device;
+              "sharded": the client fan-out runs under shard_map over the
+              ("pod","data") axes of ``mesh`` (core/sharded.py). ``mesh``
+              defaults to launch/mesh.py::make_host_mesh() so the sharded
+              runtime is exercisable on a 1-device CPU.
+    """
+    if runtime not in ("vmap", "sharded"):
+        raise ValueError(f"unknown runtime {runtime!r}; choose 'vmap' or 'sharded'")
     if isinstance(rng, int):
         rng = jax.random.PRNGKey(rng)
     state = init_state(problem, rng, hp)
     if w0 is not None:
         state = state._replace(params=w0)
-    round_fn = jax.jit(make_round_fn(algo, problem, hp))
+    if runtime == "sharded":
+        from repro.core.sharded import make_sharded_round_fn
+
+        if mesh is None:
+            from repro.launch.mesh import make_host_mesh
+
+            mesh = make_host_mesh()
+        round_fn = jax.jit(make_sharded_round_fn(algo, problem, hp, mesh))
+    else:
+        round_fn = jax.jit(make_round_fn(algo, problem, hp))
 
     w_star_norm = None
     if w_star is not None:

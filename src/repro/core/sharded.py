@@ -1,0 +1,301 @@
+"""Distributed FL round runtime: the client fan-out under shard_map.
+
+``make_sharded_round_fn`` is the drop-in distributed twin of
+``core/algorithms.py::make_round_fn``: the same per-client bodies
+(``_client_svrg``, ``_client_scaffold``, ``_client_avg``, ``_client_lbfgs``,
+``_client_giant``, ``_client_newton_gmres``, ``_client_dane``) and the same
+round cores, but with the K stacked clients partitioned over the ("pod",
+"data") mesh axes of a launch/mesh.py mesh instead of vmapped on one device.
+
+How it maps:
+
+  * every [K, ...] client array (data, rngs, control variates, carried AA
+    history) enters the shard_map body sharded on its leading axis — each
+    shard vmaps over its K / n_shards local clients;
+  * every server quantity (params, server control variate, participation
+    weights already normalized on the host) enters replicated;
+  * all cross-client reductions — ``_aggregate`` deltas, the global gradient,
+    control-variate means, metric reductions — finish with a psum/pmax over
+    the client mesh axes (see ``ShardReduce``), inside the mapped body;
+  * per-client outputs (new c_k, carried history) leave sharded, aggregates
+    leave replicated.
+
+One jit of the returned round_fn therefore compiles the full round as a
+single XLA computation: no per-client Python loop, no host round-trips.
+On a 1-device ``make_host_mesh()`` every psum is an identity and the sharded
+round agrees with the vmap round to float precision from any given state
+(allclose rtol 1e-6 — tests/test_sharded_runtime.py; the shard_map boundary
+changes XLA fusion, so agreement is not bit-for-bit, and the ill-conditioned
+AA gram solve can amplify that last-ulp difference across many rounds).
+
+The unused "model" mesh axis (tensor parallelism for the LM workloads) is
+simply not mentioned in any spec: the round is replicated over it.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.algorithms import (
+    ALGORITHMS,
+    AlgoHParams,
+    CrossClientReduce,
+    ServerState,
+    _avg_round_core,
+    _client_giant,
+    _client_newton_gmres,
+    _dane_round_core,
+    _lbfgs_round_core,
+    _newton_round_core,
+    _participation_weights,
+    _scaffold_round_core,
+    _svrg_round_core,
+    comm_floats_per_round,
+    finalize_metrics,
+)
+from repro.core.problem import FLProblem
+from repro.utils import tree_math as tm
+from repro.utils.compat import shard_map
+
+#: mesh axes the client axis is partitioned over, slowest (inter-pod) first.
+CLIENT_MESH_AXES = ("pod", "data")
+
+
+class ShardReduce(CrossClientReduce):
+    """Cross-client reductions for the shard_map runtime.
+
+    Each method reduces over the *local* client slice exactly like the vmap
+    runtime, then finishes with a psum/pmax over the client mesh axes — so on
+    a 1-shard mesh the arithmetic is identical to CrossClientReduce.
+    """
+
+    def __init__(self, axes: tuple[str, ...]):
+        self.axes = axes
+
+    def wsum(self, weights, stacked, anchor=None):
+        if anchor is None:
+            return jax.tree.map(
+                lambda s: jax.lax.psum(jnp.tensordot(weights, s, axes=1), self.axes),
+                stacked,
+            )
+        return jax.tree.map(
+            lambda a, s: a + jax.lax.psum(
+                jnp.tensordot(weights, s - a[None], axes=1), self.axes
+            ),
+            anchor, stacked,
+        )
+
+    def nanmean(self, x):
+        finite = ~jnp.isnan(x)
+        total = jax.lax.psum(jnp.sum(jnp.where(finite, x, 0.0)), self.axes)
+        count = jax.lax.psum(jnp.sum(finite.astype(x.dtype)), self.axes)
+        return jnp.where(count > 0, total / jnp.maximum(count, 1), jnp.nan)
+
+    def nanmax(self, x):
+        m = jax.lax.pmax(jnp.max(jnp.where(jnp.isnan(x), -jnp.inf, x)), self.axes)
+        return jnp.where(jnp.isneginf(m), jnp.nan, m)
+
+
+def client_mesh_axes(mesh) -> tuple[str, ...]:
+    """The subset of ("pod","data") present in ``mesh``, slowest first."""
+    return tuple(a for a in CLIENT_MESH_AXES if a in mesh.axis_names)
+
+
+def num_client_shards(mesh, axes: tuple[str, ...] | None = None) -> int:
+    axes = client_mesh_axes(mesh) if axes is None else axes
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
+                          mesh, client_axes: tuple[str, ...] | None = None):
+    """Return a jittable round(state) -> (state, RoundMetrics) whose client
+    fan-out is shard_mapped over ``mesh``'s ("pod","data") axes.
+
+    Requires num_clients to divide evenly over the client shards (pad the
+    client stack with stack_client_arrays if it does not).
+    """
+    if algo not in ALGORITHMS:
+        raise ValueError(f"unknown algorithm {algo!r}; choose from {ALGORITHMS}")
+    axes = client_mesh_axes(mesh) if client_axes is None else tuple(client_axes)
+    if not axes:
+        raise ValueError(
+            f"mesh axes {mesh.axis_names} contain none of {CLIENT_MESH_AXES}; "
+            "build the mesh with launch/mesh.py"
+        )
+    n_shards = num_client_shards(mesh, axes)
+    C = problem.clients
+    K = C.num_clients
+    if K % n_shards != 0:
+        raise ValueError(
+            f"num_clients={K} does not divide over {n_shards} client shards "
+            f"(mesh axes {axes}); pad the client stack to a multiple"
+        )
+    R = ShardReduce(axes)
+    d = tm.tree_size(problem.init(jax.random.PRNGKey(0)))
+    comm = comm_floats_per_round(algo, d, hp.line_search)
+
+    csh = P(axes)   # leading (client) dim split over the client mesh axes
+    rep = P()       # replicated
+
+    def smap(body, in_specs, out_specs):
+        # check_vma off: the bodies close over `problem`/`hp` and batch psums
+        # under vmap (line search), which older jax replication checks reject.
+        return shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs,
+                         check_vma=False)
+
+    # ---------------- SVRG family ----------------
+    if algo in ("fedsvrg", "fedosaa_svrg"):
+        use_aa = algo == "fedosaa_svrg"
+
+        def round_fn(state: ServerState):
+            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
+            weights = _participation_weights(problem, hp, part_rng)
+            rngs = jax.random.split(cl_rng, K)
+            if hp.carry_history > 0 and state.hist_s is not None:
+                def body(w_t, x, y, mask, dw, pw, r, hs, hy):
+                    new_params, parts, new_hs, new_hy = _svrg_round_core(
+                        problem, hp, use_aa, R, w_t, x, y, mask, dw, pw, r,
+                        hs, hy)
+                    return new_params, parts, new_hs, new_hy
+
+                new_params, parts, new_hs, new_hy = smap(
+                    body,
+                    in_specs=(rep, csh, csh, csh, csh, csh, csh, csh, csh),
+                    out_specs=(rep, rep, csh, csh),
+                )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs,
+                  state.hist_s, state.hist_y)
+                return state._replace(params=new_params, t=state.t + 1,
+                                      rng=rng, hist_s=new_hs,
+                                      hist_y=new_hy), finalize_metrics(parts, comm)
+
+            def body(w_t, x, y, mask, dw, pw, r):
+                new_params, parts, _, _ = _svrg_round_core(
+                    problem, hp, use_aa, R, w_t, x, y, mask, dw, pw, r)
+                return new_params, parts
+
+            new_params, parts = smap(
+                body,
+                in_specs=(rep, csh, csh, csh, csh, csh, csh),
+                out_specs=(rep, rep),
+            )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs)
+            return state._replace(params=new_params, t=state.t + 1,
+                                  rng=rng), finalize_metrics(parts, comm)
+
+        return round_fn
+
+    # ---------------- SCAFFOLD family ----------------
+    if algo in ("scaffold", "fedosaa_scaffold"):
+        use_aa = algo == "fedosaa_scaffold"
+
+        def round_fn(state: ServerState):
+            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
+            weights = _participation_weights(problem, hp, part_rng)
+            rngs = jax.random.split(cl_rng, K)
+
+            def body(w_t, c, x, y, mask, c_k, dw, pw, r):
+                return _scaffold_round_core(
+                    problem, hp, use_aa, R, w_t, c, x, y, mask, c_k, dw, pw, r)
+
+            new_params, new_c, new_c_k, parts = smap(
+                body,
+                in_specs=(rep, rep, csh, csh, csh, csh, csh, csh, csh),
+                out_specs=(rep, rep, csh, rep),
+            )(state.params, state.c, C.x, C.y, C.mask, state.c_k, C.weight,
+              weights, rngs)
+            return (
+                state._replace(params=new_params, c=new_c, c_k=new_c_k,
+                               t=state.t + 1, rng=rng),
+                finalize_metrics(parts, comm),
+            )
+
+        return round_fn
+
+    # ---------------- AVG family (incl. negative control) ----------------
+    if algo in ("fedavg", "fedosaa_avg"):
+        use_aa = algo == "fedosaa_avg"
+
+        def round_fn(state: ServerState):
+            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
+            weights = _participation_weights(problem, hp, part_rng)
+            rngs = jax.random.split(cl_rng, K)
+
+            def body(w_t, x, y, mask, dw, pw, r):
+                return _avg_round_core(
+                    problem, hp, use_aa, R, w_t, x, y, mask, dw, pw, r)
+
+            new_params, parts = smap(
+                body,
+                in_specs=(rep, csh, csh, csh, csh, csh, csh),
+                out_specs=(rep, rep),
+            )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs)
+            return state._replace(params=new_params, t=state.t + 1,
+                                  rng=rng), finalize_metrics(parts, comm)
+
+        return round_fn
+
+    # ---------------- one-step L-BFGS ----------------
+    if algo == "lbfgs":
+
+        def round_fn(state: ServerState):
+            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
+            weights = _participation_weights(problem, hp, part_rng)
+            rngs = jax.random.split(cl_rng, K)
+
+            def body(w_t, x, y, mask, dw, pw, r):
+                return _lbfgs_round_core(
+                    problem, hp, R, w_t, x, y, mask, dw, pw, r)
+
+            new_params, parts = smap(
+                body,
+                in_specs=(rep, csh, csh, csh, csh, csh, csh),
+                out_specs=(rep, rep),
+            )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs)
+            return state._replace(params=new_params, t=state.t + 1,
+                                  rng=rng), finalize_metrics(parts, comm)
+
+        return round_fn
+
+    # ---------------- Newton-type ----------------
+    if algo in ("giant", "newton_gmres"):
+        client_fn = _client_giant if algo == "giant" else _client_newton_gmres
+
+        def round_fn(state: ServerState):
+            rng, part_rng = jax.random.split(state.rng)
+            weights = _participation_weights(problem, hp, part_rng)
+
+            def body(w_t, x, y, mask, dw, pw):
+                return _newton_round_core(
+                    problem, hp, client_fn, R, w_t, x, y, mask, dw, pw)
+
+            new_params, parts = smap(
+                body,
+                in_specs=(rep, csh, csh, csh, csh, csh),
+                out_specs=(rep, rep),
+            )(state.params, C.x, C.y, C.mask, C.weight, weights)
+            return state._replace(params=new_params, t=state.t + 1,
+                                  rng=rng), finalize_metrics(parts, comm)
+
+        return round_fn
+
+    # ---------------- DANE ----------------
+    assert algo == "dane"
+
+    def round_fn(state: ServerState):
+        rng, part_rng = jax.random.split(state.rng)
+        weights = _participation_weights(problem, hp, part_rng)
+
+        def body(w_t, x, y, mask, dw, pw):
+            return _dane_round_core(problem, hp, R, w_t, x, y, mask, dw, pw)
+
+        new_params, parts = smap(
+            body,
+            in_specs=(rep, csh, csh, csh, csh, csh),
+            out_specs=(rep, rep),
+        )(state.params, C.x, C.y, C.mask, C.weight, weights)
+        return state._replace(params=new_params, t=state.t + 1,
+                              rng=rng), finalize_metrics(parts, comm)
+
+    return round_fn

@@ -5,10 +5,16 @@ meshes — 16×16 single-pod and 2×16×16 multi-pod — with ShapeDtypeStruct
 inputs (no allocation), and records memory/cost/collective statistics for the
 roofline analysis (deliverable g).
 
+Also dry-runs the distributed FL round (core/sharded.py): compiles one
+shard_mapped FedOSAA round with the clients partitioned over the ("pod",
+"data") mesh axes and executes it on the emulated host devices.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all              # 40 pairs, single-pod
   PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod  # 40 pairs, 512 chips
+  PYTHONPATH=src python -m repro.launch.dryrun --fl-round fedosaa_svrg --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --fl-round all --multi-pod
 """
 # The VERY FIRST lines, before ANY other import: jax locks the device count
 # at first init, and the dry-run needs 512 placeholder host devices.
@@ -80,6 +86,15 @@ def collective_bytes(hlo_text: str) -> dict:
         out[op] = out.get(op, 0) + _shape_bytes(shape_txt)
         out[op + "_count"] = out.get(op + "_count", 0) + 1
     return out
+
+
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis(), normalized: older jax returns one dict per
+    program in a list, newer returns the dict directly."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
 
 
 def _named(tree_specs, mesh):
@@ -170,7 +185,7 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
     compiled = lowered.compile()
     result["compile_s"] = round(time.time() - t0, 1)
 
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     result["flops"] = float(cost.get("flops", 0.0))
     result["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
     try:
@@ -202,13 +217,58 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
         )
         aa_lowered = aa.lower(p_shape, p_shape, s_shape, s_shape)
         aa_compiled = aa_lowered.compile()
-        aa_cost = aa_compiled.cost_analysis() or {}
+        aa_cost = _cost_dict(aa_compiled)
         result["aa_step"] = {
             "flops": float(aa_cost.get("flops", 0.0)),
             "bytes_accessed": float(aa_cost.get("bytes accessed", 0.0)),
             "collectives": collective_bytes(aa_compiled.as_text()),
         }
     return result
+
+
+def dryrun_fl_round(algo: str, multi_pod: bool = False,
+                    num_clients: int = 64, n: int = 2048) -> dict:
+    """Compile + execute one shard_mapped FL round on the production mesh.
+
+    Uses a synthetic logistic-regression problem (the paper's workload) with
+    the K clients partitioned over the mesh's ("pod","data") axes; num_clients
+    must divide over those axes (64 covers both 16 and 2x16 client shards).
+    """
+    from repro.core import AlgoHParams, init_state
+    from repro.core.sharded import make_sharded_round_fn, num_client_shards
+    from repro.data import make_binary_classification, partition
+    from repro.models.logreg import make_logreg_problem
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    X, y = make_binary_classification("synthetic_small", n=n, seed=0)
+    clients = partition(X, y, num_clients=num_clients, scheme="iid")
+    problem = make_logreg_problem(clients, gamma=1e-3)
+    hp = AlgoHParams(eta=0.5, local_epochs=3)
+    state = init_state(problem, jax.random.PRNGKey(0), hp)
+    round_fn = jax.jit(make_sharded_round_fn(algo, problem, hp, mesh))
+    compiled = round_fn.lower(state).compile()
+    compile_s = time.time() - t0
+
+    t0 = time.time()
+    state, metrics = round_fn(state)
+    jax.block_until_ready(metrics.loss)
+    run_s = time.time() - t0
+
+    cost = _cost_dict(compiled)
+    return {
+        "fl_round": algo,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "client_shards": num_client_shards(mesh),
+        "num_clients": num_clients,
+        "compile_s": round(compile_s, 1),
+        "run_s": round(run_s, 2),
+        "loss": float(metrics.loss),
+        "comm_floats": float(metrics.comm_floats),
+        "flops": float(cost.get("flops", 0.0)),
+        "collectives": collective_bytes(compiled.as_text()),
+    }
 
 
 def main() -> None:
@@ -218,7 +278,34 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--no-aa", action="store_true")
+    ap.add_argument("--fl-round", type=str, default="",
+                    help="dry-run a shard_mapped FL round of this algorithm "
+                         "('all' = the two headline FedOSAA variants)")
     args = ap.parse_args()
+
+    if args.fl_round:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        algos = (["fedosaa_svrg", "fedosaa_scaffold"]
+                 if args.fl_round == "all" else [args.fl_round])
+        failures = []
+        for algo in algos:
+            tag = (f"fl_round__{algo}__"
+                   f"{'2x16x16' if args.multi_pod else '16x16'}")
+            try:
+                res = dryrun_fl_round(algo, args.multi_pod)
+                with open(os.path.join(RESULTS_DIR, tag + ".json"), "w") as f:
+                    json.dump(res, f, indent=1)
+                print(f"OK   {tag}: compile={res['compile_s']}s "
+                      f"run={res['run_s']}s loss={res['loss']:.4f} "
+                      f"ar={res['collectives'].get('all-reduce_count', 0)}")
+            except Exception as e:
+                failures.append(tag)
+                print(f"FAIL {tag}: {e}")
+                traceback.print_exc()
+        if failures:
+            raise SystemExit(1)
+        print("fl-round dry-runs passed")
+        return
 
     os.makedirs(RESULTS_DIR, exist_ok=True)
     combos = []

@@ -38,6 +38,13 @@ def main() -> None:
     ap.add_argument("--eta", type=float, default=0.3)
     ap.add_argument("--local-epochs", type=int, default=5)
     ap.add_argument("--damping", type=float, default=1.0)
+    ap.add_argument("--runtime", choices=("vmap", "sharded"), default="vmap",
+                    help="'sharded' shard_maps the client fan-out over the "
+                         "('pod','data') mesh axes (core/sharded.py)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="with --runtime sharded: use the 2x16x16 two-pod "
+                         "mesh instead of the single-pod 16x16 (requires "
+                         "enough devices, e.g. the dryrun host-device env)")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
 
@@ -55,11 +62,30 @@ def main() -> None:
     from repro.core.anderson import AAConfig
     hp = AlgoHParams(eta=args.eta, local_epochs=args.local_epochs,
                      aa=AAConfig(damping=args.damping, tikhonov=1e-8))
+
+    mesh = None
+    if args.runtime == "sharded":
+        from repro.core.sharded import num_client_shards
+        from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+        needed = 512 if args.multi_pod else 256
+        mesh = (make_production_mesh(multi_pod=args.multi_pod)
+                if jax.device_count() >= needed else make_host_mesh())
+        shards = num_client_shards(mesh)
+        if args.clients % shards:
+            ap.error(
+                f"--clients {args.clients} must divide over the {shards} "
+                f"client shards of the {dict(mesh.shape)} mesh; use "
+                f"--clients {shards} or a multiple"
+            )
+        print(f"sharded runtime on mesh {dict(mesh.shape)}")
+
     results = {}
     algos = [args.algo] + ([args.baseline] if args.baseline else [])
     for algo in algos:
         t0 = time.time()
-        h = run_federated(problem, algo, hp, args.rounds)
+        h = run_federated(problem, algo, hp, args.rounds,
+                          runtime=args.runtime, mesh=mesh)
         results[algo] = {
             "loss_curve": [float(v) for v in h.loss],
             "grad_norm_curve": [float(v) for v in h.grad_norm],

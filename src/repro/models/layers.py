@@ -399,7 +399,7 @@ def moe_sharded(p: dict, x: jax.Array, cfg, sh: Sharder,
         batch_ax, batch_tuple = None, ()
 
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.utils.compat import shard_map
 
     def local_fn(router_w, wig, wiu, wo, xl):
         Bl, Sl, d = xl.shape

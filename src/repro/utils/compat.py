@@ -1,0 +1,45 @@
+"""Version-tolerant shims for fast-moving jax APIs.
+
+``shard_map`` has lived in three places across jax releases:
+
+  * jax <= 0.4.x      — ``jax.experimental.shard_map.shard_map`` with a
+                        ``check_rep`` kwarg;
+  * jax >= 0.5/0.6    — promoted to top-level ``jax.shard_map``, with the
+                        replication check renamed to ``check_vma``.
+
+Every shard_map call site in this repo (models/layers.py expert-parallel MoE,
+core/sharded.py distributed FL round) goes through this wrapper so version
+drift is absorbed in exactly one place.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+try:  # jax >= 0.5: top-level export
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(
+    f: Callable,
+    mesh: Any,
+    in_specs: Any,
+    out_specs: Any,
+    check_vma: bool = True,
+) -> Callable:
+    """Call jax's shard_map, normalizing the replication-check kwarg name.
+
+    Accepts the new-API name (``check_vma``); older jax spells it
+    ``check_rep``. Everything else is passed through unchanged.
+    """
+    try:
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    except TypeError:
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma,
+        )

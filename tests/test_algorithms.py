@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import AlgoHParams, init_state, make_round_fn, run_federated, solve_reference
-from repro.core.algorithms import ALGORITHMS, COMM_TABLE
+from repro.core.algorithms import ALGORITHMS, COMM_TABLE, comm_floats_per_round
 from repro.data import make_binary_classification, partition
 from repro.models.logreg import make_logreg_problem
 from repro.utils import tree_math as tm
@@ -142,6 +142,38 @@ class TestMechanics:
             _, m = fn(state)
             _, units = COMM_TABLE[algo]
             assert float(m.comm_floats) == pytest.approx(units * d), algo
+            assert float(m.comm_floats) == pytest.approx(
+                comm_floats_per_round(algo, d)), algo
+
+    def test_comm_table_audit(self):
+        """Paper Table 1 audit: both CommCost fields carry meaning and are
+        mutually consistent — algorithms that need ∇f(w^t) before local work
+        (SVRG family + every second-order method) pay 2 round trips AND ship
+        2d uplink floats; SCAFFOLD piggybacks its 2d on a single exchange."""
+        needs_global_grad = {"fedsvrg", "fedosaa_svrg", "lbfgs", "giant",
+                             "newton_gmres", "dane"}
+        for algo in ALGORITHMS:
+            cost = COMM_TABLE[algo]
+            assert cost.round_trips == (2 if algo in needs_global_grad else 1), algo
+            expected_units = 1.0 if algo in ("fedavg", "fedosaa_avg") else 2.0
+            assert cost.float_units == expected_units, algo
+
+    @pytest.mark.parametrize("algo", ["giant", "newton_gmres"])
+    def test_comm_accounting_line_search_extra(self, logreg, algo):
+        """The GIANT backtracking path broadcasts the aggregated direction —
+        exactly d extra floats on top of the Table 1 units."""
+        prob, _ = logreg
+        d = 40
+        hp = AlgoHParams(local_epochs=2, line_search=True)
+        state = init_state(prob, jax.random.PRNGKey(0))
+        _, m = jax.jit(make_round_fn(algo, prob, hp))(state)
+        _, units = COMM_TABLE[algo]
+        assert float(m.comm_floats) == pytest.approx((units + 1) * d)
+        assert float(m.comm_floats) == pytest.approx(
+            comm_floats_per_round(algo, d, line_search=True))
+        # line_search on a non-Newton algorithm must NOT charge the extra d
+        assert comm_floats_per_round("fedavg", d, line_search=True) == \
+            pytest.approx(1.0 * d)
 
     def test_line_search_giant(self, logreg):
         prob, wstar = logreg
