@@ -33,19 +33,27 @@ def logreg_setup(
     scheme: str = "iid",
     gamma: float = 1e-3,
     seed: int = 0,
+    dtype: str = "float32",
 ):
+    """dtype="float64" (requires jax_enable_x64, see ext_compression.py)
+    removes the ~1e-5 f32 fixed-point floor of the local-step methods for
+    benchmarks that chase the paper's deep rel-error targets."""
+    import jax.numpy as jnp
+
     X, y = make_binary_classification(dataset, n=n, seed=seed)
     clients = partition(X, y, num_clients=k, scheme=scheme, seed=seed)
-    prob = make_logreg_problem(clients, gamma=gamma)
+    prob = make_logreg_problem(clients, gamma=gamma, dtype=jnp.dtype(dtype))
     wstar = solve_reference(prob, iters=100)
     return prob, wstar
 
 
 def bench_algo(
-    prob, wstar, algo: str, hp: AlgoHParams, rounds: int, label: str
+    prob, wstar, algo: str, hp: AlgoHParams, rounds: int, label: str,
+    channel=None, stop_rel_error: float | None = None, runtime: str = "vmap",
 ) -> dict:
     t0 = time.perf_counter()
-    h = run_federated(prob, algo, hp, rounds, w_star=wstar)
+    h = run_federated(prob, algo, hp, rounds, w_star=wstar, channel=channel,
+                      stop_rel_error=stop_rel_error, runtime=runtime)
     wall = time.perf_counter() - t0
     n_rounds = len(h.rounds)
     return {
@@ -56,6 +64,10 @@ def bench_algo(
         "rounds": n_rounds,
         "final_loss": float(h.loss[-1]),
         "final_grad_norm": float(h.grad_norm[-1]),
+        "channel": h.channel,
+        "comm_bytes": float(h.comm_bytes[-1]),
+        # fp32-equivalent floats (bytes/4): the paper's Table 1 unit, kept so
+        # historical result files stay comparable
         "comm_floats": float(h.comm_floats[-1]),
         "rel_error_curve": [float(v) for v in h.rel_error],
         "loss_curve": [float(v) for v in h.loss],

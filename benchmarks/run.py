@@ -28,6 +28,7 @@ MODULES = [
     "fig8_nn",
     "ext_stability",      # beyond-paper: damping/filtering/moving-average
     "ext_carry_history",  # beyond-paper: cross-round AA history (App. A opt. 1)
+    "ext_compression",    # beyond-paper: wire codecs × algorithms (repro/comm)
     "lm_fedosaa",         # beyond-paper: FedOSAA on a transformer LM
     "roofline",           # deliverable g: derived from the dry-run artifacts
 ]

@@ -18,6 +18,12 @@ def main():
     ap.add_argument("--scheme", default="iid",
                     choices=["iid", "imbalance", "label_skew"])
     ap.add_argument("--rounds", type=int, default=15)
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="fraction of clients active per round (<1.0 draws a "
+                         "Bernoulli subset each round)")
+    ap.add_argument("--comm-codec", default="identity",
+                    help="wire-compression channel (repro/comm): identity | "
+                         "bf16 | int8 | topk[:ratio] ...")
     args = ap.parse_args()
 
     X, y = make_binary_classification("covtype", n=10_000, seed=0)
@@ -27,9 +33,11 @@ def main():
     w_star = solve_reference(problem)
 
     eta = 0.5 if args.scheme == "label_skew" else 1.0
-    hp = AlgoHParams(eta=eta, local_epochs=10)
+    hp = AlgoHParams(eta=eta, local_epochs=10,
+                     participation=args.participation)
     for algo in ALGOS:
-        h = run_federated(problem, algo, hp, args.rounds, w_star=w_star)
+        h = run_federated(problem, algo, hp, args.rounds, w_star=w_star,
+                          channel=args.comm_codec)
         print(h.summary())
 
 

@@ -15,3 +15,8 @@ else
 fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+# Benchmark smoke: every wire codec (repro/comm) runs end-to-end on a tiny
+# config and int8 stays on the fp32 convergence track — codec regressions
+# fail CI here instead of surviving until the full benchmark run.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.ext_compression --smoke

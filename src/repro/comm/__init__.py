@@ -1,0 +1,22 @@
+"""Pluggable wire-compression subsystem for the FL runtimes.
+
+``make_channel("int8")`` → a CommChannel whose uplink codec, broadcast codec
+and error-feedback policy the round cores (core/algorithms.py) and both
+runtimes (vmap + core/sharded.py) honor, with byte-accurate per-round cost
+accounting replacing the historical fp32 float counting.
+"""
+from repro.comm.channel import (  # noqa: F401
+    CODECS,
+    IDENTITY_CHANNEL,
+    CommChannel,
+    make_channel,
+)
+from repro.comm.codecs import (  # noqa: F401
+    Bf16Codec,
+    Codec,
+    Fp32Codec,
+    IdentityCodec,
+    Int8SRCodec,
+    TopKCodec,
+    parse_codec,
+)

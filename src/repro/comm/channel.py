@@ -1,0 +1,137 @@
+"""CommChannel: the client↔server wire of a federated round.
+
+A channel pairs an uplink codec (client→server: local deltas, gradients,
+control variates) with a broadcast codec (server→client: w^t, ∇f) and a
+client-side error-feedback policy. The round cores in core/algorithms.py pass
+every uplink through ``CrossClientReduce.uplink``/``uplink_ef`` and every
+broadcast through ``CrossClientReduce.broadcast``, so the SAME channel drives
+both the vmap and the shard_map runtimes (the encoded representation is what
+crosses the mesh: the psum reduces dequantized values).
+
+Error feedback (Seide et al. 2014 / EF-SGD): the compression residual
+e_k ← u_k − decode(encode(u_k)) is kept ON THE CLIENT (carried in
+ServerState.comm, per-client buffers with leading axis K) and added to the
+next round's upload, so biased codecs (topk) still converge to the exact
+optimum and unbiased ones (int8-SR) lose no signal to quantization noise
+accumulation. Absolute-state uploads additionally carry a difference-coding
+reference there (see ServerState.comm / CrossClientReduce.uplink).
+
+Byte accounting convention (matches the historical float counting): a round
+costs ``float_units × uplink_bytes(params)`` — Table 1's client-uplink units,
+now codec-exact — plus one ``downlink_bytes`` for the GIANT line-search extra
+broadcast. Per-client scalar uplinks (losses, AA stats) are ignored, as the
+paper's Table 1 ignores them. The identity channel therefore reproduces the
+old counters exactly: comm_bytes == 4 × comm_floats.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.comm.codecs import CODECS, Codec, IdentityCodec, parse_codec
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CommChannel:
+    """up — uplink codec; down — broadcast codec (must be deterministic);
+    error_feedback — carry per-client compression residuals across rounds."""
+
+    up: Codec = IdentityCodec()
+    down: Codec = IdentityCodec()
+    error_feedback: bool = False
+
+    def __post_init__(self):
+        if not self.down.deterministic:
+            raise ValueError(
+                f"broadcast codec {self.down} is stochastic; clients cannot "
+                "reproduce the server's draws — use identity/fp32/bf16 downlink"
+            )
+        if self.down.delta_only:
+            raise ValueError(
+                f"broadcast codec {self.down} is delta-only, but the downlink "
+                "carries absolute state (w^t, ∇f) — sparsifying it floors "
+                "convergence; use identity/fp32/bf16 downlink"
+            )
+
+    @property
+    def name(self) -> str:
+        tag = f"{self.up}"
+        if self.error_feedback:
+            tag += "+ef"
+        if not isinstance(self.down, IdentityCodec):
+            tag += f"/{self.down}"
+        return tag
+
+    @property
+    def is_identity(self) -> bool:
+        return (isinstance(self.up, IdentityCodec)
+                and isinstance(self.down, IdentityCodec))
+
+    def up_codec(self, kind: str = "delta") -> Codec:
+        """The codec an uplink of ``kind`` actually travels through.
+
+        kind="delta": quantities that vanish at the optimum (model deltas,
+        Newton directions) — always the configured uplink codec.
+        kind="aux": absolute-state uploads (gradient collection, SCAFFOLD
+        control variates) — fp32 for delta-only codecs (see Codec.delta_only).
+        """
+        if kind == "aux" and self.up.delta_only:
+            return IdentityCodec()
+        return self.up
+
+    # ---- wire simulation ---------------------------------------------------
+    # (uplinks go through CrossClientReduce.uplink, which owns the error-
+    # feedback / difference-coding state — there is deliberately no bare
+    # uplink roundtrip here that would bypass it)
+    def broadcast(self, tree: Pytree) -> Pytree:
+        """A server broadcast as every client decodes it (deterministic)."""
+        return self.down.tree_roundtrip(tree)
+
+    # ---- exact per-exchange byte costs --------------------------------------
+    def uplink_bytes(self, tree: Pytree, kind: str = "delta") -> int:
+        return self.up_codec(kind).tree_bytes(tree)
+
+    def downlink_bytes(self, tree: Pytree) -> int:
+        return self.down.tree_bytes(tree)
+
+
+IDENTITY_CHANNEL = CommChannel()
+
+
+def make_channel(spec: "str | CommChannel | None") -> CommChannel:
+    """Parse a ``--comm-codec`` spec into a channel.
+
+    Grammar: ``up[+ef|+noef][/down]`` with up/down from ``codecs.parse_codec``
+    (e.g. ``int8``, ``topk:0.05``, ``int8+noef``, ``bf16/bf16``). Error
+    feedback defaults ON for lossy uplinks other than bf16 (whose roundtrip
+    error is a deterministic last-ulp rounding) and OFF otherwise.
+    """
+    if spec is None:
+        return IDENTITY_CHANNEL
+    if isinstance(spec, CommChannel):
+        return spec
+    up_spec, _, down_spec = spec.partition("/")
+    ef = None
+    if up_spec.endswith("+ef"):
+        up_spec, ef = up_spec[:-3], True
+    elif up_spec.endswith("+noef"):
+        up_spec, ef = up_spec[:-5], False
+    up = parse_codec(up_spec)
+    down = parse_codec(down_spec) if down_spec else IdentityCodec()
+    if ef is None:
+        # fp32/bf16 roundtrip error is a deterministic last-ulp rounding —
+        # not worth a carried residual; int8/topk default to EF
+        ef = up.lossy and up.name not in ("bf16", "fp32")
+    return CommChannel(up=up, down=down, error_feedback=ef)
+
+
+__all__ = [
+    "CODECS",
+    "CommChannel",
+    "IDENTITY_CHANNEL",
+    "make_channel",
+]

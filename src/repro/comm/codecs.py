@@ -1,0 +1,197 @@
+"""Wire codecs for the FL communication channel (repro/comm).
+
+A codec models what one client↔server exchange of a parameter-sized pytree
+costs (``wire_bytes``) and loses (``roundtrip``). Codecs are frozen,
+hashable dataclasses so round functions can close over them under jit, and
+every ``roundtrip`` is a pure jax function that the round cores vmap over the
+client axis — identical under the vmap and shard_map runtimes.
+
+  identity — fp32 on the wire, lossless (the repo's historical model)
+  bf16     — round-to-nearest bfloat16, 2 bytes/value, deterministic
+  int8     — per-chunk-scaled stochastic-rounding int8 (kernels/quant/):
+             unbiased, 1 byte/value + one f32 scale per ``chunk`` values
+  topk     — magnitude top-k sparsification: k = ceil(ratio·n) per leaf,
+             (f32 value, int32 index) pairs on the wire, deterministic
+
+``wire_bytes`` is static (shape-only), which is what makes the per-round byte
+accounting exact rather than sampled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.quant.ops import chunk_rows, int8_sr_roundtrip
+from repro.kernels.quant.quant import DEFAULT_CHUNK
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """Base: the identity (fp32) wire format."""
+
+    name = "identity"
+    #: deterministic codecs never consume rng and may sit on the broadcast
+    #: (server→client) leg of a channel; stochastic ones are uplink-only.
+    deterministic = True
+    #: lossy codecs default to error feedback on the delta uplink.
+    lossy = False
+    #: delta-only codecs apply to uploads that vanish at the optimum (model
+    #: deltas, Newton directions) but NOT to absolute-state uploads (gradient
+    #: collection, SCAFFOLD control variates) — sparsifying those leaves an
+    #: O(1) noise floor even under error feedback (heterogeneous clients keep
+    #: O(1) local gradients at w*, so the dropped mass never shrinks; measured:
+    #: fedsvrg stalls at rel-err ~0.2 with topk'd gradients). Channels route
+    #: absolute uploads of a delta-only codec through fp32 and charge the
+    #: bytes accordingly.
+    delta_only = False
+
+    def roundtrip(self, leaf: jax.Array, rng: jax.Array | None = None) -> jax.Array:
+        """encode+decode of one leaf: what the server sees of the upload."""
+        return leaf
+
+    def wire_bytes(self, shape, dtype=jnp.float32) -> int:
+        """Exact bytes on the wire for one leaf of this shape."""
+        return int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+
+    def tree_roundtrip(self, tree: Pytree, rng: jax.Array | None = None) -> Pytree:
+        """Leaf-wise roundtrip; stochastic codecs fold the leaf index into rng
+        so no two leaves share draws."""
+        if self.deterministic:
+            return jax.tree.map(self.roundtrip, tree)
+        leaves, treedef = jax.tree.flatten(tree)
+        out = [self.roundtrip(leaf, jax.random.fold_in(rng, i))
+               for i, leaf in enumerate(leaves)]
+        return jax.tree.unflatten(treedef, out)
+
+    def tree_bytes(self, tree: Pytree) -> int:
+        """Exact bytes for one upload/broadcast of a whole pytree."""
+        return sum(self.wire_bytes(l.shape, l.dtype) for l in jax.tree.leaves(tree))
+
+    def __str__(self) -> str:
+        return self.name
+
+
+@dataclasses.dataclass(frozen=True)
+class IdentityCodec(Codec):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Fp32Codec(Codec):
+    """Round to float32 on the wire: 4 bytes/value.
+
+    Identical to ``identity`` when the compute dtype is f32 (the default
+    everywhere); under f64 compute (jax_enable_x64 benchmarks) it models the
+    realistic 'full-precision' wire — fp32 floats — without pretending the
+    wire ships f64.
+    """
+
+    name = "fp32"
+    lossy = True
+
+    def roundtrip(self, leaf, rng=None):
+        return leaf.astype(jnp.float32).astype(leaf.dtype)
+
+    def wire_bytes(self, shape, dtype=jnp.float32):
+        return int(np.prod(shape, dtype=np.int64)) * 4
+
+
+@dataclasses.dataclass(frozen=True)
+class Bf16Codec(Codec):
+    name = "bf16"
+    lossy = True
+
+    def roundtrip(self, leaf, rng=None):
+        return leaf.astype(jnp.bfloat16).astype(leaf.dtype)
+
+    def wire_bytes(self, shape, dtype=jnp.float32):
+        return int(np.prod(shape, dtype=np.int64)) * 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8SRCodec(Codec):
+    """Per-chunk-scaled stochastic-rounding int8 (kernels/quant/).
+
+    Unbiased: E[roundtrip(x)] = x with |error| < max|x_chunk|/127 — the error
+    scale shrinks with the upload itself, so SVRG-family methods keep their
+    linear convergence under quantization (benchmarks/ext_compression.py).
+    """
+
+    name = "int8"
+    deterministic = False
+    lossy = True
+    chunk: int = DEFAULT_CHUNK
+
+    def roundtrip(self, leaf, rng=None):
+        flat = leaf.reshape(-1).astype(jnp.float32)
+        dec = int8_sr_roundtrip(flat, rng, chunk=self.chunk)
+        return dec.reshape(leaf.shape).astype(leaf.dtype)
+
+    def wire_bytes(self, shape, dtype=jnp.float32):
+        n = int(np.prod(shape, dtype=np.int64))
+        return n + 4 * chunk_rows(n, self.chunk)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCodec(Codec):
+    """Keep the k = ceil(ratio·n) largest-magnitude entries per leaf.
+
+    Biased (everything else is dropped), so it NEEDS the channel's error
+    feedback to converge — the dropped mass is re-injected next round.
+    """
+
+    name = "topk"
+    lossy = True
+    delta_only = True
+    ratio: float = 0.01
+
+    def __post_init__(self):
+        if not 0.0 < self.ratio <= 1.0:
+            raise ValueError(f"topk ratio must be in (0, 1], got {self.ratio}")
+
+    def k_for(self, n: int) -> int:
+        return min(n, max(1, math.ceil(self.ratio * n)))
+
+    def roundtrip(self, leaf, rng=None):
+        flat = leaf.reshape(-1)
+        k = self.k_for(flat.shape[0])
+        vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+        # kept values ship as f32 (what wire_bytes charges), whatever the
+        # compute dtype
+        kept = flat[idx].astype(jnp.float32).astype(flat.dtype)
+        dec = jnp.zeros_like(flat).at[idx].set(kept)
+        return dec.reshape(leaf.shape)
+
+    def wire_bytes(self, shape, dtype=jnp.float32):
+        # one (f32 value, int32 index) pair per kept entry
+        return self.k_for(int(np.prod(shape, dtype=np.int64))) * 8
+
+    def __str__(self) -> str:
+        return f"topk:{self.ratio:g}"
+
+
+#: registry for the ``--comm-codec`` spec strings (see parse_codec)
+CODECS = ("identity", "fp32", "bf16", "int8", "topk")
+
+
+def parse_codec(spec: str) -> Codec:
+    """'identity' | 'fp32' | 'bf16' | 'int8[:chunk]' | 'topk[:ratio]' -> Codec."""
+    name, _, param = spec.partition(":")
+    if name == "identity":
+        return IdentityCodec()
+    if name == "fp32":
+        return Fp32Codec()
+    if name == "bf16":
+        return Bf16Codec()
+    if name == "int8":
+        return Int8SRCodec(chunk=int(param)) if param else Int8SRCodec()
+    if name == "topk":
+        return TopKCodec(ratio=float(param)) if param else TopKCodec()
+    raise ValueError(f"unknown codec {name!r}; choose from {CODECS}")

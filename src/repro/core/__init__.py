@@ -13,10 +13,12 @@ from repro.core.algorithms import (  # noqa: F401
     CommCost,
     RoundMetrics,
     ServerState,
+    comm_bytes_per_round,
     comm_floats_per_round,
     init_state,
     make_round_fn,
 )
+from repro.comm import CommChannel, make_channel  # noqa: F401
 from repro.core.sharded import make_sharded_round_fn  # noqa: F401
 from repro.core.problem import (  # noqa: F401
     ClientBatch,

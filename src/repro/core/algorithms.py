@@ -38,6 +38,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.comm import CommChannel, IDENTITY_CHANNEL, IdentityCodec, make_channel
 from repro.core.anderson import AAConfig, AAStats, lbfgs_two_loop, multisecant_update, trajectory_to_sy
 from repro.core.problem import ClientBatch, FLProblem, sample_minibatch
 from repro.utils import tree_math as tm
@@ -66,6 +67,22 @@ class CommCost(NamedTuple):
     round_trips: int
     float_units: float
 
+    def bytes_per_round(self, params: Pytree, channel: CommChannel,
+                        extra_broadcasts: int = 0) -> float:
+        """Exact bytes on the wire for one round through ``channel``.
+
+        Table 1's first uplink unit is the model delta / direction (always
+        the uplink codec); units beyond 1 are absolute-state uploads
+        (gradients, control variates) and pay the aux rate — fp32 when the
+        codec is delta-only (topk). ``extra_broadcasts`` counts additional
+        downlink d-vectors (the GIANT line-search direction) at the broadcast
+        codec's cost. The identity channel reproduces the historical float
+        counting exactly: bytes == 4 × floats.
+        """
+        return (channel.uplink_bytes(params, kind="delta")
+                + (self.float_units - 1.0) * channel.uplink_bytes(params, kind="aux")
+                + extra_broadcasts * channel.downlink_bytes(params))
+
 
 COMM_TABLE = {
     "fedavg":           CommCost(1, 1.0),
@@ -93,6 +110,21 @@ def comm_floats_per_round(algo: str, d: int, line_search: bool = False) -> float
     return cost.float_units * d + extra
 
 
+def comm_bytes_per_round(algo: str, params: Pytree,
+                         channel: "CommChannel | str | None" = None,
+                         line_search: bool = False) -> float:
+    """Bytes on the wire for one round of ``algo`` through ``channel``.
+
+    Codec-exact: int8 pays 1 byte/value plus one f32 scale per chunk, topk
+    pays 8 bytes per kept entry, etc. (repro/comm). Same conventions as
+    ``comm_floats_per_round`` — client-uplink units from Table 1, plus the
+    GIANT line-search extra broadcast; per-client scalar uplinks ignored.
+    """
+    channel = make_channel(channel)
+    extra = 1 if (line_search and algo in ("giant", "newton_gmres")) else 0
+    return COMM_TABLE[algo].bytes_per_round(params, channel, extra)
+
+
 @dataclasses.dataclass(frozen=True)
 class AlgoHParams:
     """Tuning knobs shared by all algorithms (paper §4 / Appendix D.1)."""
@@ -117,6 +149,16 @@ class ServerState(NamedTuple):
     rng: jax.Array
     hist_s: Pytree = None   # [K, H, ...] carried AA columns (App. A opt. 1)
     hist_y: Pytree = None
+    comm: Pytree = None     # client-side wire-compression state (repro/comm):
+                            # {"delta": {...}, "aux": {...}} with per-client
+                            # [K, ...] buffers per uplink kind —
+                            #   "ef":  error-feedback residuals, re-injected
+                            #          into the next upload (lossy codecs)
+                            #   "ref": difference-coding reference for
+                            #          absolute-state uploads (gradients,
+                            #          control variates): the wire carries
+                            #          g_k − h_k so quantization noise decays
+                            #          with the diff instead of staying O(1)
 
 
 class RoundMetrics(NamedTuple):
@@ -124,11 +166,21 @@ class RoundMetrics(NamedTuple):
     grad_norm: jax.Array     # ‖∇f(w^t)‖ (or control-variate norm for scaffold)
     theta_mean: jax.Array    # mean AA optimization gain across clients (nan if n/a)
     gram_cond_max: jax.Array # worst AA Gram conditioning (nan if n/a)
-    comm_floats: jax.Array   # floats on the wire this round (Table 1 units)
+    comm_bytes: jax.Array    # bytes on the wire this round (codec-exact;
+                             # == 4 × Table 1 float units on the fp32 channel)
+
+
+#: algorithms whose round functions carry no per-client comm state (their
+#: uploads ride the channel unbuffered — see ROADMAP for the Newton follow-up)
+_COMM_STATELESS_ALGOS = ("giant", "newton_gmres", "dane")
+#: single-uplink algorithms: only the model delta travels, no aux state needed
+_DELTA_ONLY_ALGOS = ("fedavg", "fedosaa_avg")
 
 
 def init_state(problem: FLProblem, rng: jax.Array,
-               hp: "AlgoHParams | None" = None) -> ServerState:
+               hp: "AlgoHParams | None" = None,
+               channel: "CommChannel | str | None" = None,
+               algo: str | None = None) -> ServerState:
     rng, init_rng = jax.random.split(rng)
     params = problem.init(init_rng)
     zeros = tm.tree_zeros_like(params)
@@ -141,8 +193,42 @@ def init_state(problem: FLProblem, rng: jax.Array,
             lambda z: jnp.zeros((K, H) + z.shape, z.dtype), zeros)
         hist_y = jax.tree.map(
             lambda z: jnp.zeros((K, H) + z.shape, z.dtype), zeros)
+    channel = make_channel(channel)
+    comm = init_comm_state(channel, params, K, algo)
     return ServerState(params, zeros, c_k, jnp.zeros((), jnp.int32), rng,
-                       hist_s, hist_y)
+                       hist_s, hist_y, comm)
+
+
+def init_comm_state(channel: CommChannel, params: Pytree, K: int,
+                    algo: str | None = None) -> Pytree:
+    """Per-client carried state for a lossy comm channel (None if stateless).
+
+    See ServerState.comm. When ``algo`` is given, buffers its round function
+    never reads are not allocated: the Newton-type/DANE rounds are comm-
+    stateless, and the AVG family has no aux uplink — at LM scale each
+    skipped buffer is a K×d array. Inactive clients of a partial-
+    participation round still advance their buffers in this simulation
+    (every client computes, weights zero the aggregation) — a real
+    deployment would freeze them.
+    """
+    if algo in _COMM_STATELESS_ALGOS:
+        return None
+    stacked_zeros = lambda: jax.tree.map(
+        lambda z: jnp.zeros((K,) + z.shape, z.dtype), params)
+    state = {"delta": {}, "aux": {}}
+    for kind in ("delta", "aux"):
+        codec = channel.up_codec(kind)
+        if isinstance(codec, IdentityCodec):
+            continue
+        if kind == "aux" and algo in _DELTA_ONLY_ALGOS:
+            continue
+        if channel.error_feedback:
+            state[kind]["ef"] = stacked_zeros()
+        if kind == "aux":
+            state[kind]["ref"] = stacked_zeros()
+    if not state["delta"] and not state["aux"]:
+        return None
+    return state
 
 
 # --------------------------------------------------------------------------
@@ -387,14 +473,24 @@ def _aggregate(weights: jax.Array, stacked: Pytree, anchor: Pytree | None = None
 
 
 class CrossClientReduce:
-    """Cross-client reductions for the single-process (vmap) runtime.
+    """Cross-client reductions + the comm channel, single-process (vmap) runtime.
 
     The round cores below are written against this interface so the identical
     code runs distributed: core/sharded.py subclasses it to reduce each
     shard's partial result with psum/pmax over the ("pod","data") mesh axes.
     On a 1-device mesh the psum is an identity, so the two runtimes agree
     bit-for-bit.
+
+    The channel methods (``uplink``/``broadcast``) simulate the wire: every
+    client→server quantity passes an encode/decode roundtrip BEFORE the
+    cross-client reduction (so the psum in the sharded runtime reduces
+    dequantized values), and every server→client broadcast passes the
+    (deterministic) downlink codec. They are per-client local ops — no
+    collective inside — so the shared implementation serves both runtimes.
     """
+
+    def __init__(self, channel: CommChannel | None = None):
+        self.channel = channel if channel is not None else IDENTITY_CHANNEL
 
     def wsum(self, weights: jax.Array, stacked: Pytree,
              anchor: Pytree | None = None) -> Pytree:
@@ -409,6 +505,68 @@ class CrossClientReduce:
         """Max of the non-nan entries of a per-client vector; nan if none."""
         return jnp.nanmax(x)
 
+    # ---- the wire ----------------------------------------------------------
+    def uplink(self, stacked: Pytree, rngs: jax.Array, tag: int,
+               anchor: Pytree | None = None, state: Pytree | None = None):
+        """Channel roundtrip of every client's upload.
+
+        The wire quantity is ``stacked_k − anchor`` when ``anchor`` is given
+        (model uploads travel as deltas — that is what the codecs' relative
+        scaling assumes), else ``stacked_k`` itself, further re-based on the
+        carried reference ``state["ref"]`` when present (difference coding:
+        the wire carries v_k − h_k, both ends advance h_k by the decoded
+        diff). ``state["ef"]`` is the error-feedback residual, added before
+        encoding, with the new residual returned. rngs are the per-client
+        round keys; ``tag`` is folded in so distinct uploads of one round
+        never share draws.
+
+        Returns (reconstructed stacked — the server's view, new state with
+        the same keys — pass it back via ServerState.comm).
+        """
+        kind = "aux" if tag in (_TAG_GRAD, _TAG_CTRL) else "delta"
+        codec = self.channel.up_codec(kind)
+        if isinstance(codec, IdentityCodec):
+            return stacked, state
+        if not codec.deterministic:
+            rngs = jax.vmap(lambda r: jax.random.fold_in(r, tag))(rngs)
+        ef = state.get("ef") if state else None
+        ref = state.get("ref") if state else None
+
+        def one(w_k, rng, e, h):
+            v = tm.tree_sub(w_k, anchor) if anchor is not None else w_k
+            if h is not None:
+                v = tm.tree_sub(v, h)
+            if e is not None:
+                v = tm.tree_add(v, e)
+            dec = codec.tree_roundtrip(v, rng)
+            new_e = tm.tree_sub(v, dec) if e is not None else None
+            if h is not None:
+                # h tracks the reconstructed stream on BOTH ends of the wire
+                dec = tm.tree_add(dec, h)
+            new_h = dec if h is not None else None
+            if anchor is not None:
+                dec = tm.tree_add(dec, anchor)
+            return dec, new_e, new_h
+
+        dec, new_e, new_h = jax.vmap(one)(stacked, rngs, ef, ref)
+        if state is None:
+            return dec, None
+        new_state = {}
+        if "ef" in state:
+            new_state["ef"] = new_e
+        if "ref" in state:
+            new_state["ref"] = new_h
+        return dec, new_state
+
+    def broadcast(self, tree: Pytree) -> Pytree:
+        """Server→client broadcast through the (deterministic) downlink codec."""
+        if isinstance(self.channel.down, IdentityCodec):
+            return tree
+        return self.channel.broadcast(tree)
+
+
+#: distinct uplink tags: fold_in'd so one round's uploads don't share draws
+_TAG_GRAD, _TAG_DELTA, _TAG_CTRL, _TAG_DIR = 101, 102, 103, 104
 
 VMAP_REDUCE = CrossClientReduce()
 
@@ -463,9 +621,18 @@ def _metric_parts(problem, R, w, g, stats, x, y, mask, dweight) -> MetricParts:
 
 
 def _svrg_round_core(problem, hp, use_aa, R, w_t, x, y, mask, dweight, pweight,
-                     rngs, hist_s=None, hist_y=None):
-    """SVRG family: corrected local steps (+ optional AA), delta aggregation."""
-    g_global = R.wsum(dweight, _stack_grads(problem, w_t, x, y, mask))
+                     rngs, hist_s=None, hist_y=None, comm=None):
+    """SVRG family: corrected local steps (+ optional AA), delta aggregation.
+
+    Two wire crossings: the local full-batch gradients travel up (round trip
+    1), then w^t and ∇f travel down and the model deltas travel up (round
+    trip 2, with error feedback). The carried AA history is client-local
+    state — it never touches the wire.
+    """
+    w_t = R.broadcast(w_t)
+    g_k, new_aux = R.uplink(_stack_grads(problem, w_t, x, y, mask), rngs,
+                            _TAG_GRAD, state=None if comm is None else comm["aux"])
+    g_global = R.broadcast(R.wsum(dweight, g_k))
     if hist_s is not None:
         w_k, stats, new_hs, new_hy = jax.vmap(
             partial(_client_svrg, problem, hp, use_aa, w_t, g_global)
@@ -475,60 +642,92 @@ def _svrg_round_core(problem, hp, use_aa, R, w_t, x, y, mask, dweight, pweight,
             partial(_client_svrg, problem, hp, use_aa, w_t, g_global)
         )(x, y, mask, rngs)
         new_hs = new_hy = None
+    w_k, new_delta = R.uplink(w_k, rngs, _TAG_DELTA, anchor=w_t,
+                              state=None if comm is None else comm["delta"])
+    new_comm = None if comm is None else {"delta": new_delta, "aux": new_aux}
     new_params = R.wsum(pweight, w_k, anchor=w_t)
     parts = _metric_parts(problem, R, w_t, g_global, stats, x, y, mask, dweight)
-    return new_params, parts, new_hs, new_hy
+    return new_params, parts, new_hs, new_hy, new_comm
 
 
 def _scaffold_round_core(problem, hp, use_aa, R, w_t, c, x, y, mask, c_k,
-                         dweight, pweight, rngs):
-    """SCAFFOLD family: control-variate steps; c aggregated with data weights."""
+                         dweight, pweight, rngs, comm=None):
+    """SCAFFOLD family: control-variate steps; c aggregated with data weights.
+
+    Single exchange: (w^t, c) travel down, (Δw_k, c_k) travel up together.
+    The server keeps the decoded wire view only in the aggregates; the
+    client's own control variate stays client-side uncompressed (new_c_k).
+    """
+    w_t = R.broadcast(w_t)
+    c = R.broadcast(c)
     w_k, new_c_k, stats = jax.vmap(
         partial(_client_scaffold, problem, hp, use_aa, w_t, c)
     )(x, y, mask, c_k, rngs)
+    w_k, new_delta = R.uplink(w_k, rngs, _TAG_DELTA, anchor=w_t,
+                              state=None if comm is None else comm["delta"])
+    c_up, new_aux = R.uplink(new_c_k, rngs, _TAG_CTRL,
+                             state=None if comm is None else comm["aux"])
+    new_comm = None if comm is None else {"delta": new_delta, "aux": new_aux}
     new_params = R.wsum(pweight, w_k, anchor=w_t)
-    new_c = R.wsum(dweight, new_c_k)
+    new_c = R.wsum(dweight, c_up)
     parts = _metric_parts(problem, R, w_t, new_c, stats, x, y, mask, dweight)
-    return new_params, new_c, new_c_k, parts
+    return new_params, new_c, new_c_k, parts, new_comm
 
 
 def _avg_round_core(problem, hp, use_aa, R, w_t, x, y, mask, dweight, pweight,
-                    rngs):
+                    rngs, comm=None):
     """FedAvg family (incl. the fedosaa_avg negative control)."""
+    w_t = R.broadcast(w_t)
     w_k, stats = jax.vmap(
         partial(_client_avg, problem, hp, use_aa, w_t)
     )(x, y, mask, rngs)
+    w_k, new_delta = R.uplink(w_k, rngs, _TAG_DELTA, anchor=w_t,
+                              state=None if comm is None else comm["delta"])
+    new_comm = None if comm is None else {"delta": new_delta, "aux": comm["aux"]}
     new_params = R.wsum(pweight, w_k, anchor=w_t)
-    g = R.wsum(dweight, _stack_grads(problem, w_t, x, y, mask))  # diagnostics
+    # diagnostics only — FedAvg ships no gradients, so no wire crossing here
+    g = R.wsum(dweight, _stack_grads(problem, w_t, x, y, mask))
     parts = _metric_parts(problem, R, w_t, g, stats, x, y, mask, dweight)
-    return new_params, parts
+    return new_params, parts, new_comm
 
 
-def _lbfgs_round_core(problem, hp, R, w_t, x, y, mask, dweight, pweight, rngs):
-    g_global = R.wsum(dweight, _stack_grads(problem, w_t, x, y, mask))
+def _lbfgs_round_core(problem, hp, R, w_t, x, y, mask, dweight, pweight, rngs,
+                      comm=None):
+    w_t = R.broadcast(w_t)
+    g_k, new_aux = R.uplink(_stack_grads(problem, w_t, x, y, mask), rngs,
+                            _TAG_GRAD, state=None if comm is None else comm["aux"])
+    g_global = R.broadcast(R.wsum(dweight, g_k))
     w_k, _ = jax.vmap(
         partial(_client_lbfgs, problem, hp, w_t, g_global)
     )(x, y, mask, rngs)
+    w_k, new_delta = R.uplink(w_k, rngs, _TAG_DELTA, anchor=w_t,
+                              state=None if comm is None else comm["delta"])
+    new_comm = None if comm is None else {"delta": new_delta, "aux": new_aux}
     new_params = R.wsum(pweight, w_k, anchor=w_t)
     parts = _metric_parts(problem, R, w_t, g_global, _nan_stats(x.shape[0]),
                           x, y, mask, dweight)
-    return new_params, parts
+    return new_params, parts, new_comm
 
 
 def _newton_round_core(problem, hp, client_fn, R, w_t, x, y, mask, dweight,
-                       pweight):
+                       pweight, rngs):
     """GIANT / Newton-GMRES: aggregate directions, optional global backtrack."""
-    g_global = R.wsum(dweight, _stack_grads(problem, w_t, x, y, mask))
+    w_t = R.broadcast(w_t)
+    g_k, _ = R.uplink(_stack_grads(problem, w_t, x, y, mask), rngs, _TAG_GRAD)
+    g_global = R.broadcast(R.wsum(dweight, g_k))
     p_k = jax.vmap(partial(client_fn, problem, hp, w_t, g_global))(x, y, mask)
+    p_k, _ = R.uplink(p_k, rngs, _TAG_DIR)
     p = R.wsum(pweight, p_k)
     if hp.line_search:
         # GIANT line search on the aggregated direction: clients evaluate
-        # f_k along p (one extra broadcast of p — see comm_floats_per_round).
+        # f_k along the BROADCAST view of p (one extra downlink — see
+        # comm_bytes_per_round); the server then steps with its exact p.
+        p_b = R.broadcast(p)
         steps = jnp.array([4.0, 2.0, 1.0, 0.5, 0.25, 0.125, 0.0625])
         vals = jax.vmap(
             lambda a: R.wsum(
                 dweight,
-                _stack_losses(problem, tm.tree_axpy(-a, p, w_t), x, y, mask),
+                _stack_losses(problem, tm.tree_axpy(-a, p_b, w_t), x, y, mask),
             )
         )(steps)
         a = steps[jnp.argmin(vals)]
@@ -540,22 +739,27 @@ def _newton_round_core(problem, hp, client_fn, R, w_t, x, y, mask, dweight,
     return new_params, parts
 
 
-def _dane_round_core(problem, hp, R, w_t, x, y, mask, dweight, pweight):
-    g_global = R.wsum(dweight, _stack_grads(problem, w_t, x, y, mask))
+def _dane_round_core(problem, hp, R, w_t, x, y, mask, dweight, pweight, rngs):
+    w_t = R.broadcast(w_t)
+    g_k, _ = R.uplink(_stack_grads(problem, w_t, x, y, mask), rngs, _TAG_GRAD)
+    g_global = R.broadcast(R.wsum(dweight, g_k))
     w_k = jax.vmap(partial(_client_dane, problem, hp, w_t, g_global))(x, y, mask)
-    new_params = R.wsum(pweight, w_k)
+    w_k, _ = R.uplink(w_k, rngs, _TAG_DELTA, anchor=w_t)
+    # delta-form aggregation: identical when Σpweight = 1, and a partial-
+    # participation round with no active clients keeps w^t instead of zeroing
+    new_params = R.wsum(pweight, w_k, anchor=w_t)
     parts = _metric_parts(problem, R, w_t, g_global, _nan_stats(x.shape[0]),
                           x, y, mask, dweight)
     return new_params, parts
 
 
-def finalize_metrics(parts: MetricParts, comm_floats: float) -> RoundMetrics:
+def finalize_metrics(parts: MetricParts, comm_bytes: float) -> RoundMetrics:
     return RoundMetrics(
         loss=parts.loss,
         grad_norm=parts.grad_norm,
         theta_mean=parts.theta_mean,
         gram_cond_max=parts.gram_cond_max,
-        comm_floats=jnp.asarray(comm_floats, jnp.float32),
+        comm_bytes=jnp.asarray(comm_bytes, jnp.float32),
     )
 
 
@@ -563,18 +767,22 @@ def finalize_metrics(parts: MetricParts, comm_floats: float) -> RoundMetrics:
 # round functions (vmap runtime)
 # --------------------------------------------------------------------------
 
-def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams):
+def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
+                  channel: "CommChannel | str | None" = None):
     """Return a jittable round(state) -> (state, RoundMetrics).
 
     Single-process runtime: the K stacked clients are vmapped. The distributed
     runtime with identical numerics is core/sharded.py::make_sharded_round_fn.
+    ``channel`` (repro/comm) compresses every wire crossing; None keeps the
+    historical lossless fp32 wire.
     """
     if algo not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algo!r}; choose from {ALGORITHMS}")
-    d = tm.tree_size(problem.init(jax.random.PRNGKey(0)))
-    comm = comm_floats_per_round(algo, d, hp.line_search)
+    channel = make_channel(channel)
+    p0 = problem.init(jax.random.PRNGKey(0))
+    comm_bytes = comm_bytes_per_round(algo, p0, channel, hp.line_search)
     C = problem.clients
-    R = VMAP_REDUCE
+    R = CrossClientReduce(channel)
 
     # ---------------- SVRG family ----------------
     if algo in ("fedsvrg", "fedosaa_svrg"):
@@ -585,17 +793,18 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams):
             weights = _participation_weights(problem, hp, part_rng)
             rngs = jax.random.split(cl_rng, C.num_clients)
             carry = hp.carry_history > 0 and state.hist_s is not None
-            new_params, parts, new_hs, new_hy = _svrg_round_core(
+            new_params, parts, new_hs, new_hy, new_comm = _svrg_round_core(
                 problem, hp, use_aa, R, state.params, C.x, C.y, C.mask,
                 C.weight, weights, rngs,
                 state.hist_s if carry else None,
                 state.hist_y if carry else None,
+                state.comm,
             )
-            metrics = finalize_metrics(parts, comm)
+            metrics = finalize_metrics(parts, comm_bytes)
+            upd = dict(params=new_params, t=state.t + 1, rng=rng, comm=new_comm)
             if carry:
-                return state._replace(params=new_params, t=state.t + 1,
-                                      rng=rng, hist_s=new_hs, hist_y=new_hy), metrics
-            return state._replace(params=new_params, t=state.t + 1, rng=rng), metrics
+                upd.update(hist_s=new_hs, hist_y=new_hy)
+            return state._replace(**upd), metrics
 
         return round_fn
 
@@ -607,14 +816,15 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams):
             rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
             weights = _participation_weights(problem, hp, part_rng)
             rngs = jax.random.split(cl_rng, C.num_clients)
-            new_params, new_c, new_c_k, parts = _scaffold_round_core(
+            new_params, new_c, new_c_k, parts, new_comm = _scaffold_round_core(
                 problem, hp, use_aa, R, state.params, state.c,
                 C.x, C.y, C.mask, state.c_k, C.weight, weights, rngs,
+                state.comm,
             )
-            metrics = finalize_metrics(parts, comm)
+            metrics = finalize_metrics(parts, comm_bytes)
             return (
                 state._replace(params=new_params, c=new_c, c_k=new_c_k,
-                               t=state.t + 1, rng=rng),
+                               t=state.t + 1, rng=rng, comm=new_comm),
                 metrics,
             )
 
@@ -628,12 +838,13 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams):
             rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
             weights = _participation_weights(problem, hp, part_rng)
             rngs = jax.random.split(cl_rng, C.num_clients)
-            new_params, parts = _avg_round_core(
+            new_params, parts, new_comm = _avg_round_core(
                 problem, hp, use_aa, R, state.params, C.x, C.y, C.mask,
-                C.weight, weights, rngs,
+                C.weight, weights, rngs, state.comm,
             )
-            metrics = finalize_metrics(parts, comm)
-            return state._replace(params=new_params, t=state.t + 1, rng=rng), metrics
+            metrics = finalize_metrics(parts, comm_bytes)
+            return state._replace(params=new_params, t=state.t + 1, rng=rng,
+                                  comm=new_comm), metrics
 
         return round_fn
 
@@ -644,12 +855,13 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams):
             rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
             weights = _participation_weights(problem, hp, part_rng)
             rngs = jax.random.split(cl_rng, C.num_clients)
-            new_params, parts = _lbfgs_round_core(
+            new_params, parts, new_comm = _lbfgs_round_core(
                 problem, hp, R, state.params, C.x, C.y, C.mask,
-                C.weight, weights, rngs,
+                C.weight, weights, rngs, state.comm,
             )
-            metrics = finalize_metrics(parts, comm)
-            return state._replace(params=new_params, t=state.t + 1, rng=rng), metrics
+            metrics = finalize_metrics(parts, comm_bytes)
+            return state._replace(params=new_params, t=state.t + 1, rng=rng,
+                                  comm=new_comm), metrics
 
         return round_fn
 
@@ -658,13 +870,14 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams):
         client_fn = _client_giant if algo == "giant" else _client_newton_gmres
 
         def round_fn(state: ServerState):
-            rng, part_rng = jax.random.split(state.rng)
+            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
             weights = _participation_weights(problem, hp, part_rng)
+            rngs = jax.random.split(cl_rng, C.num_clients)
             new_params, parts = _newton_round_core(
                 problem, hp, client_fn, R, state.params, C.x, C.y, C.mask,
-                C.weight, weights,
+                C.weight, weights, rngs,
             )
-            metrics = finalize_metrics(parts, comm)
+            metrics = finalize_metrics(parts, comm_bytes)
             return state._replace(params=new_params, t=state.t + 1, rng=rng), metrics
 
         return round_fn
@@ -673,12 +886,14 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams):
     assert algo == "dane"
 
     def round_fn(state: ServerState):
-        rng, part_rng = jax.random.split(state.rng)
+        rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
         weights = _participation_weights(problem, hp, part_rng)
+        rngs = jax.random.split(cl_rng, C.num_clients)
         new_params, parts = _dane_round_core(
             problem, hp, R, state.params, C.x, C.y, C.mask, C.weight, weights,
+            rngs,
         )
-        metrics = finalize_metrics(parts, comm)
+        metrics = finalize_metrics(parts, comm_bytes)
         return state._replace(params=new_params, t=state.t + 1, rng=rng), metrics
 
     return round_fn

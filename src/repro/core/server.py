@@ -30,16 +30,25 @@ class History:
     grad_norm: np.ndarray
     rel_error: np.ndarray         # ‖w^t − w*‖/‖w*‖  (nan if w* not given)
     theta_mean: np.ndarray        # AA gain per round (nan for non-AA algos)
-    comm_floats: np.ndarray       # cumulative floats on the wire
+    comm_bytes: np.ndarray        # cumulative bytes on the wire (codec-exact)
     wall_time: np.ndarray         # cumulative seconds (per-round, measured)
     final_params: Pytree = None
+    channel: str = "identity"     # repro/comm channel name
+
+    @property
+    def comm_floats(self) -> np.ndarray:
+        """fp32-equivalent floats (bytes/4) — the paper's Table 1 unit, kept
+        so historical comparisons (table1_comm.json) stay directly readable.
+        Equal to the old float counters on the identity channel."""
+        return self.comm_bytes / 4.0
 
     def summary(self) -> str:
         last = -1
         return (
             f"{self.algo:18s} rounds={len(self.rounds):4d} "
             f"loss={self.loss[last]:.6e} |g|={self.grad_norm[last]:.3e} "
-            f"relerr={self.rel_error[last]:.3e} comm={self.comm_floats[last]:.3e}"
+            f"relerr={self.rel_error[last]:.3e} "
+            f"comm={self.comm_bytes[last]:.3e}B[{self.channel}]"
         )
 
 
@@ -55,6 +64,7 @@ def run_federated(
     stop_grad_norm: float | None = None,
     runtime: str = "vmap",
     mesh=None,
+    channel=None,
 ) -> History:
     """Iterate ``num_rounds`` of ``algo`` and collect the metric history.
 
@@ -63,12 +73,19 @@ def run_federated(
               ("pod","data") axes of ``mesh`` (core/sharded.py). ``mesh``
               defaults to launch/mesh.py::make_host_mesh() so the sharded
               runtime is exercisable on a 1-device CPU.
+    channel — repro/comm wire-compression channel (a CommChannel or a spec
+              string like "int8", "topk:0.05", "bf16/bf16"); None = lossless
+              fp32. Both runtimes honor it, and ``History.comm_bytes`` counts
+              exactly what the chosen codecs put on the wire.
     """
+    from repro.comm import make_channel
+
     if runtime not in ("vmap", "sharded"):
         raise ValueError(f"unknown runtime {runtime!r}; choose 'vmap' or 'sharded'")
     if isinstance(rng, int):
         rng = jax.random.PRNGKey(rng)
-    state = init_state(problem, rng, hp)
+    channel = make_channel(channel)
+    state = init_state(problem, rng, hp, channel, algo)
     if w0 is not None:
         state = state._replace(params=w0)
     if runtime == "sharded":
@@ -78,9 +95,10 @@ def run_federated(
             from repro.launch.mesh import make_host_mesh
 
             mesh = make_host_mesh()
-        round_fn = jax.jit(make_sharded_round_fn(algo, problem, hp, mesh))
+        round_fn = jax.jit(
+            make_sharded_round_fn(algo, problem, hp, mesh, channel=channel))
     else:
-        round_fn = jax.jit(make_round_fn(algo, problem, hp))
+        round_fn = jax.jit(make_round_fn(algo, problem, hp, channel))
 
     w_star_norm = None
     if w_star is not None:
@@ -94,7 +112,7 @@ def run_federated(
         state, m = round_fn(state)
         m = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), m)
         t_total += time.perf_counter() - t0
-        comm_total += float(m.comm_floats)
+        comm_total += float(m.comm_bytes)
         if w_star is not None:
             diff = tm.tree_norm(tm.tree_sub(state.params, w_star))
             rel = float(diff) / max(w_star_norm, 1e-30)
@@ -117,9 +135,10 @@ def run_federated(
         grad_norm=arr[:, 2],
         rel_error=arr[:, 3],
         theta_mean=arr[:, 4],
-        comm_floats=arr[:, 5],
+        comm_bytes=arr[:, 5],
         wall_time=arr[:, 6],
         final_params=jax.device_get(state.params),
+        channel=channel.name,
     )
 
 

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.comm import CommChannel, make_channel
 from repro.core.algorithms import (
     ALGORITHMS,
     AlgoHParams,
@@ -53,11 +54,10 @@ from repro.core.algorithms import (
     _participation_weights,
     _scaffold_round_core,
     _svrg_round_core,
-    comm_floats_per_round,
+    comm_bytes_per_round,
     finalize_metrics,
 )
 from repro.core.problem import FLProblem
-from repro.utils import tree_math as tm
 from repro.utils.compat import shard_map
 
 #: mesh axes the client axis is partitioned over, slowest (inter-pod) first.
@@ -72,7 +72,9 @@ class ShardReduce(CrossClientReduce):
     a 1-shard mesh the arithmetic is identical to CrossClientReduce.
     """
 
-    def __init__(self, axes: tuple[str, ...]):
+    def __init__(self, axes: tuple[str, ...],
+                 channel: CommChannel | None = None):
+        super().__init__(channel)
         self.axes = axes
 
     def wsum(self, weights, stacked, anchor=None):
@@ -110,12 +112,18 @@ def num_client_shards(mesh, axes: tuple[str, ...] | None = None) -> int:
 
 
 def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
-                          mesh, client_axes: tuple[str, ...] | None = None):
+                          mesh, client_axes: tuple[str, ...] | None = None,
+                          channel: "CommChannel | str | None" = None):
     """Return a jittable round(state) -> (state, RoundMetrics) whose client
     fan-out is shard_mapped over ``mesh``'s ("pod","data") axes.
 
     Requires num_clients to divide evenly over the client shards (pad the
     client stack with stack_client_arrays if it does not).
+
+    ``channel`` (repro/comm) compresses the wire exactly as in the vmap
+    runtime: each shard encode/decodes its local clients' uploads, so the
+    dequantized representation is what the client-axis psum reduces; the
+    error-feedback residuals stay sharded with their clients.
     """
     if algo not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algo!r}; choose from {ALGORITHMS}")
@@ -133,9 +141,10 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
             f"num_clients={K} does not divide over {n_shards} client shards "
             f"(mesh axes {axes}); pad the client stack to a multiple"
         )
-    R = ShardReduce(axes)
-    d = tm.tree_size(problem.init(jax.random.PRNGKey(0)))
-    comm = comm_floats_per_round(algo, d, hp.line_search)
+    channel = make_channel(channel)
+    R = ShardReduce(axes, channel)
+    comm_bytes = comm_bytes_per_round(algo, problem.init(jax.random.PRNGKey(0)),
+                                      channel, hp.line_search)
 
     csh = P(axes)   # leading (client) dim split over the client mesh axes
     rep = P()       # replicated
@@ -146,6 +155,11 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         return shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs,
                          check_vma=False)
 
+    # NOTE: optional per-client state (carried AA history, error-feedback
+    # residuals) passes through shard_map as None when absent — None is an
+    # empty pytree, so the csh spec sharding it has no leaves to act on and
+    # one body covers every combination.
+
     # ---------------- SVRG family ----------------
     if algo in ("fedsvrg", "fedosaa_svrg"):
         use_aa = algo == "fedosaa_svrg"
@@ -154,35 +168,25 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
             rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
             weights = _participation_weights(problem, hp, part_rng)
             rngs = jax.random.split(cl_rng, K)
-            if hp.carry_history > 0 and state.hist_s is not None:
-                def body(w_t, x, y, mask, dw, pw, r, hs, hy):
-                    new_params, parts, new_hs, new_hy = _svrg_round_core(
-                        problem, hp, use_aa, R, w_t, x, y, mask, dw, pw, r,
-                        hs, hy)
-                    return new_params, parts, new_hs, new_hy
+            carry = hp.carry_history > 0 and state.hist_s is not None
 
-                new_params, parts, new_hs, new_hy = smap(
-                    body,
-                    in_specs=(rep, csh, csh, csh, csh, csh, csh, csh, csh),
-                    out_specs=(rep, rep, csh, csh),
-                )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs,
-                  state.hist_s, state.hist_y)
-                return state._replace(params=new_params, t=state.t + 1,
-                                      rng=rng, hist_s=new_hs,
-                                      hist_y=new_hy), finalize_metrics(parts, comm)
+            def body(w_t, x, y, mask, dw, pw, r, hs, hy, e):
+                return _svrg_round_core(
+                    problem, hp, use_aa, R, w_t, x, y, mask, dw, pw, r,
+                    hs, hy, e)
 
-            def body(w_t, x, y, mask, dw, pw, r):
-                new_params, parts, _, _ = _svrg_round_core(
-                    problem, hp, use_aa, R, w_t, x, y, mask, dw, pw, r)
-                return new_params, parts
-
-            new_params, parts = smap(
+            new_params, parts, new_hs, new_hy, new_comm = smap(
                 body,
-                in_specs=(rep, csh, csh, csh, csh, csh, csh),
-                out_specs=(rep, rep),
-            )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs)
-            return state._replace(params=new_params, t=state.t + 1,
-                                  rng=rng), finalize_metrics(parts, comm)
+                in_specs=(rep, csh, csh, csh, csh, csh, csh, csh, csh, csh),
+                out_specs=(rep, rep, csh, csh, csh),
+            )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs,
+              state.hist_s if carry else None,
+              state.hist_y if carry else None,
+              state.comm)
+            upd = dict(params=new_params, t=state.t + 1, rng=rng, comm=new_comm)
+            if carry:
+                upd.update(hist_s=new_hs, hist_y=new_hy)
+            return state._replace(**upd), finalize_metrics(parts, comm_bytes)
 
         return round_fn
 
@@ -195,20 +199,21 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
             weights = _participation_weights(problem, hp, part_rng)
             rngs = jax.random.split(cl_rng, K)
 
-            def body(w_t, c, x, y, mask, c_k, dw, pw, r):
+            def body(w_t, c, x, y, mask, c_k, dw, pw, r, e):
                 return _scaffold_round_core(
-                    problem, hp, use_aa, R, w_t, c, x, y, mask, c_k, dw, pw, r)
+                    problem, hp, use_aa, R, w_t, c, x, y, mask, c_k, dw, pw,
+                    r, e)
 
-            new_params, new_c, new_c_k, parts = smap(
+            new_params, new_c, new_c_k, parts, new_comm = smap(
                 body,
-                in_specs=(rep, rep, csh, csh, csh, csh, csh, csh, csh),
-                out_specs=(rep, rep, csh, rep),
+                in_specs=(rep, rep, csh, csh, csh, csh, csh, csh, csh, csh),
+                out_specs=(rep, rep, csh, rep, csh),
             )(state.params, state.c, C.x, C.y, C.mask, state.c_k, C.weight,
-              weights, rngs)
+              weights, rngs, state.comm)
             return (
                 state._replace(params=new_params, c=new_c, c_k=new_c_k,
-                               t=state.t + 1, rng=rng),
-                finalize_metrics(parts, comm),
+                               t=state.t + 1, rng=rng, comm=new_comm),
+                finalize_metrics(parts, comm_bytes),
             )
 
         return round_fn
@@ -222,17 +227,18 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
             weights = _participation_weights(problem, hp, part_rng)
             rngs = jax.random.split(cl_rng, K)
 
-            def body(w_t, x, y, mask, dw, pw, r):
+            def body(w_t, x, y, mask, dw, pw, r, e):
                 return _avg_round_core(
-                    problem, hp, use_aa, R, w_t, x, y, mask, dw, pw, r)
+                    problem, hp, use_aa, R, w_t, x, y, mask, dw, pw, r, e)
 
-            new_params, parts = smap(
+            new_params, parts, new_comm = smap(
                 body,
-                in_specs=(rep, csh, csh, csh, csh, csh, csh),
-                out_specs=(rep, rep),
-            )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs)
+                in_specs=(rep, csh, csh, csh, csh, csh, csh, csh),
+                out_specs=(rep, rep, csh),
+            )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs,
+              state.comm)
             return state._replace(params=new_params, t=state.t + 1,
-                                  rng=rng), finalize_metrics(parts, comm)
+                                  rng=rng, comm=new_comm), finalize_metrics(parts, comm_bytes)
 
         return round_fn
 
@@ -244,17 +250,18 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
             weights = _participation_weights(problem, hp, part_rng)
             rngs = jax.random.split(cl_rng, K)
 
-            def body(w_t, x, y, mask, dw, pw, r):
+            def body(w_t, x, y, mask, dw, pw, r, e):
                 return _lbfgs_round_core(
-                    problem, hp, R, w_t, x, y, mask, dw, pw, r)
+                    problem, hp, R, w_t, x, y, mask, dw, pw, r, e)
 
-            new_params, parts = smap(
+            new_params, parts, new_comm = smap(
                 body,
-                in_specs=(rep, csh, csh, csh, csh, csh, csh),
-                out_specs=(rep, rep),
-            )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs)
+                in_specs=(rep, csh, csh, csh, csh, csh, csh, csh),
+                out_specs=(rep, rep, csh),
+            )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs,
+              state.comm)
             return state._replace(params=new_params, t=state.t + 1,
-                                  rng=rng), finalize_metrics(parts, comm)
+                                  rng=rng, comm=new_comm), finalize_metrics(parts, comm_bytes)
 
         return round_fn
 
@@ -263,20 +270,21 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         client_fn = _client_giant if algo == "giant" else _client_newton_gmres
 
         def round_fn(state: ServerState):
-            rng, part_rng = jax.random.split(state.rng)
+            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
             weights = _participation_weights(problem, hp, part_rng)
+            rngs = jax.random.split(cl_rng, K)
 
-            def body(w_t, x, y, mask, dw, pw):
+            def body(w_t, x, y, mask, dw, pw, r):
                 return _newton_round_core(
-                    problem, hp, client_fn, R, w_t, x, y, mask, dw, pw)
+                    problem, hp, client_fn, R, w_t, x, y, mask, dw, pw, r)
 
             new_params, parts = smap(
                 body,
-                in_specs=(rep, csh, csh, csh, csh, csh),
+                in_specs=(rep, csh, csh, csh, csh, csh, csh),
                 out_specs=(rep, rep),
-            )(state.params, C.x, C.y, C.mask, C.weight, weights)
+            )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs)
             return state._replace(params=new_params, t=state.t + 1,
-                                  rng=rng), finalize_metrics(parts, comm)
+                                  rng=rng), finalize_metrics(parts, comm_bytes)
 
         return round_fn
 
@@ -284,18 +292,19 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
     assert algo == "dane"
 
     def round_fn(state: ServerState):
-        rng, part_rng = jax.random.split(state.rng)
+        rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
         weights = _participation_weights(problem, hp, part_rng)
+        rngs = jax.random.split(cl_rng, K)
 
-        def body(w_t, x, y, mask, dw, pw):
-            return _dane_round_core(problem, hp, R, w_t, x, y, mask, dw, pw)
+        def body(w_t, x, y, mask, dw, pw, r):
+            return _dane_round_core(problem, hp, R, w_t, x, y, mask, dw, pw, r)
 
         new_params, parts = smap(
             body,
-            in_specs=(rep, csh, csh, csh, csh, csh),
+            in_specs=(rep, csh, csh, csh, csh, csh, csh),
             out_specs=(rep, rep),
-        )(state.params, C.x, C.y, C.mask, C.weight, weights)
+        )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs)
         return state._replace(params=new_params, t=state.t + 1,
-                              rng=rng), finalize_metrics(parts, comm)
+                              rng=rng), finalize_metrics(parts, comm_bytes)
 
     return round_fn

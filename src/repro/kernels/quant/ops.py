@@ -1,0 +1,105 @@
+"""Public flat-vector entry points for the int8-SR wire codec.
+
+``int8_sr_encode`` / ``int8_dequantize`` are what repro/comm's Int8SRCodec
+calls: they handle the flatten/pad-to-chunk bookkeeping and dispatch the 2-D
+chunk math to the Pallas kernels on TPU or to the op-identical jnp oracle
+(ref.py) elsewhere — interpret-mode Pallas inside a vmapped FL round core
+would dominate CPU round time. Both are vmap-safe (the comm layer maps them
+over the client axis) and jit-inlineable.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant.quant import (
+    DEFAULT_CHUNK,
+    ROW_TILE,
+    dequantize_pallas,
+    quantize_pallas,
+)
+from repro.kernels.quant.ref import dequantize_ref, quantize_ref
+
+_ON_TPU = None
+
+
+def _use_pallas_default() -> bool:
+    global _ON_TPU
+    if _ON_TPU is None:
+        _ON_TPU = jax.devices()[0].platform == "tpu"
+    return _ON_TPU
+
+
+def chunk_rows(n: int, chunk: int = DEFAULT_CHUNK) -> int:
+    """Number of quantization chunks covering a length-n vector."""
+    return max(1, -(-n // chunk))
+
+
+def _to_chunks(x_flat: jax.Array, chunk: int) -> jax.Array:
+    n = x_flat.shape[0]
+    nc = chunk_rows(n, chunk)
+    pad = nc * chunk - n
+    if pad:
+        x_flat = jnp.pad(x_flat, (0, pad))
+    return x_flat.reshape(nc, chunk)
+
+
+def quantize_2d(x: jax.Array, u: jax.Array, use_pallas: bool | None = None,
+                interpret: bool | None = None):
+    """[nc, C] chunked quantize, kernel- or oracle-backed (same arithmetic)."""
+    if use_pallas is None:
+        use_pallas = _use_pallas_default()
+    if not use_pallas:
+        return quantize_ref(x, u)
+    if interpret is None:
+        interpret = not _use_pallas_default()
+    nc = x.shape[0]
+    nc_pad = -(-nc // ROW_TILE) * ROW_TILE
+    xp = jnp.pad(x, ((0, nc_pad - nc), (0, 0)))
+    up = jnp.pad(u, ((0, nc_pad - nc), (0, 0)))
+    q, scales = quantize_pallas(xp, up, interpret=interpret)
+    return q[:nc], scales[:nc]
+
+
+def dequantize_2d(q: jax.Array, scales: jax.Array,
+                  use_pallas: bool | None = None,
+                  interpret: bool | None = None) -> jax.Array:
+    if use_pallas is None:
+        use_pallas = _use_pallas_default()
+    if not use_pallas:
+        return dequantize_ref(q, scales)
+    if interpret is None:
+        interpret = not _use_pallas_default()
+    nc = q.shape[0]
+    nc_pad = -(-nc // ROW_TILE) * ROW_TILE
+    qp = jnp.pad(q, ((0, nc_pad - nc), (0, 0)))
+    sp = jnp.pad(scales, ((0, nc_pad - nc), (0, 0)), constant_values=1.0)
+    return dequantize_pallas(qp, sp, interpret=interpret)[:nc]
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def int8_sr_encode(x_flat: jax.Array, rng: jax.Array,
+                   chunk: int = DEFAULT_CHUNK,
+                   use_pallas: bool | None = None):
+    """Flat f32 [n] -> (q [nc, chunk] int8, scales [nc, 1] f32)."""
+    x2d = _to_chunks(x_flat.astype(jnp.float32), chunk)
+    u2d = jax.random.uniform(rng, x2d.shape, jnp.float32)
+    return quantize_2d(x2d, u2d, use_pallas)
+
+
+@partial(jax.jit, static_argnames=("n", "use_pallas"))
+def int8_dequantize(q: jax.Array, scales: jax.Array, n: int,
+                    use_pallas: bool | None = None) -> jax.Array:
+    """Inverse of int8_sr_encode: back to flat f32 [n]."""
+    return dequantize_2d(q, scales, use_pallas).reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def int8_sr_roundtrip(x_flat: jax.Array, rng: jax.Array,
+                      chunk: int = DEFAULT_CHUNK,
+                      use_pallas: bool | None = None) -> jax.Array:
+    """encode + decode in one call — what the comm layer simulates on-wire."""
+    q, scales = int8_sr_encode(x_flat, rng, chunk, use_pallas)
+    return int8_dequantize(q, scales, x_flat.shape[0], use_pallas)

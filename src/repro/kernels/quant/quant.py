@@ -1,0 +1,92 @@
+"""Pallas TPU kernels for the comm-subsystem int8 stochastic-rounding codec.
+
+Wire format (repro/comm): a flat f32 upload vector is reshaped into chunks of
+``chunk`` lanes; each chunk is quantized to int8 with its own f32 scale
+(symmetric, scale = max|x| / 127) and stochastic rounding, so the roundtrip is
+UNBIASED: E[dequant(quant(x))] = x, |error| < scale elementwise.
+
+The random uniforms are an *input* (generated with jax.random by the caller,
+one draw per element) rather than an in-kernel PRNG: the pure-jnp oracle
+(ref.py) then computes bit-identical results from the same draws, which is
+what the interpret-mode parity tests pin down.
+
+Both kernels are single-pass and memory-bound: one [rows, chunk] tile streams
+through VMEM per grid step, exactly like the anderson/ kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: lanes per quantization chunk (also the kernel tile width).
+DEFAULT_CHUNK = 256
+#: rows (chunks) per tile — the f32 sublane granule.
+ROW_TILE = 8
+
+
+def _quantize_kernel(x_ref, u_ref, q_ref, scale_ref):
+    """One [R, C] tile: per-row abs-max scale + stochastic round to int8.
+
+    x_ref, u_ref: [R, C] VMEM tiles (values, uniform draws in [0,1))
+    q_ref:        [R, C] int8 output tile
+    scale_ref:    [R, 1] f32 per-chunk scales
+    """
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)          # [R, 1]
+    scale = jnp.where(amax > 0.0, amax / 127.0, 1.0)
+    v = x / scale                                              # in [-127, 127]
+    q = jnp.floor(v + u_ref[...].astype(jnp.float32))          # E[q] = v
+    q = jnp.clip(q, -127.0, 127.0)
+    q_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+def _dequantize_kernel(q_ref, scale_ref, out_ref):
+    """out tile = int8 tile × its per-row scale."""
+    out_ref[...] = q_ref[...].astype(jnp.float32) * scale_ref[...]
+
+
+def quantize_pallas(x: jax.Array, u: jax.Array, row_tile: int = ROW_TILE,
+                    interpret: bool = False):
+    """x, u: [nc, C] f32 (nc % row_tile == 0). Returns (q int8, scales [nc,1])."""
+    nc, C = x.shape
+    assert nc % row_tile == 0, (nc, row_tile)
+    grid = (nc // row_tile,)
+    q, scales = pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, C), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, C), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((row_tile, C), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nc, C), jnp.int8),
+            jax.ShapeDtypeStruct((nc, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, u)
+    return q, scales
+
+
+def dequantize_pallas(q: jax.Array, scales: jax.Array,
+                      row_tile: int = ROW_TILE, interpret: bool = False):
+    """q: [nc, C] int8; scales: [nc, 1] f32. Returns f32 [nc, C]."""
+    nc, C = q.shape
+    assert nc % row_tile == 0, (nc, row_tile)
+    grid = (nc // row_tile,)
+    return pl.pallas_call(
+        _dequantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, C), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_tile, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nc, C), jnp.float32),
+        interpret=interpret,
+    )(q, scales)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the int8-SR quant kernels (identical arithmetic).
+
+Also the codec's compute path off-TPU: interpret-mode Pallas inside the
+vmapped round cores would dominate CPU round time, and this is the same
+math op-for-op (see tests/test_kernels.py::TestQuantKernel parity)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jax.Array, u: jax.Array):
+    """x, u: [nc, C] f32 -> (q [nc, C] int8, scales [nc, 1] f32).
+
+    Per-row symmetric scale max|x|/127; stochastic rounding floor(x/scale + u)
+    with u ~ U[0,1), so E[q·scale] = x and |q·scale − x| < scale."""
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0.0, amax / 127.0, 1.0)
+    q = jnp.floor(x32 / scale + u.astype(jnp.float32))
+    q = jnp.clip(q, -127.0, 127.0)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_ref(q: jax.Array, scales: jax.Array) -> jax.Array:
+    """q: [nc, C] int8; scales: [nc, 1] f32 -> f32 [nc, C]."""
+    return q.astype(jnp.float32) * scales

@@ -227,13 +227,20 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
 
 
 def dryrun_fl_round(algo: str, multi_pod: bool = False,
-                    num_clients: int = 64, n: int = 2048) -> dict:
-    """Compile + execute one shard_mapped FL round on the production mesh.
+                    num_clients: int = 64, n: int = 2048,
+                    comm_codec: str = "identity", rounds: int = 1) -> dict:
+    """Compile + execute shard_mapped FL round(s) on the production mesh.
 
     Uses a synthetic logistic-regression problem (the paper's workload) with
     the K clients partitioned over the mesh's ("pod","data") axes; num_clients
     must divide over those axes (64 covers both 16 and 2x16 client shards).
+
+    ``comm_codec`` threads a repro/comm channel through the sharded round —
+    ``bf16`` (or ``bf16/bf16`` for a compressed downlink too) is the
+    aggregation-numerics measurement the ROADMAP asks for: run a few rounds
+    and compare the recorded loss trace against the fp32 channel.
     """
+    from repro.comm import make_channel
     from repro.core import AlgoHParams, init_state
     from repro.core.sharded import make_sharded_round_fn, num_client_shards
     from repro.data import make_binary_classification, partition
@@ -245,15 +252,20 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
     clients = partition(X, y, num_clients=num_clients, scheme="iid")
     problem = make_logreg_problem(clients, gamma=1e-3)
     hp = AlgoHParams(eta=0.5, local_epochs=3)
-    state = init_state(problem, jax.random.PRNGKey(0), hp)
-    round_fn = jax.jit(make_sharded_round_fn(algo, problem, hp, mesh))
+    channel = make_channel(comm_codec)
+    state = init_state(problem, jax.random.PRNGKey(0), hp, channel)
+    round_fn = jax.jit(
+        make_sharded_round_fn(algo, problem, hp, mesh, channel=channel))
     compiled = round_fn.lower(state).compile()
     compile_s = time.time() - t0
 
     t0 = time.time()
-    state, metrics = round_fn(state)
+    losses = []
+    for _ in range(rounds):
+        state, metrics = round_fn(state)
+        losses.append(float(metrics.loss))
     jax.block_until_ready(metrics.loss)
-    run_s = time.time() - t0
+    run_s = (time.time() - t0) / rounds
 
     cost = _cost_dict(compiled)
     return {
@@ -262,10 +274,12 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
         "chips": 512 if multi_pod else 256,
         "client_shards": num_client_shards(mesh),
         "num_clients": num_clients,
+        "channel": channel.name,
         "compile_s": round(compile_s, 1),
         "run_s": round(run_s, 2),
-        "loss": float(metrics.loss),
-        "comm_floats": float(metrics.comm_floats),
+        "loss": losses[-1],
+        "loss_curve": losses,
+        "comm_bytes": float(metrics.comm_bytes),
         "flops": float(cost.get("flops", 0.0)),
         "collectives": collective_bytes(compiled.as_text()),
     }
@@ -281,6 +295,12 @@ def main() -> None:
     ap.add_argument("--fl-round", type=str, default="",
                     help="dry-run a shard_mapped FL round of this algorithm "
                          "('all' = the two headline FedOSAA variants)")
+    ap.add_argument("--comm-codec", type=str, default="identity",
+                    help="repro/comm channel for --fl-round (e.g. bf16, int8, "
+                         "bf16/bf16 — the ROADMAP bf16 numerics measurement)")
+    ap.add_argument("--fl-rounds", type=int, default=1,
+                    help="rounds to execute in the --fl-round dry-run "
+                         "(>1 records a loss trace for numerics comparisons)")
     args = ap.parse_args()
 
     if args.fl_round:
@@ -288,11 +308,15 @@ def main() -> None:
         algos = (["fedosaa_svrg", "fedosaa_scaffold"]
                  if args.fl_round == "all" else [args.fl_round])
         failures = []
+        codec_tag = ("" if args.comm_codec == "identity"
+                     else f"{args.comm_codec.replace('/', '-').replace(':', '')}__")
         for algo in algos:
-            tag = (f"fl_round__{algo}__"
+            tag = (f"fl_round__{algo}__{codec_tag}"
                    f"{'2x16x16' if args.multi_pod else '16x16'}")
             try:
-                res = dryrun_fl_round(algo, args.multi_pod)
+                res = dryrun_fl_round(algo, args.multi_pod,
+                                      comm_codec=args.comm_codec,
+                                      rounds=args.fl_rounds)
                 with open(os.path.join(RESULTS_DIR, tag + ".json"), "w") as f:
                     json.dump(res, f, indent=1)
                 print(f"OK   {tag}: compile={res['compile_s']}s "

@@ -38,6 +38,14 @@ def main() -> None:
     ap.add_argument("--eta", type=float, default=0.3)
     ap.add_argument("--local-epochs", type=int, default=5)
     ap.add_argument("--damping", type=float, default=1.0)
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="fraction of clients active per round (<1.0 draws a "
+                         "Bernoulli subset each round; weights renormalize)")
+    ap.add_argument("--comm-codec", default="identity",
+                    help="wire-compression channel spec (repro/comm): "
+                         "identity | bf16 | int8[:chunk] | topk[:ratio], "
+                         "optional +ef/+noef and /<downlink-codec> — e.g. "
+                         "int8, topk:0.05, bf16/bf16")
     ap.add_argument("--runtime", choices=("vmap", "sharded"), default="vmap",
                     help="'sharded' shard_maps the client fan-out over the "
                          "('pod','data') mesh axes (core/sharded.py)")
@@ -59,9 +67,12 @@ def main() -> None:
     clients = make_lm_clients(toks, args.clients)
     problem = make_lm_problem(model, clients)
 
+    from repro.comm import make_channel
     from repro.core.anderson import AAConfig
     hp = AlgoHParams(eta=args.eta, local_epochs=args.local_epochs,
+                     participation=args.participation,
                      aa=AAConfig(damping=args.damping, tikhonov=1e-8))
+    channel = make_channel(args.comm_codec)
 
     mesh = None
     if args.runtime == "sharded":
@@ -85,14 +96,18 @@ def main() -> None:
     for algo in algos:
         t0 = time.time()
         h = run_federated(problem, algo, hp, args.rounds,
-                          runtime=args.runtime, mesh=mesh)
+                          runtime=args.runtime, mesh=mesh, channel=channel)
         results[algo] = {
             "loss_curve": [float(v) for v in h.loss],
             "grad_norm_curve": [float(v) for v in h.grad_norm],
+            "comm_bytes": float(h.comm_bytes[-1]),
+            "channel": h.channel,
             "wall_s": time.time() - t0,
         }
         print(f"{algo}: loss {h.loss[0]:.4f} -> {h.loss[-1]:.4f} "
-              f"|g| {h.grad_norm[-1]:.2e}  ({results[algo]['wall_s']:.0f}s)")
+              f"|g| {h.grad_norm[-1]:.2e} "
+              f"wire {h.comm_bytes[-1]/2**20:.2f}MiB[{h.channel}] "
+              f"({results[algo]['wall_s']:.0f}s)")
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:

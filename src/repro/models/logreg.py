@@ -8,16 +8,20 @@ from repro.core.problem import ClientBatch, FLProblem, StackedClients
 
 
 def make_logreg_problem(
-    clients: StackedClients, gamma: float = 1e-3, init_scale: float = 0.0
+    clients: StackedClients, gamma: float = 1e-3, init_scale: float = 0.0,
+    dtype=jnp.float32,
 ) -> FLProblem:
     """f_k(w) = mean_j log(1+exp(−y_j wᵀx_j)) + γ/2 ‖w‖²  over client k's data.
 
     y ∈ {−1, +1}. Initial point w⁰ = 0 (paper §4) unless init_scale > 0.
+    ``dtype=jnp.float64`` (with jax_enable_x64) reproduces the paper's deep
+    rel-error plots — f32 local-step iterations have a fixed-point bias floor
+    around 1e-5 (measured in benchmarks/ext_compression.py).
     """
     d = clients.x.shape[-1]
 
     def loss(w: jax.Array, batch: ClientBatch) -> jax.Array:
-        logits = batch.x @ w * batch.y
+        logits = batch.x.astype(w.dtype) @ w * batch.y
         # log(1+exp(−z)) = softplus(−z), numerically stable
         per = jax.nn.softplus(-logits)
         n = jnp.maximum(jnp.sum(batch.mask), 1.0)
@@ -25,8 +29,8 @@ def make_logreg_problem(
 
     def init(rng: jax.Array) -> jax.Array:
         if init_scale == 0.0:
-            return jnp.zeros((d,), jnp.float32)
-        return init_scale * jax.random.normal(rng, (d,), jnp.float32)
+            return jnp.zeros((d,), dtype)
+        return init_scale * jax.random.normal(rng, (d,), dtype)
 
     return FLProblem(loss=loss, init=init, clients=clients)
 

@@ -5,7 +5,13 @@ import numpy as np
 import pytest
 
 from repro.core import AlgoHParams, init_state, make_round_fn, run_federated, solve_reference
-from repro.core.algorithms import ALGORITHMS, COMM_TABLE, comm_floats_per_round
+from repro.core.algorithms import (
+    ALGORITHMS,
+    COMM_TABLE,
+    _participation_weights,
+    comm_bytes_per_round,
+    comm_floats_per_round,
+)
 from repro.data import make_binary_classification, partition
 from repro.models.logreg import make_logreg_problem
 from repro.utils import tree_math as tm
@@ -133,6 +139,8 @@ class TestMechanics:
         assert rel_err(h, wstar) < 0.5
 
     def test_comm_accounting_matches_table1(self, logreg):
+        """On the default (fp32 identity) channel the byte counters are
+        exactly 4 × the paper's Table 1 float units."""
         prob, _ = logreg
         d = 40
         hp = AlgoHParams(eta=1.0, local_epochs=2, dane_newton_iters=1, dane_cg_iters=3)
@@ -141,9 +149,11 @@ class TestMechanics:
             fn = jax.jit(make_round_fn(algo, prob, hp))
             _, m = fn(state)
             _, units = COMM_TABLE[algo]
-            assert float(m.comm_floats) == pytest.approx(units * d), algo
-            assert float(m.comm_floats) == pytest.approx(
-                comm_floats_per_round(algo, d)), algo
+            assert float(m.comm_bytes) == pytest.approx(4 * units * d), algo
+            assert float(m.comm_bytes) == pytest.approx(
+                4 * comm_floats_per_round(algo, d)), algo
+            assert float(m.comm_bytes) == pytest.approx(
+                comm_bytes_per_round(algo, jax.numpy.zeros(d))), algo
 
     def test_comm_table_audit(self):
         """Paper Table 1 audit: both CommCost fields carry meaning and are
@@ -168,9 +178,9 @@ class TestMechanics:
         state = init_state(prob, jax.random.PRNGKey(0))
         _, m = jax.jit(make_round_fn(algo, prob, hp))(state)
         _, units = COMM_TABLE[algo]
-        assert float(m.comm_floats) == pytest.approx((units + 1) * d)
-        assert float(m.comm_floats) == pytest.approx(
-            comm_floats_per_round(algo, d, line_search=True))
+        assert float(m.comm_bytes) == pytest.approx(4 * (units + 1) * d)
+        assert float(m.comm_bytes) == pytest.approx(
+            4 * comm_floats_per_round(algo, d, line_search=True))
         # line_search on a non-Newton algorithm must NOT charge the extra d
         assert comm_floats_per_round("fedavg", d, line_search=True) == \
             pytest.approx(1.0 * d)
@@ -186,6 +196,81 @@ class TestMechanics:
         for scheme in ("iid", "imbalance", "label_skew"):
             clients = partition(X, y, num_clients=10, scheme=scheme)
             np.testing.assert_allclose(float(clients.weight.sum()), 1.0, rtol=1e-5)
+
+
+class TestParticipation:
+    """Dedicated coverage for _participation_weights and the partial-
+    participation round behavior (AlgoHParams.participation < 1.0)."""
+
+    def _problem(self, K=10):
+        X, y = make_binary_classification("synthetic_small", n=1000, seed=2)
+        clients = partition(X, y, num_clients=K, scheme="imbalance")
+        return make_logreg_problem(clients, gamma=1e-3)
+
+    def test_full_participation_returns_data_weights(self):
+        prob = self._problem()
+        hp = AlgoHParams(participation=1.0)
+        w = _participation_weights(prob, hp, jax.random.PRNGKey(0))
+        np.testing.assert_array_equal(np.asarray(w),
+                                      np.asarray(prob.clients.weight))
+
+    def test_active_weights_renormalize_to_one(self):
+        """Whenever at least one client is drawn, the active weights must sum
+        to 1 and inactive clients must get exactly 0."""
+        prob = self._problem()
+        hp = AlgoHParams(participation=0.5)
+        drew_partial = False
+        for seed in range(20):
+            w = np.asarray(_participation_weights(
+                prob, hp, jax.random.PRNGKey(seed)))
+            active = w > 0
+            if 0 < active.sum() < prob.clients.num_clients:
+                drew_partial = True
+                np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+        assert drew_partial      # 20 seeds at p=0.5, K=10: essentially sure
+
+    def test_zero_active_clients_yields_zero_weights(self):
+        prob = self._problem()
+        hp = AlgoHParams(participation=1e-9)   # Bernoulli(1e-9): nobody drawn
+        w = np.asarray(_participation_weights(prob, hp, jax.random.PRNGKey(0)))
+        np.testing.assert_array_equal(w, 0.0)
+
+    @pytest.mark.parametrize("algo", ["fedosaa_svrg", "scaffold", "giant",
+                                      "dane"])
+    def test_zero_active_round_keeps_model_fixed(self, algo):
+        """The delta-form aggregation degrades to a no-op — not a zeroed
+        model — when a partial-participation round draws no clients."""
+        prob = self._problem(K=8)
+        hp = AlgoHParams(eta=0.5, local_epochs=2, participation=1e-9,
+                         dane_newton_iters=1, dane_cg_iters=3)
+        state = init_state(prob, jax.random.PRNGKey(0), hp)
+        state = state._replace(params=state.params + 0.37)  # off-origin start
+        new_state, m = jax.jit(make_round_fn(algo, prob, hp))(state)
+        np.testing.assert_allclose(np.asarray(new_state.params),
+                                   np.asarray(state.params), rtol=1e-6,
+                                   err_msg=algo)
+        assert np.isfinite(float(m.loss))
+
+    def test_vmap_and_sharded_draw_identical_active_sets(self):
+        """The participation draw happens in the shared prologue: with the
+        same rng both runtimes pick the same clients, so full histories agree
+        (non-AA algorithm — multi-round AA comparisons drift by amplified
+        ulps, see test_sharded_runtime.py). Complements that module's
+        per-round test_partial_participation."""
+        prob = self._problem(K=8)
+        hp = AlgoHParams(eta=0.5, local_epochs=3, participation=0.5)
+        hv = run_federated(prob, "fedsvrg", hp, 4, rng=3)
+        hs = run_federated(prob, "fedsvrg", hp, 4, rng=3, runtime="sharded")
+        np.testing.assert_allclose(hv.loss, hs.loss, rtol=1e-5)
+
+    def test_participation_converges_with_channel(self):
+        """Partial participation composes with wire compression."""
+        prob = self._problem(K=8)
+        hp = AlgoHParams(eta=1.0, local_epochs=10, participation=0.75)
+        wstar = solve_reference(prob, iters=50)
+        h = run_federated(prob, "fedosaa_svrg", hp, 15, w_star=wstar,
+                          channel="int8")
+        assert h.rel_error[-1] < 0.3
 
 
 class TestHeterogeneousDistributions:

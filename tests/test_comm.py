@@ -1,0 +1,287 @@
+"""repro/comm: codec correctness, byte accounting, channel parsing, and the
+end-to-end compression behaviors (error feedback, difference coding) on the
+FL round API."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (
+    Bf16Codec,
+    CommChannel,
+    IdentityCodec,
+    Int8SRCodec,
+    TopKCodec,
+    make_channel,
+    parse_codec,
+)
+from repro.core import (
+    AlgoHParams,
+    comm_bytes_per_round,
+    comm_floats_per_round,
+    init_state,
+    make_round_fn,
+    run_federated,
+    solve_reference,
+)
+from repro.data import make_binary_classification, partition
+from repro.models.logreg import make_logreg_problem
+
+
+@pytest.fixture(scope="module")
+def logreg():
+    X, y = make_binary_classification("synthetic_small", n=2000, seed=0)
+    clients = partition(X, y, num_clients=8, scheme="iid")
+    prob = make_logreg_problem(clients, gamma=1e-3)
+    wstar = solve_reference(prob, iters=50)
+    return prob, wstar
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+class TestCodecs:
+    def test_identity_roundtrip_lossless(self):
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(137), jnp.float32)
+        np.testing.assert_array_equal(np.asarray(IdentityCodec().roundtrip(x)),
+                                      np.asarray(x))
+
+    def test_bf16_roundtrip_error_bound(self):
+        x = jnp.asarray(np.random.default_rng(1).standard_normal(512), jnp.float32)
+        out = Bf16Codec().roundtrip(x)
+        # bf16 has 8 mantissa bits: relative error < 2^-8
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x),
+                                   rtol=2.0 ** -8, atol=1e-30)
+
+    @pytest.mark.parametrize("n", [31, 256, 1000])
+    def test_int8_roundtrip_error_bounded_by_chunk_scale(self, n):
+        rng = np.random.default_rng(n)
+        x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        codec = Int8SRCodec(chunk=64)
+        out = codec.roundtrip(x, jax.random.PRNGKey(0))
+        err = np.abs(np.asarray(out) - np.asarray(x))
+        x_np = np.asarray(x)
+        for c0 in range(0, n, 64):
+            chunk = x_np[c0:c0 + 64]
+            scale = np.abs(chunk).max() / 127.0
+            assert err[c0:c0 + 64].max() <= scale + 1e-7
+
+    def test_int8_sr_unbiased(self):
+        """E[roundtrip(x)] = x: the mean over many independent draws converges
+        at the Monte-Carlo rate to x (this is what lets quantized SVRG keep
+        its unbiased gradient estimates)."""
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.standard_normal(256), jnp.float32)
+        codec = Int8SRCodec()
+        draws = 400
+        outs = jax.vmap(lambda k: codec.roundtrip(x, k))(
+            jax.random.split(jax.random.PRNGKey(0), draws))
+        mean = np.asarray(jnp.mean(outs, axis=0))
+        scale = float(jnp.max(jnp.abs(x))) / 127.0
+        # per-element MC std is < scale; 5 sigma of the mean estimator
+        assert np.max(np.abs(mean - np.asarray(x))) < 5 * scale / np.sqrt(draws)
+
+    def test_topk_keeps_largest_by_magnitude(self):
+        x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05, 0.0, 1.0, -0.3], jnp.float32)
+        out = np.asarray(TopKCodec(ratio=0.25).roundtrip(x))     # k = 2
+        np.testing.assert_array_equal(out, [0, -5.0, 0, 3.0, 0, 0, 0, 0])
+
+    def test_topk_ratio_validation(self):
+        with pytest.raises(ValueError, match="ratio"):
+            TopKCodec(ratio=0.0)
+
+    def test_wire_bytes(self):
+        shape = (1000,)
+        assert IdentityCodec().wire_bytes(shape) == 4000
+        assert Bf16Codec().wire_bytes(shape) == 2000
+        # 1000 values @1B + 4 chunks(256) @4B
+        assert Int8SRCodec().wire_bytes(shape) == 1000 + 4 * 4
+        # k = ceil(0.01*1000) = 10 pairs of (f32, int32)
+        assert TopKCodec(ratio=0.01).wire_bytes(shape) == 80
+
+    def test_tree_roundtrip_distinct_draws_per_leaf(self):
+        """Two identical leaves must not receive identical quantization noise
+        (the leaf index is folded into the rng)."""
+        x = jnp.asarray(np.random.default_rng(3).standard_normal(300), jnp.float32)
+        tree = {"a": x, "b": x}
+        out = Int8SRCodec().tree_roundtrip(tree, jax.random.PRNGKey(0))
+        assert not np.array_equal(np.asarray(out["a"]), np.asarray(out["b"]))
+
+
+# ---------------------------------------------------------------------------
+# channel construction + byte accounting
+# ---------------------------------------------------------------------------
+
+class TestChannel:
+    def test_parse_specs(self):
+        assert make_channel(None).is_identity
+        assert make_channel("identity").is_identity
+        ch = make_channel("int8")
+        assert isinstance(ch.up, Int8SRCodec) and ch.error_feedback
+        assert not make_channel("int8+noef").error_feedback
+        assert make_channel("bf16").error_feedback is False
+        ch = make_channel("topk:0.05/bf16")
+        assert isinstance(ch.up, TopKCodec) and ch.up.ratio == 0.05
+        assert isinstance(ch.down, Bf16Codec)
+        assert isinstance(make_channel("int8:128").up, Int8SRCodec)
+        assert make_channel("int8:128").up.chunk == 128
+
+    def test_unknown_codec_raises(self):
+        with pytest.raises(ValueError, match="unknown codec"):
+            make_channel("fp8")
+        with pytest.raises(ValueError, match="unknown codec"):
+            parse_codec("zstd")
+
+    def test_stochastic_downlink_rejected(self):
+        with pytest.raises(ValueError, match="stochastic"):
+            make_channel("bf16/int8")
+
+    def test_delta_only_downlink_rejected(self):
+        """The downlink carries absolute state (w^t, ∇f); sparsifying it
+        floors convergence (measured rel-err 1.1 vs 2.7e-3) — reject it."""
+        with pytest.raises(ValueError, match="delta-only"):
+            make_channel("bf16/topk:0.1")
+
+    def test_channel_passthrough(self):
+        ch = make_channel("int8")
+        assert make_channel(ch) is ch
+
+    def test_delta_only_routing(self):
+        """topk applies to delta uplinks only; absolute-state (aux) uploads
+        fall back to fp32 — and the byte accounting charges them fp32."""
+        ch = make_channel("topk:0.1")
+        assert isinstance(ch.up_codec("delta"), TopKCodec)
+        assert isinstance(ch.up_codec("aux"), IdentityCodec)
+        tree = jnp.zeros(100)
+        assert ch.uplink_bytes(tree, kind="aux") == 400
+        assert ch.uplink_bytes(tree, kind="delta") == 80
+
+    def test_bytes_per_round_identity_matches_floats(self):
+        d = 54
+        params = jnp.zeros(d)
+        for algo in ("fedavg", "fedsvrg", "scaffold", "fedosaa_svrg", "giant"):
+            assert comm_bytes_per_round(algo, params) == pytest.approx(
+                4 * comm_floats_per_round(algo, d))
+        assert comm_bytes_per_round("giant", params, line_search=True) == \
+            pytest.approx(4 * comm_floats_per_round("giant", d, line_search=True))
+
+    def test_bytes_per_round_codec_exact(self):
+        d = 54
+        params = jnp.zeros(d)
+        # fedsvrg = 2 uplink units: delta + gradient
+        assert comm_bytes_per_round("fedsvrg", params, "bf16") == 2 * 2 * d
+        assert comm_bytes_per_round("fedsvrg", params, "int8") == 2 * (d + 4)
+        # topk: delta unit sparsified (k=3 pairs), gradient unit fp32
+        k = TopKCodec(ratio=0.05).k_for(d)
+        assert comm_bytes_per_round("fedsvrg", params, "topk:0.05") == \
+            8 * k + 4 * d
+        # fedavg = 1 delta unit only
+        assert comm_bytes_per_round("fedavg", params, "topk:0.05") == 8 * k
+        # line-search extra broadcast pays the DOWNLINK codec
+        assert comm_bytes_per_round("giant", params, "int8/bf16",
+                                    line_search=True) == 2 * (d + 4) + 2 * d
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: channels on the FL round API
+# ---------------------------------------------------------------------------
+
+class TestChannelRounds:
+    def test_identity_channel_bit_identical(self, logreg):
+        """channel=None and channel='identity' add nothing to the graph."""
+        prob, wstar = logreg
+        hp = AlgoHParams(eta=1.0, local_epochs=5)
+        h0 = run_federated(prob, "fedosaa_svrg", hp, 5, w_star=wstar)
+        h1 = run_federated(prob, "fedosaa_svrg", hp, 5, w_star=wstar,
+                           channel="identity")
+        np.testing.assert_array_equal(h0.loss, h1.loss)
+        np.testing.assert_array_equal(h0.comm_bytes, h1.comm_bytes)
+
+    @pytest.mark.parametrize("spec", ["bf16", "int8", "topk:0.25"])
+    def test_fedosaa_converges_under_compression(self, logreg, spec):
+        prob, wstar = logreg
+        hp = AlgoHParams(eta=1.0, local_epochs=10)
+        h = run_federated(prob, "fedosaa_svrg", hp, 20, w_star=wstar,
+                          channel=spec)
+        assert h.rel_error[-1] < 1e-2, spec
+        # compressed channels must actually ship fewer bytes than fp32
+        h0 = run_federated(prob, "fedosaa_svrg", hp, 1)
+        assert h.comm_bytes[-1] / 20 < h0.comm_bytes[-1]
+
+    def test_int8_diff_coding_removes_gradient_noise_floor(self, logreg):
+        """Without the difference-coded aux uplink, SR noise on the O(1)
+        local gradients leaves a floor; with it, int8 tracks fp32. Guard the
+        mechanism by asserting int8 keeps converging well past the floor a
+        naive quantizer stalls at (measured ~1e-3 on this problem)."""
+        prob, wstar = logreg
+        hp = AlgoHParams(eta=1.0, local_epochs=10)
+        h = run_federated(prob, "fedosaa_svrg", hp, 30, w_star=wstar,
+                          channel="int8")
+        assert h.rel_error[-1] < 2e-4
+
+    def test_error_feedback_state_carried_and_nonzero(self, logreg):
+        prob, _ = logreg
+        hp = AlgoHParams(eta=1.0, local_epochs=3)
+        ch = make_channel("topk:0.1")
+        state = init_state(prob, jax.random.PRNGKey(0), hp, ch)
+        assert state.comm is not None
+        assert "ef" in state.comm["delta"]
+        fn = jax.jit(make_round_fn("fedosaa_svrg", prob, hp, ch))
+        state, _ = fn(state)
+        ef = np.asarray(jax.tree.leaves(state.comm["delta"]["ef"])[0])
+        assert ef.shape[0] == prob.clients.num_clients
+        assert np.abs(ef).max() > 0          # topk drops mass -> residual
+        # aux leg of a delta-only codec is fp32: no aux state
+        assert state.comm["aux"] == {}
+
+    def test_algo_aware_state_allocation(self, logreg):
+        """init_state(algo=...) skips buffers the round function never reads:
+        Newton-type rounds are comm-stateless, the AVG family has no aux
+        uplink — at LM scale each skipped buffer is a K×d array."""
+        prob, _ = logreg
+        ch = make_channel("int8")
+        for algo in ("giant", "newton_gmres", "dane"):
+            s = init_state(prob, jax.random.PRNGKey(0), AlgoHParams(), ch, algo)
+            assert s.comm is None, algo
+        s = init_state(prob, jax.random.PRNGKey(0), AlgoHParams(), ch, "fedavg")
+        assert "ef" in s.comm["delta"] and s.comm["aux"] == {}
+        s = init_state(prob, jax.random.PRNGKey(0), AlgoHParams(), ch,
+                       "fedosaa_svrg")
+        assert "ref" in s.comm["aux"]
+        # a stateless-algo state still runs its round end-to-end
+        hp = AlgoHParams(local_epochs=2)
+        s = init_state(prob, jax.random.PRNGKey(0), hp, ch, "giant")
+        _, m = jax.jit(make_round_fn("giant", prob, hp, ch))(s)
+        assert np.isfinite(float(m.loss))
+
+    def test_noef_channel_carries_no_ef_state(self, logreg):
+        prob, _ = logreg
+        state = init_state(prob, jax.random.PRNGKey(0), AlgoHParams(),
+                           make_channel("topk:0.1+noef"))
+        assert state.comm is None
+        # int8+noef still needs the aux diff-coding reference
+        state = init_state(prob, jax.random.PRNGKey(0), AlgoHParams(),
+                           make_channel("int8+noef"))
+        assert state.comm is not None
+        assert "ef" not in state.comm["delta"] and state.comm["delta"] == {}
+        assert "ref" in state.comm["aux"]
+
+    def test_comm_bytes_metric_matches_static_accounting(self, logreg):
+        prob, _ = logreg
+        hp = AlgoHParams(eta=1.0, local_epochs=3)
+        p0 = prob.init(jax.random.PRNGKey(0))
+        for spec in (None, "bf16", "int8", "topk:0.1"):
+            for algo in ("fedavg", "fedsvrg", "scaffold"):
+                ch = make_channel(spec)
+                fn = jax.jit(make_round_fn(algo, prob, hp, ch))
+                _, m = fn(init_state(prob, jax.random.PRNGKey(0), hp, ch))
+                assert float(m.comm_bytes) == pytest.approx(
+                    comm_bytes_per_round(algo, p0, ch)), (spec, algo)
+
+    def test_history_floats_compat_column(self, logreg):
+        prob, _ = logreg
+        hp = AlgoHParams(eta=1.0, local_epochs=3)
+        h = run_federated(prob, "fedsvrg", hp, 3)
+        np.testing.assert_allclose(h.comm_floats, h.comm_bytes / 4.0)
+        assert h.channel == "identity"

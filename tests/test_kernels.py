@@ -14,6 +14,12 @@ from repro.kernels.anderson.ref import aa_step_ref, gram_ref, update_ref
 from repro.kernels.anderson.anderson import gram_pallas, update_pallas
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.quant.ops import (
+    dequantize_2d,
+    int8_sr_roundtrip,
+    quantize_2d,
+)
+from repro.kernels.quant.ref import dequantize_ref, quantize_ref
 from repro.kernels.ssd.ops import ssd_chunk
 from repro.kernels.ssd.ref import ssd_chunk_ref
 
@@ -92,6 +98,71 @@ class TestAndersonKernel:
         np.testing.assert_allclose(
             np.asarray(out_kernel), np.asarray(out_core), rtol=2e-3, atol=2e-4
         )
+
+
+# ---------------------------------------------------------------------------
+# quant (int8-SR wire codec, repro/comm)
+# ---------------------------------------------------------------------------
+
+class TestQuantKernel:
+    @pytest.mark.parametrize("nc,C", [(1, 256), (3, 256), (8, 128), (17, 512)])
+    def test_quantize_pallas_matches_ref_bit_exact(self, nc, C):
+        """Same uniforms in -> the Pallas kernel (interpret mode on CPU) and
+        the jnp oracle must agree EXACTLY: the int8 codes and f32 scales are
+        the wire format, so parity is integer equality, not allclose."""
+        rng = np.random.default_rng(nc * 1000 + C)
+        x = jnp.asarray(rng.standard_normal((nc, C)), jnp.float32)
+        u = jnp.asarray(rng.uniform(0, 1, (nc, C)), jnp.float32)
+        qp, sp = quantize_2d(x, u, use_pallas=True)
+        qr, sr = quantize_ref(x, u)
+        np.testing.assert_array_equal(np.asarray(qp), np.asarray(qr))
+        np.testing.assert_array_equal(np.asarray(sp), np.asarray(sr))
+        dp = dequantize_2d(qp, sp, use_pallas=True)
+        dr = dequantize_ref(qr, sr)
+        np.testing.assert_array_equal(np.asarray(dp), np.asarray(dr))
+
+    def test_roundtrip_error_bounded_by_chunk_scale(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal(1000) * 10.0, jnp.float32)
+        out = int8_sr_roundtrip(x, jax.random.PRNGKey(1), chunk=256)
+        x_np, err = np.asarray(x), np.abs(np.asarray(out) - np.asarray(x))
+        for c0 in range(0, 1000, 256):
+            scale = np.abs(x_np[c0:c0 + 256]).max() / 127.0
+            assert err[c0:c0 + 256].max() <= scale + 1e-6
+
+    def test_roundtrip_unbiased_over_many_draws(self):
+        """Stochastic rounding is unbiased: the empirical mean over draws
+        converges to x at the Monte-Carlo rate."""
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.standard_normal(512), jnp.float32)
+        draws = 500
+        outs = jax.vmap(lambda k: int8_sr_roundtrip(x, k))(
+            jax.random.split(jax.random.PRNGKey(0), draws))
+        mean = np.asarray(jnp.mean(outs, axis=0))
+        scale = float(jnp.max(jnp.abs(x))) / 127.0
+        assert np.max(np.abs(mean - np.asarray(x))) < 5 * scale / np.sqrt(draws)
+
+    def test_zero_chunks_and_exact_codes(self):
+        # all-zero chunks must decode to exactly zero (scale fallback = 1)
+        z = jnp.zeros(300, jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(int8_sr_roundtrip(z, jax.random.PRNGKey(0))), 0.0)
+        # a chunk whose values sit exactly on code points is lossless:
+        # x = scale * {-127..127} with max 127 -> scale = 1
+        x = jnp.asarray(np.arange(-127, 129, 2), jnp.float32)  # 128 values
+        out = int8_sr_roundtrip(x, jax.random.PRNGKey(0), chunk=128)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(1, 2000), chunk=st.sampled_from([64, 128, 256]),
+           seed=st.integers(0, 99))
+    def test_property_any_shape_bounded(self, n, chunk, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        out = int8_sr_roundtrip(x, jax.random.PRNGKey(seed), chunk=chunk)
+        assert out.shape == x.shape
+        scale = float(jnp.max(jnp.abs(x))) / 127.0
+        assert float(jnp.max(jnp.abs(out - x))) <= scale + 1e-6
 
 
 # ---------------------------------------------------------------------------

@@ -43,14 +43,18 @@ def assert_tree_allclose(a, b, rtol=1e-6, atol=1e-7, what=""):
         )
 
 
-def assert_round_equal(sv, mv, ss, ms, what=""):
-    assert_tree_allclose(sv.params, ss.params, what=f"{what} params")
-    assert_tree_allclose(sv.c, ss.c, what=f"{what} server control variate")
-    assert_tree_allclose(sv.c_k, ss.c_k, what=f"{what} client control variates")
+def assert_round_equal(sv, mv, ss, ms, what="", rtol=1e-6, atol=1e-7):
+    assert_tree_allclose(sv.params, ss.params, rtol, atol, what=f"{what} params")
+    assert_tree_allclose(sv.c, ss.c, rtol, atol, what=f"{what} server control variate")
+    assert_tree_allclose(sv.c_k, ss.c_k, rtol, atol, what=f"{what} client control variates")
     if sv.hist_s is not None:
-        assert_tree_allclose(sv.hist_s, ss.hist_s, what=f"{what} hist_s")
-        assert_tree_allclose(sv.hist_y, ss.hist_y, what=f"{what} hist_y")
-    for field in ("loss", "grad_norm", "comm_floats"):
+        assert_tree_allclose(sv.hist_s, ss.hist_s, rtol, atol, what=f"{what} hist_s")
+        assert_tree_allclose(sv.hist_y, ss.hist_y, rtol, atol, what=f"{what} hist_y")
+    assert (sv.comm is None) == (ss.comm is None), what
+    if sv.comm is not None:
+        assert_tree_allclose(sv.comm, ss.comm, rtol, atol,
+                             what=f"{what} comm state")
+    for field in ("loss", "grad_norm", "comm_bytes"):
         np.testing.assert_allclose(
             float(getattr(mv, field)), float(getattr(ms, field)),
             rtol=1e-6, err_msg=f"{what} {field}",
@@ -65,16 +69,18 @@ def assert_round_equal(sv, mv, ss, ms, what=""):
         np.testing.assert_allclose(gv, gs, rtol=0.05, err_msg=f"{what} gram_cond")
 
 
-def roundwise_compare(prob, mesh, algo, hp, rounds=3):
+def roundwise_compare(prob, mesh, algo, hp, rounds=3, channel=None,
+                      rtol=1e-6, atol=1e-7):
     """Advance the vmap state; at every round apply BOTH runtimes to the same
     state and compare the full outputs."""
-    fv = jax.jit(make_round_fn(algo, prob, hp))
-    fs = jax.jit(make_sharded_round_fn(algo, prob, hp, mesh))
-    state = init_state(prob, jax.random.PRNGKey(0), hp)
+    fv = jax.jit(make_round_fn(algo, prob, hp, channel))
+    fs = jax.jit(make_sharded_round_fn(algo, prob, hp, mesh, channel=channel))
+    state = init_state(prob, jax.random.PRNGKey(0), hp, channel)
     for t in range(rounds):
         sv, mv = fv(state)
         ss, ms = fs(state)
-        assert_round_equal(sv, mv, ss, ms, what=f"{algo} round {t}")
+        assert_round_equal(sv, mv, ss, ms, what=f"{algo} round {t}",
+                           rtol=rtol, atol=atol)
         state = sv
 
 
@@ -134,6 +140,55 @@ class TestRoundEquivalence:
         roundwise_compare(prob, mesh, "fedosaa_svrg", hp, rounds=2)
 
 
+class TestCompressedRoundEquivalence:
+    """Every repro/comm codec must produce identical rounds under the vmap
+    and shard_map runtimes (rtol 1e-5 on the host mesh): the per-client
+    encode/decode — including the stochastic int8 draws, which depend only on
+    the prologue-split client rngs — happens before the psum, so sharding
+    cannot change what crosses the wire. The carried comm state (error
+    feedback, diff-coding references) is compared too."""
+
+    @pytest.mark.parametrize("spec", ["bf16", "int8", "topk:0.1"])
+    @pytest.mark.parametrize("algo", ["fedosaa_svrg", "fedosaa_scaffold",
+                                      "fedavg"])
+    def test_codecs_match_vmap(self, setup, algo, spec):
+        prob, mesh = setup
+        roundwise_compare(prob, mesh, algo,
+                          AlgoHParams(eta=0.5, local_epochs=3), rounds=3,
+                          channel=spec, rtol=1e-5)
+
+    def test_codec_with_carry_history(self, setup):
+        prob, mesh = setup
+        hp = AlgoHParams(eta=0.5, local_epochs=3, carry_history=2,
+                         aa=AAConfig(tikhonov=1e-6, damping=0.7))
+        roundwise_compare(prob, mesh, "fedosaa_svrg", hp, rounds=3,
+                          channel="int8", rtol=1e-5)
+
+    def test_codec_newton_and_line_search(self, setup):
+        prob, mesh = setup
+        hp = AlgoHParams(local_epochs=5, line_search=True)
+        roundwise_compare(prob, mesh, "giant", hp, rounds=2,
+                          channel="int8", rtol=1e-5)
+
+    def test_downlink_codec(self, setup):
+        prob, mesh = setup
+        roundwise_compare(prob, mesh, "fedosaa_svrg",
+                          AlgoHParams(eta=0.5, local_epochs=3), rounds=2,
+                          channel="bf16/bf16", rtol=1e-5)
+
+    def test_compressed_sharded_round_has_collectives(self, setup):
+        """The dequantized representation is what the psum reduces: the
+        compressed round still lowers to one XLA computation with the
+        client-axis all-reduce."""
+        prob, mesh = setup
+        hp = AlgoHParams(eta=0.5, local_epochs=3)
+        fn = jax.jit(make_sharded_round_fn("fedosaa_svrg", prob, hp, mesh,
+                                           channel="int8"))
+        state = init_state(prob, jax.random.PRNGKey(0), hp, "int8")
+        compiled = fn.lower(state).compile()
+        assert "all-reduce" in compiled.as_text()
+
+
 class TestShardedMechanics:
     def test_single_xla_computation(self, setup):
         """The whole sharded round lowers and compiles as ONE jitted XLA
@@ -151,7 +206,7 @@ class TestShardedMechanics:
         hv = run_federated(prob, "fedavg", hp, 5, rng=0)
         hs = run_federated(prob, "fedavg", hp, 5, rng=0, runtime="sharded")
         np.testing.assert_allclose(hs.loss, hv.loss, rtol=1e-5)
-        np.testing.assert_allclose(hs.comm_floats, hv.comm_floats, rtol=1e-6)
+        np.testing.assert_allclose(hs.comm_bytes, hv.comm_bytes, rtol=1e-6)
         with pytest.raises(ValueError, match="runtime"):
             run_federated(prob, "fedavg", hp, 1, runtime="pmap")
 
