@@ -14,9 +14,13 @@ else
     echo "ci: offline — dev extras skipped (hypothesis tests will skip)"
 fi
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+# --durations=25 surfaces the slowest tests in the workflow log so tier-1
+# runtime creep is visible in every CI run, not discovered after the fact.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q --durations=25
 
 # Benchmark smoke: every wire codec (repro/comm) runs end-to-end on a tiny
-# config and int8 stays on the fp32 convergence track — codec regressions
-# fail CI here instead of surviving until the full benchmark run.
+# config — SVRG family AND the stateful Newton family (giant/newton_gmres
+# rows guard the schema'd diff-coded wire) — and int8 stays on the fp32
+# convergence track; codec regressions fail CI here instead of surviving
+# until the full benchmark run.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.ext_compression --smoke

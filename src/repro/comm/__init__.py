@@ -20,3 +20,12 @@ from repro.comm.codecs import (  # noqa: F401
     TopKCodec,
     parse_codec,
 )
+from repro.comm.schema import (  # noqa: F401
+    CTRL_UPLINK,
+    DELTA_UPLINK,
+    DIR_UPLINK,
+    GRAD_UPLINK,
+    UplinkSpec,
+    init_schema_state,
+    validate_schema,
+)

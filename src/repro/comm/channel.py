@@ -16,9 +16,10 @@ optimum and unbiased ones (int8-SR) lose no signal to quantization noise
 accumulation. Absolute-state uploads additionally carry a difference-coding
 reference there (see ServerState.comm / CrossClientReduce.uplink).
 
-Byte accounting convention (matches the historical float counting): a round
-costs ``float_units × uplink_bytes(params)`` — Table 1's client-uplink units,
-now codec-exact — plus one ``downlink_bytes`` for the GIANT line-search extra
+Byte accounting convention: a round costs the sum of ``uplink_bytes(params,
+kind)`` over the algorithm's declarative uplink schema (comm/schema.py, one
+model-sized record per Table 1 client-uplink unit, each at its kind's
+codec-exact rate) plus one ``downlink_bytes`` for the GIANT line-search extra
 broadcast. Per-client scalar uplinks (losses, AA stats) are ignored, as the
 paper's Table 1 ignores them. The identity channel therefore reproduces the
 old counters exactly: comm_bytes == 4 × comm_floats.
@@ -82,6 +83,29 @@ class CommChannel:
         if kind == "aux" and self.up.delta_only:
             return IdentityCodec()
         return self.up
+
+    def state_buffers(self, spec) -> "tuple[str, ...]":
+        """Which per-client buffers an uplink declared by ``spec`` (a
+        comm/schema.py UplinkSpec) carries across rounds under this channel.
+
+        "ef"  — error-feedback residual, added to the next upload (any lossy
+                codec with ``error_feedback`` on);
+        "ref" — difference-coding reference for absolute-state ("aux")
+                uploads: the wire carries v_k − h_k, so quantization noise
+                decays with the diff instead of staying O(1) at the optimum.
+
+        Empty for identity wires and for non-stateful specs — the schema's
+        allocator (comm/schema.py::init_schema_state) skips those tags.
+        """
+        codec = self.up_codec(spec.kind)
+        if isinstance(codec, IdentityCodec) or not spec.stateful:
+            return ()
+        buffers = []
+        if self.error_feedback:
+            buffers.append("ef")
+        if spec.kind == "aux":
+            buffers.append("ref")
+        return tuple(buffers)
 
     # ---- wire simulation ---------------------------------------------------
     # (uplinks go through CrossClientReduce.uplink, which owns the error-

@@ -15,6 +15,17 @@ client axis — identical under the vmap and shard_map runtimes.
 
 ``wire_bytes`` is static (shape-only), which is what makes the per-round byte
 accounting exact rather than sampled.
+
+Codecs never see carried state: statefulness is the CHANNEL's job, driven by
+the declarative uplink schemas (repro/comm/schema.py). Every round core —
+SVRG/SCAFFOLD families and the Newton family (GIANT, Newton-GMRES, DANE)
+alike — declares its uploads as UplinkSpec records, and the channel resolves
+error-feedback residuals and difference-coding references for each record
+from ServerState.comm. There is deliberately no stateless uplink path left:
+before the schema refactor the Newton rounds shipped raw gradients with no
+diff-coding reference, and every lossy codec floored them (bf16 1.2e-4, int8
+6.7e-4 rel-error vs 5e-7 on the fp32 wire); with the schema'd wire they
+converge to 1e-6 under int8 (benchmarks/results/ext_compression.json).
 """
 from __future__ import annotations
 

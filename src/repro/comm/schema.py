@@ -1,0 +1,109 @@
+"""Declarative uplink schemas: what a round puts on the wire, as data.
+
+Every round core (core/algorithms.py) declares its client→server uploads as a
+tuple of :class:`UplinkSpec` records — one per wire crossing, in round order.
+The record is the single source of truth three consumers read:
+
+  * ``init_schema_state`` allocates exactly the per-client comm buffers the
+    algorithm's channel needs (error-feedback residuals, difference-coding
+    references) — nothing more, keyed by ``tag`` in ``ServerState.comm``;
+  * ``CrossClientReduce.uplink`` resolves those buffers from the carried
+    state uniformly, so EVERY algorithm's uploads are stateful under a lossy
+    channel — an algorithm cannot re-introduce a stateless wire by accident,
+    it would have to declare one;
+  * ``comm_bytes_per_round`` charges each spec its codec-exact bytes
+    (``kind`` routes delta-only codecs to the fp32 aux rate).
+
+Fields:
+
+  tag      — unique name of the upload within its round; the key of its
+             carried buffers in ``ServerState.comm``.
+  kind     — "delta": the quantity vanishes at the optimum (model deltas,
+             Newton directions) and always travels through the configured
+             uplink codec; "aux": absolute state (gradient collection,
+             control variates) — delta-only codecs fall back to fp32, and
+             lossy codecs get a DIANA-style difference-coding reference so
+             quantization noise decays with the diff instead of staying O(1).
+  anchored — the wire quantity is ``value − anchor`` for a broadcast-known
+             anchor (model uploads travel as deltas from w^t); the channel
+             re-bases on the anchor after decoding.
+  stateful — eligible for carried buffers. Every model-sized upload is;
+             reserved so future scalar/sketch uploads can opt out.
+  fold     — integer folded into the per-client rng keys by stochastic
+             codecs; distinct per tag so one round's uploads never share
+             quantization draws.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+#: valid ``UplinkSpec.kind`` values (see CommChannel.up_codec)
+UPLINK_KINDS = ("delta", "aux")
+
+
+class UplinkSpec(NamedTuple):
+    tag: str
+    kind: str
+    anchored: bool
+    stateful: bool
+    fold: int
+
+
+#: canonical uplinks shared by the round cores (core/algorithms.py)
+GRAD_UPLINK = UplinkSpec("grad", "aux", anchored=False, stateful=True, fold=101)
+DELTA_UPLINK = UplinkSpec("delta", "delta", anchored=True, stateful=True, fold=102)
+CTRL_UPLINK = UplinkSpec("ctrl", "aux", anchored=False, stateful=True, fold=103)
+DIR_UPLINK = UplinkSpec("dir", "delta", anchored=False, stateful=True, fold=104)
+
+
+def validate_schema(schema: "tuple[UplinkSpec, ...]") -> "tuple[UplinkSpec, ...]":
+    """Reject duplicate tags/folds and unknown kinds at declaration time."""
+    tags = [s.tag for s in schema]
+    folds = [s.fold for s in schema]
+    if len(set(tags)) != len(tags):
+        raise ValueError(f"duplicate uplink tags in schema: {tags}")
+    if len(set(folds)) != len(folds):
+        raise ValueError(f"duplicate rng folds in schema: {folds}")
+    for s in schema:
+        if s.kind not in UPLINK_KINDS:
+            raise ValueError(
+                f"uplink {s.tag!r}: unknown kind {s.kind!r}; "
+                f"choose from {UPLINK_KINDS}")
+    return schema
+
+
+def init_schema_state(channel, schema: "tuple[UplinkSpec, ...]",
+                      params: Pytree, K: int) -> "Pytree | None":
+    """Allocate the per-client comm buffers ``schema`` needs under ``channel``.
+
+    Returns ``{tag: {"ef": [K,...] zeros, "ref": [K,...] zeros}}`` with only
+    the buffers :meth:`CommChannel.state_buffers` says each uplink carries —
+    tags that carry none are omitted entirely, and the whole state is None
+    when no uplink carries any (lossless channels stay zero-overhead).
+    """
+    validate_schema(schema)
+    stacked_zeros = lambda: jax.tree.map(
+        lambda z: jnp.zeros((K,) + z.shape, z.dtype), params)
+    state = {}
+    for spec in schema:
+        buffers = channel.state_buffers(spec)
+        if buffers:
+            state[spec.tag] = {b: stacked_zeros() for b in buffers}
+    return state or None
+
+
+__all__ = [
+    "CTRL_UPLINK",
+    "DELTA_UPLINK",
+    "DIR_UPLINK",
+    "GRAD_UPLINK",
+    "UPLINK_KINDS",
+    "UplinkSpec",
+    "init_schema_state",
+    "validate_schema",
+]

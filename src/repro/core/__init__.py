@@ -9,15 +9,18 @@ from repro.core.anderson import (  # noqa: F401
 from repro.core.algorithms import (  # noqa: F401
     ALGORITHMS,
     COMM_TABLE,
+    UPLINK_SCHEMAS,
     AlgoHParams,
     CommCost,
     RoundMetrics,
     ServerState,
     comm_bytes_per_round,
     comm_floats_per_round,
+    init_comm_state,
     init_state,
     make_round_fn,
 )
+from repro.comm.schema import UplinkSpec  # noqa: F401
 from repro.comm import CommChannel, make_channel  # noqa: F401
 from repro.core.sharded import make_sharded_round_fn  # noqa: F401
 from repro.core.problem import (  # noqa: F401

@@ -39,6 +39,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm import CommChannel, IDENTITY_CHANNEL, IdentityCodec, make_channel
+from repro.comm.schema import (
+    CTRL_UPLINK,
+    DELTA_UPLINK,
+    DIR_UPLINK,
+    GRAD_UPLINK,
+    UplinkSpec,
+    init_schema_state,
+    validate_schema,
+)
 from repro.core.anderson import AAConfig, AAStats, lbfgs_two_loop, multisecant_update, trajectory_to_sy
 from repro.core.problem import ClientBatch, FLProblem, sample_minibatch
 from repro.utils import tree_math as tm
@@ -67,23 +76,6 @@ class CommCost(NamedTuple):
     round_trips: int
     float_units: float
 
-    def bytes_per_round(self, params: Pytree, channel: CommChannel,
-                        extra_broadcasts: int = 0) -> float:
-        """Exact bytes on the wire for one round through ``channel``.
-
-        Table 1's first uplink unit is the model delta / direction (always
-        the uplink codec); units beyond 1 are absolute-state uploads
-        (gradients, control variates) and pay the aux rate — fp32 when the
-        codec is delta-only (topk). ``extra_broadcasts`` counts additional
-        downlink d-vectors (the GIANT line-search direction) at the broadcast
-        codec's cost. The identity channel reproduces the historical float
-        counting exactly: bytes == 4 × floats.
-        """
-        return (channel.uplink_bytes(params, kind="delta")
-                + (self.float_units - 1.0) * channel.uplink_bytes(params, kind="aux")
-                + extra_broadcasts * channel.downlink_bytes(params))
-
-
 COMM_TABLE = {
     "fedavg":           CommCost(1, 1.0),
     "fedsvrg":          CommCost(2, 2.0),
@@ -96,6 +88,42 @@ COMM_TABLE = {
     "newton_gmres":     CommCost(2, 2.0),
     "dane":             CommCost(2, 2.0),
 }
+
+
+# --------------------------------------------------------------------------
+# declarative uplink schemas (comm/schema.py)
+#
+# One UplinkSpec record per wire crossing of a round, in round order. The
+# schema is what makes every algorithm's wire STATEFUL under a lossy channel:
+# init_comm_state allocates exactly the buffers each record needs, and
+# CrossClientReduce.uplink resolves error-feedback residuals and diff-coding
+# references from ServerState.comm by the record's tag — uniformly, for the
+# SVRG/SCAFFOLD families and the Newton family alike. A new algorithm gets a
+# stateful wire by declaring its schema here; it cannot silently opt out.
+# --------------------------------------------------------------------------
+
+_SVRG_UPLINKS = validate_schema((GRAD_UPLINK, DELTA_UPLINK))
+_SCAFFOLD_UPLINKS = validate_schema((DELTA_UPLINK, CTRL_UPLINK))
+_AVG_UPLINKS = validate_schema((DELTA_UPLINK,))
+_NEWTON_UPLINKS = validate_schema((GRAD_UPLINK, DIR_UPLINK))
+
+UPLINK_SCHEMAS: "dict[str, tuple[UplinkSpec, ...]]" = {
+    "fedavg":           _AVG_UPLINKS,
+    "fedosaa_avg":      _AVG_UPLINKS,
+    "fedsvrg":          _SVRG_UPLINKS,
+    "fedosaa_svrg":     _SVRG_UPLINKS,
+    "scaffold":         _SCAFFOLD_UPLINKS,
+    "fedosaa_scaffold": _SCAFFOLD_UPLINKS,
+    "lbfgs":            _SVRG_UPLINKS,
+    "giant":            _NEWTON_UPLINKS,
+    "newton_gmres":     _NEWTON_UPLINKS,
+    "dane":             _SVRG_UPLINKS,
+}
+
+#: union of every tag — the allocation for algorithm-agnostic callers
+#: (init_state(algo=None)); unused tags ride through rounds untouched
+DEFAULT_SCHEMA = validate_schema(
+    (GRAD_UPLINK, DELTA_UPLINK, CTRL_UPLINK, DIR_UPLINK))
 
 
 def comm_floats_per_round(algo: str, d: int, line_search: bool = False) -> float:
@@ -115,14 +143,22 @@ def comm_bytes_per_round(algo: str, params: Pytree,
                          line_search: bool = False) -> float:
     """Bytes on the wire for one round of ``algo`` through ``channel``.
 
-    Codec-exact: int8 pays 1 byte/value plus one f32 scale per chunk, topk
-    pays 8 bytes per kept entry, etc. (repro/comm). Same conventions as
-    ``comm_floats_per_round`` — client-uplink units from Table 1, plus the
-    GIANT line-search extra broadcast; per-client scalar uplinks ignored.
+    Accounted from the algorithm's declarative uplink schema: each UplinkSpec
+    is charged its codec-exact bytes at its kind's rate (int8 pays 1
+    byte/value plus one f32 scale per chunk, topk pays 8 bytes per kept
+    entry, aux uploads of a delta-only codec pay fp32 — repro/comm), plus the
+    GIANT line-search extra broadcast at the downlink codec's rate.
+    Per-client scalar uplinks (losses, AA stats) are ignored, as the paper's
+    Table 1 ignores them; the schema lengths equal Table 1's float_units
+    (asserted in tests), so the identity channel reproduces the historical
+    counters exactly: bytes == 4 × comm_floats_per_round.
     """
     channel = make_channel(channel)
-    extra = 1 if (line_search and algo in ("giant", "newton_gmres")) else 0
-    return COMM_TABLE[algo].bytes_per_round(params, channel, extra)
+    total = sum(channel.uplink_bytes(params, kind=spec.kind)
+                for spec in UPLINK_SCHEMAS[algo])
+    if line_search and algo in ("giant", "newton_gmres"):
+        total += channel.downlink_bytes(params)
+    return float(total)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,15 +186,17 @@ class ServerState(NamedTuple):
     hist_s: Pytree = None   # [K, H, ...] carried AA columns (App. A opt. 1)
     hist_y: Pytree = None
     comm: Pytree = None     # client-side wire-compression state (repro/comm):
-                            # {"delta": {...}, "aux": {...}} with per-client
-                            # [K, ...] buffers per uplink kind —
+                            # {tag: {...}} keyed by the algorithm's uplink
+                            # schema (UPLINK_SCHEMAS), per-client [K, ...]
+                            # buffers per tag —
                             #   "ef":  error-feedback residuals, re-injected
                             #          into the next upload (lossy codecs)
                             #   "ref": difference-coding reference for
-                            #          absolute-state uploads (gradients,
-                            #          control variates): the wire carries
-                            #          g_k − h_k so quantization noise decays
-                            #          with the diff instead of staying O(1)
+                            #          absolute-state ("aux") uploads
+                            #          (gradients, control variates): the
+                            #          wire carries g_k − h_k so quantization
+                            #          noise decays with the diff instead of
+                            #          staying O(1)
 
 
 class RoundMetrics(NamedTuple):
@@ -168,13 +206,6 @@ class RoundMetrics(NamedTuple):
     gram_cond_max: jax.Array # worst AA Gram conditioning (nan if n/a)
     comm_bytes: jax.Array    # bytes on the wire this round (codec-exact;
                              # == 4 × Table 1 float units on the fp32 channel)
-
-
-#: algorithms whose round functions carry no per-client comm state (their
-#: uploads ride the channel unbuffered — see ROADMAP for the Newton follow-up)
-_COMM_STATELESS_ALGOS = ("giant", "newton_gmres", "dane")
-#: single-uplink algorithms: only the model delta travels, no aux state needed
-_DELTA_ONLY_ALGOS = ("fedavg", "fedosaa_avg")
 
 
 def init_state(problem: FLProblem, rng: jax.Array,
@@ -201,34 +232,20 @@ def init_state(problem: FLProblem, rng: jax.Array,
 
 def init_comm_state(channel: CommChannel, params: Pytree, K: int,
                     algo: str | None = None) -> Pytree:
-    """Per-client carried state for a lossy comm channel (None if stateless).
+    """Per-client carried comm state, allocated from the algorithm's
+    declarative uplink schema (None when no uplink carries buffers).
 
-    See ServerState.comm. When ``algo`` is given, buffers its round function
-    never reads are not allocated: the Newton-type/DANE rounds are comm-
-    stateless, and the AVG family has no aux uplink — at LM scale each
-    skipped buffer is a K×d array. Inactive clients of a partial-
-    participation round still advance their buffers in this simulation
-    (every client computes, weights zero the aggregation) — a real
-    deployment would freeze them.
+    See ServerState.comm. ``algo`` selects its UPLINK_SCHEMAS entry so
+    buffers its round function never reads are not allocated — the AVG family
+    has no aux uplink, the Newton family carries "grad"/"dir" instead of
+    "grad"/"delta"; at LM scale each skipped buffer is a K×d array.
+    ``algo=None`` allocates the union DEFAULT_SCHEMA for algorithm-agnostic
+    callers. Inactive clients of a partial-participation round still advance
+    their buffers in this simulation (every client computes, weights zero the
+    aggregation) — a real deployment would freeze them.
     """
-    if algo in _COMM_STATELESS_ALGOS:
-        return None
-    stacked_zeros = lambda: jax.tree.map(
-        lambda z: jnp.zeros((K,) + z.shape, z.dtype), params)
-    state = {"delta": {}, "aux": {}}
-    for kind in ("delta", "aux"):
-        codec = channel.up_codec(kind)
-        if isinstance(codec, IdentityCodec):
-            continue
-        if kind == "aux" and algo in _DELTA_ONLY_ALGOS:
-            continue
-        if channel.error_feedback:
-            state[kind]["ef"] = stacked_zeros()
-        if kind == "aux":
-            state[kind]["ref"] = stacked_zeros()
-    if not state["delta"] and not state["aux"]:
-        return None
-    return state
+    schema = DEFAULT_SCHEMA if algo is None else UPLINK_SCHEMAS[algo]
+    return init_schema_state(channel, schema, params, K)
 
 
 # --------------------------------------------------------------------------
@@ -506,31 +523,37 @@ class CrossClientReduce:
         return jnp.nanmax(x)
 
     # ---- the wire ----------------------------------------------------------
-    def uplink(self, stacked: Pytree, rngs: jax.Array, tag: int,
+    def uplink(self, stacked: Pytree, rngs: jax.Array, spec: UplinkSpec,
                anchor: Pytree | None = None, state: Pytree | None = None):
-        """Channel roundtrip of every client's upload.
+        """Channel roundtrip of every client's upload, declared by ``spec``.
 
-        The wire quantity is ``stacked_k − anchor`` when ``anchor`` is given
-        (model uploads travel as deltas — that is what the codecs' relative
-        scaling assumes), else ``stacked_k`` itself, further re-based on the
-        carried reference ``state["ref"]`` when present (difference coding:
+        The wire quantity is ``stacked_k − anchor`` for anchored specs (model
+        uploads travel as deltas — that is what the codecs' relative scaling
+        assumes), else ``stacked_k`` itself, further re-based on the carried
+        reference ``state[spec.tag]["ref"]`` when present (difference coding:
         the wire carries v_k − h_k, both ends advance h_k by the decoded
-        diff). ``state["ef"]`` is the error-feedback residual, added before
-        encoding, with the new residual returned. rngs are the per-client
-        round keys; ``tag`` is folded in so distinct uploads of one round
-        never share draws.
+        diff). ``state[spec.tag]["ef"]`` is the error-feedback residual,
+        added before encoding, with the new residual carried forward. rngs
+        are the per-client round keys; ``spec.fold`` is folded in so distinct
+        uploads of one round never share draws.
 
-        Returns (reconstructed stacked — the server's view, new state with
-        the same keys — pass it back via ServerState.comm).
+        ``state`` is the WHOLE ServerState.comm dict (or None): the spec's
+        tag selects its buffers, tags an algorithm's round never uplinks pass
+        through untouched. Returns (reconstructed stacked — the server's
+        view, the comm dict with this tag's buffers advanced).
         """
-        kind = "aux" if tag in (_TAG_GRAD, _TAG_CTRL) else "delta"
-        codec = self.channel.up_codec(kind)
+        if spec.anchored != (anchor is not None):
+            raise ValueError(
+                f"uplink {spec.tag!r}: anchored={spec.anchored} but anchor "
+                f"{'missing' if anchor is None else 'given'}")
+        codec = self.channel.up_codec(spec.kind)
         if isinstance(codec, IdentityCodec):
             return stacked, state
+        sub = state.get(spec.tag) if state is not None else None
         if not codec.deterministic:
-            rngs = jax.vmap(lambda r: jax.random.fold_in(r, tag))(rngs)
-        ef = state.get("ef") if state else None
-        ref = state.get("ref") if state else None
+            rngs = jax.vmap(lambda r: jax.random.fold_in(r, spec.fold))(rngs)
+        ef = sub.get("ef") if sub else None
+        ref = sub.get("ref") if sub else None
 
         def one(w_k, rng, e, h):
             v = tm.tree_sub(w_k, anchor) if anchor is not None else w_k
@@ -549,14 +572,14 @@ class CrossClientReduce:
             return dec, new_e, new_h
 
         dec, new_e, new_h = jax.vmap(one)(stacked, rngs, ef, ref)
-        if state is None:
-            return dec, None
-        new_state = {}
-        if "ef" in state:
-            new_state["ef"] = new_e
-        if "ref" in state:
-            new_state["ref"] = new_h
-        return dec, new_state
+        if not sub:
+            return dec, state
+        new_sub = {}
+        if "ef" in sub:
+            new_sub["ef"] = new_e
+        if "ref" in sub:
+            new_sub["ref"] = new_h
+        return dec, {**state, spec.tag: new_sub}
 
     def broadcast(self, tree: Pytree) -> Pytree:
         """Server→client broadcast through the (deterministic) downlink codec."""
@@ -564,9 +587,6 @@ class CrossClientReduce:
             return tree
         return self.channel.broadcast(tree)
 
-
-#: distinct uplink tags: fold_in'd so one round's uploads don't share draws
-_TAG_GRAD, _TAG_DELTA, _TAG_CTRL, _TAG_DIR = 101, 102, 103, 104
 
 VMAP_REDUCE = CrossClientReduce()
 
@@ -630,8 +650,8 @@ def _svrg_round_core(problem, hp, use_aa, R, w_t, x, y, mask, dweight, pweight,
     state — it never touches the wire.
     """
     w_t = R.broadcast(w_t)
-    g_k, new_aux = R.uplink(_stack_grads(problem, w_t, x, y, mask), rngs,
-                            _TAG_GRAD, state=None if comm is None else comm["aux"])
+    g_k, comm = R.uplink(_stack_grads(problem, w_t, x, y, mask), rngs,
+                         GRAD_UPLINK, state=comm)
     g_global = R.broadcast(R.wsum(dweight, g_k))
     if hist_s is not None:
         w_k, stats, new_hs, new_hy = jax.vmap(
@@ -642,12 +662,10 @@ def _svrg_round_core(problem, hp, use_aa, R, w_t, x, y, mask, dweight, pweight,
             partial(_client_svrg, problem, hp, use_aa, w_t, g_global)
         )(x, y, mask, rngs)
         new_hs = new_hy = None
-    w_k, new_delta = R.uplink(w_k, rngs, _TAG_DELTA, anchor=w_t,
-                              state=None if comm is None else comm["delta"])
-    new_comm = None if comm is None else {"delta": new_delta, "aux": new_aux}
+    w_k, comm = R.uplink(w_k, rngs, DELTA_UPLINK, anchor=w_t, state=comm)
     new_params = R.wsum(pweight, w_k, anchor=w_t)
     parts = _metric_parts(problem, R, w_t, g_global, stats, x, y, mask, dweight)
-    return new_params, parts, new_hs, new_hy, new_comm
+    return new_params, parts, new_hs, new_hy, comm
 
 
 def _scaffold_round_core(problem, hp, use_aa, R, w_t, c, x, y, mask, c_k,
@@ -663,15 +681,12 @@ def _scaffold_round_core(problem, hp, use_aa, R, w_t, c, x, y, mask, c_k,
     w_k, new_c_k, stats = jax.vmap(
         partial(_client_scaffold, problem, hp, use_aa, w_t, c)
     )(x, y, mask, c_k, rngs)
-    w_k, new_delta = R.uplink(w_k, rngs, _TAG_DELTA, anchor=w_t,
-                              state=None if comm is None else comm["delta"])
-    c_up, new_aux = R.uplink(new_c_k, rngs, _TAG_CTRL,
-                             state=None if comm is None else comm["aux"])
-    new_comm = None if comm is None else {"delta": new_delta, "aux": new_aux}
+    w_k, comm = R.uplink(w_k, rngs, DELTA_UPLINK, anchor=w_t, state=comm)
+    c_up, comm = R.uplink(new_c_k, rngs, CTRL_UPLINK, state=comm)
     new_params = R.wsum(pweight, w_k, anchor=w_t)
     new_c = R.wsum(dweight, c_up)
     parts = _metric_parts(problem, R, w_t, new_c, stats, x, y, mask, dweight)
-    return new_params, new_c, new_c_k, parts, new_comm
+    return new_params, new_c, new_c_k, parts, comm
 
 
 def _avg_round_core(problem, hp, use_aa, R, w_t, x, y, mask, dweight, pweight,
@@ -681,42 +696,46 @@ def _avg_round_core(problem, hp, use_aa, R, w_t, x, y, mask, dweight, pweight,
     w_k, stats = jax.vmap(
         partial(_client_avg, problem, hp, use_aa, w_t)
     )(x, y, mask, rngs)
-    w_k, new_delta = R.uplink(w_k, rngs, _TAG_DELTA, anchor=w_t,
-                              state=None if comm is None else comm["delta"])
-    new_comm = None if comm is None else {"delta": new_delta, "aux": comm["aux"]}
+    w_k, comm = R.uplink(w_k, rngs, DELTA_UPLINK, anchor=w_t, state=comm)
     new_params = R.wsum(pweight, w_k, anchor=w_t)
     # diagnostics only — FedAvg ships no gradients, so no wire crossing here
     g = R.wsum(dweight, _stack_grads(problem, w_t, x, y, mask))
     parts = _metric_parts(problem, R, w_t, g, stats, x, y, mask, dweight)
-    return new_params, parts, new_comm
+    return new_params, parts, comm
 
 
 def _lbfgs_round_core(problem, hp, R, w_t, x, y, mask, dweight, pweight, rngs,
                       comm=None):
     w_t = R.broadcast(w_t)
-    g_k, new_aux = R.uplink(_stack_grads(problem, w_t, x, y, mask), rngs,
-                            _TAG_GRAD, state=None if comm is None else comm["aux"])
+    g_k, comm = R.uplink(_stack_grads(problem, w_t, x, y, mask), rngs,
+                         GRAD_UPLINK, state=comm)
     g_global = R.broadcast(R.wsum(dweight, g_k))
     w_k, _ = jax.vmap(
         partial(_client_lbfgs, problem, hp, w_t, g_global)
     )(x, y, mask, rngs)
-    w_k, new_delta = R.uplink(w_k, rngs, _TAG_DELTA, anchor=w_t,
-                              state=None if comm is None else comm["delta"])
-    new_comm = None if comm is None else {"delta": new_delta, "aux": new_aux}
+    w_k, comm = R.uplink(w_k, rngs, DELTA_UPLINK, anchor=w_t, state=comm)
     new_params = R.wsum(pweight, w_k, anchor=w_t)
     parts = _metric_parts(problem, R, w_t, g_global, _nan_stats(x.shape[0]),
                           x, y, mask, dweight)
-    return new_params, parts, new_comm
+    return new_params, parts, comm
 
 
 def _newton_round_core(problem, hp, client_fn, R, w_t, x, y, mask, dweight,
-                       pweight, rngs):
-    """GIANT / Newton-GMRES: aggregate directions, optional global backtrack."""
+                       pweight, rngs, comm=None):
+    """GIANT / Newton-GMRES: aggregate directions, optional global backtrack.
+
+    Both uplinks are stateful (schema: "grad" aux + "dir" delta): the
+    gradient collection is difference-coded against the carried per-client
+    reference and the Newton direction carries an error-feedback residual, so
+    lossy codecs ride quantities that vanish at the optimum instead of
+    flooring on the O(1) local gradients (benchmarks/ext_compression.py).
+    """
     w_t = R.broadcast(w_t)
-    g_k, _ = R.uplink(_stack_grads(problem, w_t, x, y, mask), rngs, _TAG_GRAD)
+    g_k, comm = R.uplink(_stack_grads(problem, w_t, x, y, mask), rngs,
+                         GRAD_UPLINK, state=comm)
     g_global = R.broadcast(R.wsum(dweight, g_k))
     p_k = jax.vmap(partial(client_fn, problem, hp, w_t, g_global))(x, y, mask)
-    p_k, _ = R.uplink(p_k, rngs, _TAG_DIR)
+    p_k, comm = R.uplink(p_k, rngs, DIR_UPLINK, state=comm)
     p = R.wsum(pweight, p_k)
     if hp.line_search:
         # GIANT line search on the aggregated direction: clients evaluate
@@ -736,21 +755,24 @@ def _newton_round_core(problem, hp, client_fn, R, w_t, x, y, mask, dweight,
     new_params = tm.tree_axpy(-a, p, w_t)
     parts = _metric_parts(problem, R, w_t, g_global, _nan_stats(x.shape[0]),
                           x, y, mask, dweight)
-    return new_params, parts
+    return new_params, parts, comm
 
 
-def _dane_round_core(problem, hp, R, w_t, x, y, mask, dweight, pweight, rngs):
+def _dane_round_core(problem, hp, R, w_t, x, y, mask, dweight, pweight, rngs,
+                     comm=None):
+    """DANE: stateful wire like the SVRG family (schema: "grad" + "delta")."""
     w_t = R.broadcast(w_t)
-    g_k, _ = R.uplink(_stack_grads(problem, w_t, x, y, mask), rngs, _TAG_GRAD)
+    g_k, comm = R.uplink(_stack_grads(problem, w_t, x, y, mask), rngs,
+                         GRAD_UPLINK, state=comm)
     g_global = R.broadcast(R.wsum(dweight, g_k))
     w_k = jax.vmap(partial(_client_dane, problem, hp, w_t, g_global))(x, y, mask)
-    w_k, _ = R.uplink(w_k, rngs, _TAG_DELTA, anchor=w_t)
+    w_k, comm = R.uplink(w_k, rngs, DELTA_UPLINK, anchor=w_t, state=comm)
     # delta-form aggregation: identical when Σpweight = 1, and a partial-
     # participation round with no active clients keeps w^t instead of zeroing
     new_params = R.wsum(pweight, w_k, anchor=w_t)
     parts = _metric_parts(problem, R, w_t, g_global, _nan_stats(x.shape[0]),
                           x, y, mask, dweight)
-    return new_params, parts
+    return new_params, parts, comm
 
 
 def finalize_metrics(parts: MetricParts, comm_bytes: float) -> RoundMetrics:
@@ -873,12 +895,13 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
             rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
             weights = _participation_weights(problem, hp, part_rng)
             rngs = jax.random.split(cl_rng, C.num_clients)
-            new_params, parts = _newton_round_core(
+            new_params, parts, new_comm = _newton_round_core(
                 problem, hp, client_fn, R, state.params, C.x, C.y, C.mask,
-                C.weight, weights, rngs,
+                C.weight, weights, rngs, state.comm,
             )
             metrics = finalize_metrics(parts, comm_bytes)
-            return state._replace(params=new_params, t=state.t + 1, rng=rng), metrics
+            return state._replace(params=new_params, t=state.t + 1, rng=rng,
+                                  comm=new_comm), metrics
 
         return round_fn
 
@@ -889,11 +912,12 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
         weights = _participation_weights(problem, hp, part_rng)
         rngs = jax.random.split(cl_rng, C.num_clients)
-        new_params, parts = _dane_round_core(
+        new_params, parts, new_comm = _dane_round_core(
             problem, hp, R, state.params, C.x, C.y, C.mask, C.weight, weights,
-            rngs,
+            rngs, state.comm,
         )
         metrics = finalize_metrics(parts, comm_bytes)
-        return state._replace(params=new_params, t=state.t + 1, rng=rng), metrics
+        return state._replace(params=new_params, t=state.t + 1, rng=rng,
+                              comm=new_comm), metrics
 
     return round_fn

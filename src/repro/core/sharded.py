@@ -106,6 +106,24 @@ def client_mesh_axes(mesh) -> tuple[str, ...]:
     return tuple(a for a in CLIENT_MESH_AXES if a in mesh.axis_names)
 
 
+def _split_client_rngs(cl_rng, K: int, mesh):
+    """K per-client keys, forced REPLICATED before they enter shard_map.
+
+    Without the constraint GSPMD partitions the threefry split across the
+    mesh (its consumer is sharded) and stitches the key halves back with
+    512-participant collective-permutes — ~40 B of traffic that deadlocks
+    the emulated-CPU collective rendezvous and would be pure latency on real
+    pods. Replicating the split is a few µs of redundant compute per device;
+    the shard_map entry then slices each shard's keys locally, collective-
+    free. Only stochastic codecs (int8) keep the keys live, which is why the
+    permutes never showed up in the bf16/identity dryruns.
+    """
+    from jax.sharding import NamedSharding
+
+    rngs = jax.random.split(cl_rng, K)
+    return jax.lax.with_sharding_constraint(rngs, NamedSharding(mesh, P()))
+
+
 def num_client_shards(mesh, axes: tuple[str, ...] | None = None) -> int:
     axes = client_mesh_axes(mesh) if axes is None else axes
     return math.prod(mesh.shape[a] for a in axes)
@@ -167,7 +185,7 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         def round_fn(state: ServerState):
             rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
             weights = _participation_weights(problem, hp, part_rng)
-            rngs = jax.random.split(cl_rng, K)
+            rngs = _split_client_rngs(cl_rng, K, mesh)
             carry = hp.carry_history > 0 and state.hist_s is not None
 
             def body(w_t, x, y, mask, dw, pw, r, hs, hy, e):
@@ -197,7 +215,7 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         def round_fn(state: ServerState):
             rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
             weights = _participation_weights(problem, hp, part_rng)
-            rngs = jax.random.split(cl_rng, K)
+            rngs = _split_client_rngs(cl_rng, K, mesh)
 
             def body(w_t, c, x, y, mask, c_k, dw, pw, r, e):
                 return _scaffold_round_core(
@@ -225,7 +243,7 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         def round_fn(state: ServerState):
             rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
             weights = _participation_weights(problem, hp, part_rng)
-            rngs = jax.random.split(cl_rng, K)
+            rngs = _split_client_rngs(cl_rng, K, mesh)
 
             def body(w_t, x, y, mask, dw, pw, r, e):
                 return _avg_round_core(
@@ -248,7 +266,7 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         def round_fn(state: ServerState):
             rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
             weights = _participation_weights(problem, hp, part_rng)
-            rngs = jax.random.split(cl_rng, K)
+            rngs = _split_client_rngs(cl_rng, K, mesh)
 
             def body(w_t, x, y, mask, dw, pw, r, e):
                 return _lbfgs_round_core(
@@ -272,19 +290,20 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         def round_fn(state: ServerState):
             rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
             weights = _participation_weights(problem, hp, part_rng)
-            rngs = jax.random.split(cl_rng, K)
+            rngs = _split_client_rngs(cl_rng, K, mesh)
 
-            def body(w_t, x, y, mask, dw, pw, r):
+            def body(w_t, x, y, mask, dw, pw, r, e):
                 return _newton_round_core(
-                    problem, hp, client_fn, R, w_t, x, y, mask, dw, pw, r)
+                    problem, hp, client_fn, R, w_t, x, y, mask, dw, pw, r, e)
 
-            new_params, parts = smap(
+            new_params, parts, new_comm = smap(
                 body,
-                in_specs=(rep, csh, csh, csh, csh, csh, csh),
-                out_specs=(rep, rep),
-            )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs)
+                in_specs=(rep, csh, csh, csh, csh, csh, csh, csh),
+                out_specs=(rep, rep, csh),
+            )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs,
+              state.comm)
             return state._replace(params=new_params, t=state.t + 1,
-                                  rng=rng), finalize_metrics(parts, comm_bytes)
+                                  rng=rng, comm=new_comm), finalize_metrics(parts, comm_bytes)
 
         return round_fn
 
@@ -294,17 +313,18 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
     def round_fn(state: ServerState):
         rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
         weights = _participation_weights(problem, hp, part_rng)
-        rngs = jax.random.split(cl_rng, K)
+        rngs = _split_client_rngs(cl_rng, K, mesh)
 
-        def body(w_t, x, y, mask, dw, pw, r):
-            return _dane_round_core(problem, hp, R, w_t, x, y, mask, dw, pw, r)
+        def body(w_t, x, y, mask, dw, pw, r, e):
+            return _dane_round_core(problem, hp, R, w_t, x, y, mask, dw, pw,
+                                    r, e)
 
-        new_params, parts = smap(
+        new_params, parts, new_comm = smap(
             body,
-            in_specs=(rep, csh, csh, csh, csh, csh, csh),
-            out_specs=(rep, rep),
-        )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs)
+            in_specs=(rep, csh, csh, csh, csh, csh, csh, csh),
+            out_specs=(rep, rep, csh),
+        )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs, state.comm)
         return state._replace(params=new_params, t=state.t + 1,
-                              rng=rng), finalize_metrics(parts, comm_bytes)
+                              rng=rng, comm=new_comm), finalize_metrics(parts, comm_bytes)
 
     return round_fn

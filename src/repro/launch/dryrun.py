@@ -226,44 +226,73 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
     return result
 
 
+#: Newton-family dryrun workload: these methods need full-rank local
+#: Hessians (n/K ≥ d) and enough CG iterations — on the 2048-sample default
+#: the 32-sample clients are rank-deficient and the full Newton step
+#: diverges by round 4 regardless of codec (measured).
+_NEWTON_ALGOS = ("giant", "newton_gmres", "dane")
+
+
 def dryrun_fl_round(algo: str, multi_pod: bool = False,
-                    num_clients: int = 64, n: int = 2048,
+                    num_clients: int = 64, n: int | None = None,
                     comm_codec: str = "identity", rounds: int = 1) -> dict:
     """Compile + execute shard_mapped FL round(s) on the production mesh.
 
     Uses a synthetic logistic-regression problem (the paper's workload) with
     the K clients partitioned over the mesh's ("pod","data") axes; num_clients
     must divide over those axes (64 covers both 16 and 2x16 client shards).
+    Newton-family algos get a workload sized for them (n=8192 so the local
+    Hessians are full-rank, q=10 CG iterations); everything else keeps the
+    historical n=2048, η=0.5, L=3.
 
     ``comm_codec`` threads a repro/comm channel through the sharded round —
     ``bf16`` (or ``bf16/bf16`` for a compressed downlink too) is the
-    aggregation-numerics measurement the ROADMAP asks for: run a few rounds
-    and compare the recorded loss trace against the fp32 channel.
+    aggregation-numerics measurement the ROADMAP asks for, and ``int8`` /
+    ``int8+noef`` on a Newton-family algo measures the schema'd stateful
+    wire (diff-coded gradients): run several rounds and watch the recorded
+    rel-error trace converge.
     """
     from repro.comm import make_channel
-    from repro.core import AlgoHParams, init_state
+    from repro.core import AlgoHParams, init_state, solve_reference
     from repro.core.sharded import make_sharded_round_fn, num_client_shards
     from repro.data import make_binary_classification, partition
     from repro.models.logreg import make_logreg_problem
+    from repro.utils import tree_math as tm
 
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
+    if algo in _NEWTON_ALGOS:
+        n = 8192 if n is None else n
+        hp = AlgoHParams(eta=1.0, local_epochs=10)
+    else:
+        n = 2048 if n is None else n
+        hp = AlgoHParams(eta=0.5, local_epochs=3)
     X, y = make_binary_classification("synthetic_small", n=n, seed=0)
     clients = partition(X, y, num_clients=num_clients, scheme="iid")
     problem = make_logreg_problem(clients, gamma=1e-3)
-    hp = AlgoHParams(eta=0.5, local_epochs=3)
     channel = make_channel(comm_codec)
-    state = init_state(problem, jax.random.PRNGKey(0), hp, channel)
+    # algo-aware init: ServerState.comm gets exactly the buffers the
+    # algorithm's uplink schema (UPLINK_SCHEMAS) declares for this channel
+    state = init_state(problem, jax.random.PRNGKey(0), hp, channel, algo)
     round_fn = jax.jit(
         make_sharded_round_fn(algo, problem, hp, mesh, channel=channel))
     compiled = round_fn.lower(state).compile()
     compile_s = time.time() - t0
 
+    # d=54 reference solve is cheap; rel-error traces make the dryrun a
+    # convergence measurement, not just a compile check (ROADMAP: Newton-row
+    # numerics under lossy codecs on the multi-pod mesh)
+    wstar = solve_reference(problem, iters=50)
+    wstar_norm = float(tm.tree_norm(wstar))
+
     t0 = time.time()
-    losses = []
+    losses, rel_errors = [], []
     for _ in range(rounds):
         state, metrics = round_fn(state)
         losses.append(float(metrics.loss))
+        rel_errors.append(
+            float(tm.tree_norm(tm.tree_sub(state.params, wstar)))
+            / max(wstar_norm, 1e-30))
     jax.block_until_ready(metrics.loss)
     run_s = (time.time() - t0) / rounds
 
@@ -279,6 +308,8 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
         "run_s": round(run_s, 2),
         "loss": losses[-1],
         "loss_curve": losses,
+        "rel_error": rel_errors[-1],
+        "rel_error_curve": rel_errors,
         "comm_bytes": float(metrics.comm_bytes),
         "flops": float(cost.get("flops", 0.0)),
         "collectives": collective_bytes(compiled.as_text()),
@@ -321,6 +352,7 @@ def main() -> None:
                     json.dump(res, f, indent=1)
                 print(f"OK   {tag}: compile={res['compile_s']}s "
                       f"run={res['run_s']}s loss={res['loss']:.4f} "
+                      f"relerr={res['rel_error']:.2e} "
                       f"ar={res['collectives'].get('all-reduce_count', 0)}")
             except Exception as e:
                 failures.append(tag)

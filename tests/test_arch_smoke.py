@@ -79,12 +79,14 @@ class TestDecode:
         test). Checked at f32 tolerance on the reduced config."""
         cfg, model, params = arch
         if cfg.frontend_tokens:
-            pytest.skip("frontend archs decode from token-only context here")
+            pytest.skip("structural: frontend archs prefill from embeds, so "
+                        "token-only decode cannot reproduce the forward pass")
         if cfg.family == "moe":
             # capacity routing is non-causal across the batch: strict
             # teacher-forced equivalence does not hold by construction.
             # Dropless-decode correctness is covered by test_moe_dropless_*.
-            pytest.skip("capacity-MoE forward is not teacher-forcing-consistent")
+            pytest.skip("structural: capacity-MoE routing is batch-global, "
+                        "so teacher-forced decode equivalence cannot hold")
         tokens = jax.random.randint(
             jax.random.PRNGKey(3), (BATCH, SEQ), 0, cfg.vocab_size, jnp.int32
         )

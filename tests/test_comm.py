@@ -1,10 +1,15 @@
-"""repro/comm: codec correctness, byte accounting, channel parsing, and the
-end-to-end compression behaviors (error feedback, difference coding) on the
+"""repro/comm: codec correctness, byte accounting, channel parsing, the
+declarative uplink schemas, and the end-to-end compression behaviors (error
+feedback, difference coding — incl. the stateful Newton-family wire) on the
 FL round API."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degraded single-example mode; see tests/_hypothesis_stub
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.comm import (
     Bf16Codec,
@@ -12,10 +17,15 @@ from repro.comm import (
     IdentityCodec,
     Int8SRCodec,
     TopKCodec,
+    UplinkSpec,
     make_channel,
     parse_codec,
+    validate_schema,
 )
+from repro.comm.schema import DELTA_UPLINK, DIR_UPLINK, GRAD_UPLINK
 from repro.core import (
+    COMM_TABLE,
+    UPLINK_SCHEMAS,
     AlgoHParams,
     comm_bytes_per_round,
     comm_floats_per_round,
@@ -24,6 +34,7 @@ from repro.core import (
     run_federated,
     solve_reference,
 )
+from repro.core.algorithms import ALGORITHMS, CrossClientReduce
 from repro.data import make_binary_classification, partition
 from repro.models.logreg import make_logreg_problem
 
@@ -67,20 +78,43 @@ class TestCodecs:
             scale = np.abs(chunk).max() / 127.0
             assert err[c0:c0 + 64].max() <= scale + 1e-7
 
-    def test_int8_sr_unbiased(self):
-        """E[roundtrip(x)] = x: the mean over many independent draws converges
-        at the Monte-Carlo rate to x (this is what lets quantized SVRG keep
-        its unbiased gradient estimates)."""
-        rng = np.random.default_rng(7)
-        x = jnp.asarray(rng.standard_normal(256), jnp.float32)
-        codec = Int8SRCodec()
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(1, 2000), chunk=st.sampled_from([64, 128, 256]),
+           scale_exp=st.integers(-6, 6), seed=st.integers(0, 999))
+    def test_property_int8_sr_unbiased(self, n, chunk, scale_exp, seed):
+        """E[roundtrip(x)] = x for random shapes, chunk sizes and magnitude
+        scales: the mean over many independent draws converges at the
+        Monte-Carlo rate to x (this is what lets quantized SVRG keep its
+        unbiased gradient estimates)."""
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal(n) * 10.0 ** scale_exp,
+                        jnp.float32)
+        codec = Int8SRCodec(chunk=chunk)
         draws = 400
         outs = jax.vmap(lambda k: codec.roundtrip(x, k))(
-            jax.random.split(jax.random.PRNGKey(0), draws))
+            jax.random.split(jax.random.PRNGKey(seed), draws))
         mean = np.asarray(jnp.mean(outs, axis=0))
         scale = float(jnp.max(jnp.abs(x))) / 127.0
         # per-element MC std is < scale; 5 sigma of the mean estimator
         assert np.max(np.abs(mean - np.asarray(x))) < 5 * scale / np.sqrt(draws)
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(2, 4096), ratio=st.floats(0.01, 0.9),
+           scale_exp=st.integers(-4, 4), seed=st.integers(0, 999))
+    def test_property_topk_error_feedback_residual_contracts(
+            self, n, ratio, scale_exp, seed):
+        """The EF residual of one top-k uplink step contracts: dropping
+        everything but the k largest-magnitude entries leaves
+        ‖e‖² ≤ (1 − k/n)·‖u‖² (Stich et al.'s δ-contraction — the property
+        that makes EF-topk converge to the exact optimum)."""
+        rng = np.random.default_rng(seed)
+        u = jnp.asarray(rng.standard_normal(n) * 10.0 ** scale_exp,
+                        jnp.float32)
+        codec = TopKCodec(ratio=ratio)
+        e = np.asarray(u - codec.roundtrip(u), np.float64)
+        u64 = np.asarray(u, np.float64)
+        k = codec.k_for(n)
+        assert np.sum(e ** 2) <= (1 - k / n) * np.sum(u64 ** 2) + 1e-6
 
     def test_topk_keeps_largest_by_magnitude(self):
         x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05, 0.0, 1.0, -0.3], jnp.float32)
@@ -178,9 +212,87 @@ class TestChannel:
             8 * k + 4 * d
         # fedavg = 1 delta unit only
         assert comm_bytes_per_round("fedavg", params, "topk:0.05") == 8 * k
+        # giant's direction uplink is kind="delta": sparsifiable, while its
+        # gradient leg pays fp32 under a delta-only codec
+        assert comm_bytes_per_round("giant", params, "topk:0.05") == \
+            8 * k + 4 * d
         # line-search extra broadcast pays the DOWNLINK codec
         assert comm_bytes_per_round("giant", params, "int8/bf16",
                                     line_search=True) == 2 * (d + 4) + 2 * d
+
+
+# ---------------------------------------------------------------------------
+# declarative uplink schemas
+# ---------------------------------------------------------------------------
+
+class TestUplinkSchemas:
+    def test_every_algorithm_declares_a_schema(self):
+        assert set(UPLINK_SCHEMAS) == set(ALGORITHMS)
+
+    def test_schema_lengths_match_table1_float_units(self):
+        """The schema IS the byte accounting: one model-sized uplink record
+        per Table 1 float unit, so the identity channel reproduces the
+        historical counters exactly."""
+        for algo, schema in UPLINK_SCHEMAS.items():
+            assert len(schema) == COMM_TABLE[algo].float_units, algo
+
+    def test_schemas_are_statically_valid(self):
+        for algo, schema in UPLINK_SCHEMAS.items():
+            assert validate_schema(schema) == schema
+            # every record is stateful: no algorithm opts out of the
+            # carried-state wire (the regression this PR exists to prevent)
+            assert all(s.stateful for s in schema), algo
+
+    def test_validate_schema_rejects_collisions(self):
+        dup_tag = UplinkSpec("grad", "aux", False, True, 999)
+        with pytest.raises(ValueError, match="duplicate uplink tags"):
+            validate_schema((GRAD_UPLINK, dup_tag))
+        dup_fold = UplinkSpec("other", "aux", False, True, GRAD_UPLINK.fold)
+        with pytest.raises(ValueError, match="duplicate rng folds"):
+            validate_schema((GRAD_UPLINK, dup_fold))
+        with pytest.raises(ValueError, match="unknown kind"):
+            validate_schema((UplinkSpec("x", "sketch", False, True, 7),))
+
+    def test_state_buffers_policy(self):
+        """The channel decides which buffers each declared uplink carries:
+        EF for lossy codecs with error feedback on, a diff-coding reference
+        for absolute-state (aux) uploads, nothing for identity wires."""
+        int8 = make_channel("int8")
+        assert int8.state_buffers(GRAD_UPLINK) == ("ef", "ref")
+        assert int8.state_buffers(DELTA_UPLINK) == ("ef",)
+        assert int8.state_buffers(DIR_UPLINK) == ("ef",)
+        noef = make_channel("int8+noef")
+        assert noef.state_buffers(GRAD_UPLINK) == ("ref",)
+        assert noef.state_buffers(DIR_UPLINK) == ()
+        topk = make_channel("topk:0.1")        # delta-only: aux rides fp32
+        assert topk.state_buffers(GRAD_UPLINK) == ()
+        assert topk.state_buffers(DIR_UPLINK) == ("ef",)
+        assert make_channel(None).state_buffers(DELTA_UPLINK) == ()
+        stateless = UplinkSpec("scalar", "delta", False, False, 105)
+        assert int8.state_buffers(stateless) == ()
+
+    def test_uplink_anchor_must_match_declaration(self):
+        R = CrossClientReduce(make_channel("bf16"))
+        stacked = jnp.zeros((4, 8))
+        rngs = jax.random.split(jax.random.PRNGKey(0), 4)
+        with pytest.raises(ValueError, match="anchored"):
+            R.uplink(stacked, rngs, DELTA_UPLINK, anchor=None)
+        with pytest.raises(ValueError, match="anchored"):
+            R.uplink(stacked, rngs, GRAD_UPLINK, anchor=jnp.zeros(8))
+
+    def test_uplink_leaves_undeclared_tags_untouched(self):
+        """A round that never uplinks a tag must pass its buffers through
+        unchanged (the DEFAULT_SCHEMA union allocates tags some algorithms
+        never touch)."""
+        R = CrossClientReduce(make_channel("int8"))
+        stacked = jnp.ones((4, 8))
+        rngs = jax.random.split(jax.random.PRNGKey(0), 4)
+        state = {"dir": {"ef": jnp.full((4, 8), 7.0)},
+                 "grad": {"ef": jnp.zeros((4, 8)), "ref": jnp.zeros((4, 8))}}
+        _, new_state = R.uplink(stacked, rngs, GRAD_UPLINK, state=state)
+        np.testing.assert_array_equal(np.asarray(new_state["dir"]["ef"]),
+                                      np.asarray(state["dir"]["ef"]))
+        assert np.abs(np.asarray(new_state["grad"]["ref"])).max() > 0
 
 
 # ---------------------------------------------------------------------------
@@ -220,11 +332,27 @@ class TestChannelRounds:
                           channel="int8")
         assert h.rel_error[-1] < 2e-4
 
+    @pytest.mark.parametrize("algo", ["giant", "newton_gmres"])
+    def test_newton_family_tracks_fp32_under_int8(self, logreg, algo):
+        """The schema'd stateful wire un-floors the Newton family: with the
+        diff-coded gradient and EF'd direction uplinks, int8 GIANT/Newton-
+        GMRES must keep tracking the fp32 trajectory instead of flooring an
+        order of magnitude above it (the pre-schema behavior recorded in
+        benchmarks/results/ext_compression.json)."""
+        prob, wstar = logreg
+        hp = AlgoHParams(local_epochs=10)
+        h32 = run_federated(prob, algo, hp, 12, w_star=wstar)
+        h8 = run_federated(prob, algo, hp, 12, w_star=wstar, channel="int8")
+        # 1e-6 floor: both runs bottom out at f32 machine precision, where
+        # the ratio is last-ulp noise; the pre-schema int8 floor was ~6.7e-4
+        assert h8.rel_error[-1] < max(3 * h32.rel_error[-1], 1e-6), algo
+
     def test_error_feedback_state_carried_and_nonzero(self, logreg):
         prob, _ = logreg
         hp = AlgoHParams(eta=1.0, local_epochs=3)
         ch = make_channel("topk:0.1")
-        state = init_state(prob, jax.random.PRNGKey(0), hp, ch)
+        state = init_state(prob, jax.random.PRNGKey(0), hp, ch,
+                           "fedosaa_svrg")
         assert state.comm is not None
         assert "ef" in state.comm["delta"]
         fn = jax.jit(make_round_fn("fedosaa_svrg", prob, hp, ch))
@@ -232,50 +360,71 @@ class TestChannelRounds:
         ef = np.asarray(jax.tree.leaves(state.comm["delta"]["ef"])[0])
         assert ef.shape[0] == prob.clients.num_clients
         assert np.abs(ef).max() > 0          # topk drops mass -> residual
-        # aux leg of a delta-only codec is fp32: no aux state
-        assert state.comm["aux"] == {}
+        # aux leg of a delta-only codec is fp32: the "grad" tag carries
+        # nothing, so the schema allocator omits it
+        assert "grad" not in state.comm
 
     def test_algo_aware_state_allocation(self, logreg):
-        """init_state(algo=...) skips buffers the round function never reads:
-        Newton-type rounds are comm-stateless, the AVG family has no aux
-        uplink — at LM scale each skipped buffer is a K×d array."""
+        """init_state(algo=...) allocates exactly the buffers the algorithm's
+        uplink schema declares — the AVG family has no aux uplink, the Newton
+        family carries "grad"/"dir" instead of "grad"/"delta"; at LM scale
+        each skipped buffer is a K×d array."""
         prob, _ = logreg
         ch = make_channel("int8")
-        for algo in ("giant", "newton_gmres", "dane"):
+        for algo in ("giant", "newton_gmres"):
             s = init_state(prob, jax.random.PRNGKey(0), AlgoHParams(), ch, algo)
-            assert s.comm is None, algo
+            assert set(s.comm) == {"grad", "dir"}, algo
+            assert set(s.comm["grad"]) == {"ef", "ref"}
+            assert set(s.comm["dir"]) == {"ef"}
+        s = init_state(prob, jax.random.PRNGKey(0), AlgoHParams(), ch, "dane")
+        assert set(s.comm) == {"grad", "delta"}
         s = init_state(prob, jax.random.PRNGKey(0), AlgoHParams(), ch, "fedavg")
-        assert "ef" in s.comm["delta"] and s.comm["aux"] == {}
+        assert set(s.comm) == {"delta"} and "ef" in s.comm["delta"]
         s = init_state(prob, jax.random.PRNGKey(0), AlgoHParams(), ch,
                        "fedosaa_svrg")
-        assert "ref" in s.comm["aux"]
-        # a stateless-algo state still runs its round end-to-end
+        assert "ref" in s.comm["grad"]
+        # algo=None allocates the union DEFAULT_SCHEMA for agnostic callers
+        s = init_state(prob, jax.random.PRNGKey(0), AlgoHParams(), ch)
+        assert set(s.comm) == {"grad", "delta", "ctrl", "dir"}
+
+    def test_newton_family_round_advances_comm_state(self, logreg):
+        """The tentpole behavior: GIANT's gradient uplink is difference-coded
+        and its direction uplink carries an EF residual — one round must
+        advance both buffers (a stateless wire would leave them zero)."""
+        prob, _ = logreg
+        ch = make_channel("int8")
         hp = AlgoHParams(local_epochs=2)
         s = init_state(prob, jax.random.PRNGKey(0), hp, ch, "giant")
-        _, m = jax.jit(make_round_fn("giant", prob, hp, ch))(s)
+        s, m = jax.jit(make_round_fn("giant", prob, hp, ch))(s)
         assert np.isfinite(float(m.loss))
+        ref = np.asarray(jax.tree.leaves(s.comm["grad"]["ref"])[0])
+        ef = np.asarray(jax.tree.leaves(s.comm["dir"]["ef"])[0])
+        assert ref.shape[0] == prob.clients.num_clients
+        assert np.abs(ref).max() > 0   # tracks the reconstructed gradients
+        assert np.abs(ef).max() > 0    # int8-SR residual on the direction
 
     def test_noef_channel_carries_no_ef_state(self, logreg):
         prob, _ = logreg
         state = init_state(prob, jax.random.PRNGKey(0), AlgoHParams(),
-                           make_channel("topk:0.1+noef"))
+                           make_channel("topk:0.1+noef"), "fedosaa_svrg")
         assert state.comm is None
         # int8+noef still needs the aux diff-coding reference
         state = init_state(prob, jax.random.PRNGKey(0), AlgoHParams(),
-                           make_channel("int8+noef"))
+                           make_channel("int8+noef"), "fedosaa_svrg")
         assert state.comm is not None
-        assert "ef" not in state.comm["delta"] and state.comm["delta"] == {}
-        assert "ref" in state.comm["aux"]
+        assert "delta" not in state.comm
+        assert set(state.comm["grad"]) == {"ref"}
 
     def test_comm_bytes_metric_matches_static_accounting(self, logreg):
         prob, _ = logreg
         hp = AlgoHParams(eta=1.0, local_epochs=3)
         p0 = prob.init(jax.random.PRNGKey(0))
         for spec in (None, "bf16", "int8", "topk:0.1"):
-            for algo in ("fedavg", "fedsvrg", "scaffold"):
+            for algo in ("fedavg", "fedsvrg", "scaffold", "giant"):
                 ch = make_channel(spec)
                 fn = jax.jit(make_round_fn(algo, prob, hp, ch))
-                _, m = fn(init_state(prob, jax.random.PRNGKey(0), hp, ch))
+                _, m = fn(init_state(prob, jax.random.PRNGKey(0), hp, ch,
+                                     algo))
                 assert float(m.comm_bytes) == pytest.approx(
                     comm_bytes_per_round(algo, p0, ch)), (spec, algo)
 

@@ -72,10 +72,11 @@ def assert_round_equal(sv, mv, ss, ms, what="", rtol=1e-6, atol=1e-7):
 def roundwise_compare(prob, mesh, algo, hp, rounds=3, channel=None,
                       rtol=1e-6, atol=1e-7):
     """Advance the vmap state; at every round apply BOTH runtimes to the same
-    state and compare the full outputs."""
+    state and compare the full outputs (incl. the carried comm state the
+    algorithm's uplink schema allocates)."""
     fv = jax.jit(make_round_fn(algo, prob, hp, channel))
     fs = jax.jit(make_sharded_round_fn(algo, prob, hp, mesh, channel=channel))
-    state = init_state(prob, jax.random.PRNGKey(0), hp, channel)
+    state = init_state(prob, jax.random.PRNGKey(0), hp, channel, algo)
     for t in range(rounds):
         sv, mv = fv(state)
         ss, ms = fs(state)
@@ -163,6 +164,19 @@ class TestCompressedRoundEquivalence:
                          aa=AAConfig(tikhonov=1e-6, damping=0.7))
         roundwise_compare(prob, mesh, "fedosaa_svrg", hp, rounds=3,
                           channel="int8", rtol=1e-5)
+
+    @pytest.mark.parametrize("spec", ["bf16", "int8"])
+    @pytest.mark.parametrize("algo", ["giant", "newton_gmres", "dane"])
+    def test_stateful_newton_family_matches_vmap(self, setup, algo, spec):
+        """The newly stateful Newton family: carried comm state (diff-coded
+        gradient references, EF'd direction/delta residuals) must round-trip
+        through shard_map identically to the vmap runtime — rtol 1e-6 on the
+        host mesh, comm buffers compared round-by-round."""
+        prob, mesh = setup
+        hp = AlgoHParams(eta=0.5, local_epochs=3, dane_newton_iters=2,
+                         dane_cg_iters=5)
+        roundwise_compare(prob, mesh, algo, hp, rounds=3, channel=spec,
+                          rtol=1e-6, atol=1e-7)
 
     def test_codec_newton_and_line_search(self, setup):
         prob, mesh = setup
