@@ -1,0 +1,283 @@
+"""Round-engine benchmark: measured wall-time/round, before vs after.
+
+The seed driver paid per-round dispatch + host-sync overhead on every
+aggregation round (one jit call, one blocking metric transfer, an UN-jitted
+host rel-error — core/server.py pre-engine). This benchmark measures that
+cost directly against the device-resident round engine (core/engine.py) on
+the quick covtype setup, and commits the numbers to ``BENCH_round.json`` at
+the repo root — the perf trajectory future PRs extend.
+
+Methodology: every mode runs the same problem from the same initial state;
+compile + warmup excluded; the three modes are re-measured INTERLEAVED for
+several repetitions and the per-mode minimum is reported (robust to the
+noisy-neighbor variance of this shared container — spreads of 2–3× between
+repetitions were observed on idle cores).
+
+XLA:CPU runtime note (measured here, recorded in ROADMAP): the default
+thunk runtime executes compiled-loop bodies on a serial path — the SAME
+round costs ~1.6× more inside a lax.scan than as a standalone jit, and the
+sharded runtime's collectives degrade ~10×. This module therefore pins
+``--xla_cpu_use_thunk_runtime=false`` (set below, before jax initializes)
+for BOTH the before and after modes, so the comparison isolates
+chunking+donation rather than the runtime regression. TPU is unaffected
+(the thunk runtime is CPU-only).
+
+Three timed modes per (algo × runtime × channel) cell:
+
+  seed_loop — faithful re-enactment of the seed per-round loop: jit dispatch
+              per round, per-round host metric sync, eagerly-dispatched
+              host rel-error;
+  loop      — this PR's per-round loop (rel-error jitted once; still one
+              dispatch + one sync per round);
+  engine    — chunked lax.scan with donated state, metrics stacked on
+              device, ONE host sync per chunk.
+
+A separate micro-row exercises ``aa_impl="pallas"`` END-TO-END (full
+fedosaa rounds through the fused single-pass Gram/update kernels, interpret
+mode on CPU) and records its parity against the tree path — correctness
+evidence, not a CPU speed claim: the fused kernels' win is HBM traffic on
+TPU, while interpret mode is a Python-loop emulation.
+
+  PYTHONPATH=src python -m benchmarks.bench_round            # full grid
+  PYTHONPATH=src python -m benchmarks.bench_round --smoke    # CI gate
+"""
+from __future__ import annotations
+
+# BEFORE any jax import — see the XLA:CPU runtime note in the docstring.
+import os
+
+XLA_CPU_FLAG = "--xla_cpu_use_thunk_runtime=false"
+if XLA_CPU_FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        XLA_CPU_FLAG + " " + os.environ.get("XLA_FLAGS", "")).strip()
+
+import json      # noqa: E402
+import sys       # noqa: E402
+import time      # noqa: E402
+
+import jax       # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    AlgoHParams,
+    init_state,
+    make_chunk_runner,
+    make_round_fn,
+)
+from repro.core.sharded import make_sharded_round_fn  # noqa: E402
+from repro.launch.mesh import make_host_mesh          # noqa: E402
+from repro.utils import tree_math as tm               # noqa: E402
+
+from benchmarks.common import logreg_setup            # noqa: E402
+
+#: the committed perf-trajectory artifact (full grid only; see SMOKE_PATH)
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_round.json")
+#: --smoke output: a scratch path, so CI/dev gate runs never clobber the
+#: committed full-grid trajectory with 2-rep smoke numbers
+SMOKE_PATH = os.path.join(os.path.dirname(__file__), "results",
+                          "BENCH_round_smoke.json")
+
+ALGOS = ("fedosaa_svrg", "fedosaa_scaffold", "giant")
+RUNTIMES = ("vmap", "sharded")
+CHANNELS = ("identity", "int8")
+
+
+def _hp() -> AlgoHParams:
+    # fig6's quick-covtype hyperparameters for every cell (η=1, L=10 —
+    # L doubles as GIANT's CG iteration count), so the timer bases agree
+    # across benchmarks
+    return AlgoHParams(eta=1.0, local_epochs=10)
+
+
+def _make_round_fn(algo, prob, hp, runtime, channel, mesh):
+    if runtime == "sharded":
+        return make_sharded_round_fn(algo, prob, hp, mesh, channel=channel)
+    return make_round_fn(algo, prob, hp, channel)
+
+
+def _fresh_state(prob, hp, channel, algo):
+    return init_state(prob, jax.random.PRNGKey(0), hp, channel, algo)
+
+
+class _Cell:
+    """One (algo × runtime × channel) cell: three interleavable timed modes
+    over identical rounds from identical states."""
+
+    def __init__(self, prob, wstar, algo, runtime, channel, mesh, rounds,
+                 chunk):
+        hp = _hp()
+        self.prob, self.hp, self.algo, self.channel = prob, hp, algo, channel
+        self.rounds, self.chunk = rounds, chunk
+        self.wstar = wstar
+        self.wstar_norm = float(tm.tree_norm(wstar))
+        round_fn = _make_round_fn(algo, prob, hp, runtime, channel, mesh)
+        self.jf = jax.jit(round_fn)
+        self.rel_fn = jax.jit(
+            lambda p: tm.tree_norm(tm.tree_sub(p, wstar)))
+        self.runner = make_chunk_runner(round_fn, chunk, w_star=wstar)
+
+    def _state(self):
+        return _fresh_state(self.prob, self.hp, self.channel, self.algo)
+
+    def seed_loop(self) -> float:
+        """The SEED per-round loop, re-enacted: jit per round, host metric
+        sync per round, un-jitted (eagerly dispatched) host rel-error."""
+        state, m = self.jf(self._state())
+        jax.block_until_ready(m.loss)
+        t0 = time.perf_counter()
+        for _ in range(self.rounds):
+            state, m = self.jf(state)
+            m_host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), m)
+            diff = tm.tree_norm(tm.tree_sub(state.params, self.wstar))
+            rel = float(diff) / max(self.wstar_norm, 1e-30)
+        elapsed = time.perf_counter() - t0
+        del m_host, rel
+        return elapsed / self.rounds
+
+    def loop(self) -> float:
+        """This PR's per-round loop: rel-error jitted once and reused."""
+        state, m = self.jf(self._state())
+        float(self.rel_fn(state.params))
+        jax.block_until_ready(m.loss)
+        t0 = time.perf_counter()
+        for _ in range(self.rounds):
+            state, m = self.jf(state)
+            m_host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), m)
+            rel = float(self.rel_fn(state.params)) / max(self.wstar_norm, 1e-30)
+        elapsed = time.perf_counter() - t0
+        del m_host, rel
+        return elapsed / self.rounds
+
+    def engine(self) -> float:
+        """The chunked engine: donated scan, one host sync per chunk."""
+        out = self.runner(self._state(), np.int32(self.chunk))
+        jax.device_get(out[1:])
+        n_chunks = max(self.rounds // self.chunk, 1)
+        t0 = time.perf_counter()
+        for _ in range(n_chunks):
+            out = self.runner(out[0], np.int32(self.chunk))
+            jax.device_get(out[1:])
+        elapsed = time.perf_counter() - t0
+        return elapsed / (n_chunks * self.chunk)
+
+
+def _bench_cell(prob, wstar, algo, runtime, channel, mesh, rounds, chunk,
+                reps):
+    cell = _Cell(prob, wstar, algo, runtime, channel, mesh, rounds, chunk)
+    modes = {"seed_loop": cell.seed_loop, "loop": cell.loop,
+             "engine": cell.engine}
+    for f in modes.values():   # warmup/compile every mode first
+        f()
+    times = {k: [] for k in modes}
+    for _ in range(reps):      # interleaved, min-taking (see docstring)
+        for k, f in modes.items():
+            times[k].append(f())
+    t_seed = min(times["seed_loop"])
+    t_loop = min(times["loop"])
+    t_eng = min(times["engine"])
+    return {
+        "algo": algo,
+        "runtime": runtime,
+        "channel": channel,
+        "rounds_timed": rounds,
+        "chunk": chunk,
+        "reps": reps,
+        "seed_loop_s_per_round": t_seed,
+        "loop_s_per_round": t_loop,
+        "engine_s_per_round": t_eng,
+        "seed_loop_rounds_per_sec": 1.0 / t_seed,
+        "engine_rounds_per_sec": 1.0 / t_eng,
+        "engine_speedup_vs_seed_loop": t_seed / t_eng,
+        "engine_speedup_vs_loop": t_loop / t_eng,
+    }
+
+
+def _pallas_row(prob, wstar, rounds):
+    """aa_impl="pallas" end-to-end: full fedosaa_svrg rounds through the
+    fused kernels (interpret mode on CPU), parity-checked against "tree"."""
+    import dataclasses
+
+    hp = AlgoHParams(eta=1.0, local_epochs=10, aa_impl="tree")
+    results = {}
+    for impl in ("tree", "pallas"):
+        rf = make_round_fn("fedosaa_svrg", prob,
+                           dataclasses.replace(hp, aa_impl=impl))
+        runner = make_chunk_runner(rf, rounds, w_star=wstar, donate=False)
+        state = _fresh_state(prob, hp, None, "fedosaa_svrg")
+        state, done, ms, rels, lives = runner(state, np.int32(rounds))
+        results[impl] = (np.asarray(jax.device_get(rels)),
+                         jax.device_get(state.params))
+    rel_t, p_t = results["tree"]
+    rel_p, p_p = results["pallas"]
+    max_param_diff = max(
+        float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+        for a, b in zip(jax.tree.leaves(p_t), jax.tree.leaves(p_p))
+    )
+    return {
+        "algo": "fedosaa_svrg",
+        "runtime": "vmap",
+        "aa_impl": "pallas",
+        "interpret_mode": jax.default_backend() != "tpu",
+        "rounds": rounds,
+        "rel_error_tree": [float(v) for v in rel_t],
+        "rel_error_pallas": [float(v) for v in rel_p],
+        "max_abs_param_diff_vs_tree": max_param_diff,
+    }
+
+
+def run(smoke: bool = False) -> dict:
+    rounds = 4 if smoke else 16
+    chunk = 2 if smoke else 8
+    reps = 2 if smoke else 5
+    prob, wstar = logreg_setup("covtype", n=10_000, k=10)
+    mesh = make_host_mesh()
+    algos = ("fedosaa_svrg",) if smoke else ALGOS
+    channels = ("identity",) if smoke else CHANNELS
+    rows = []
+    for algo in algos:
+        for runtime in RUNTIMES:
+            for channel in channels:
+                row = _bench_cell(prob, wstar, algo, runtime, channel, mesh,
+                                  rounds, chunk, reps)
+                rows.append(row)
+                print(f"{algo:18s} {runtime:7s} {channel:8s} "
+                      f"seed {row['seed_loop_s_per_round']*1e3:7.2f} ms/round"
+                      f" -> engine {row['engine_s_per_round']*1e3:7.2f}"
+                      f"  ({row['engine_speedup_vs_seed_loop']:.2f}x)")
+    pallas = _pallas_row(prob, wstar, rounds=2 if smoke else 4)
+    print(f"aa_impl=pallas parity: max |Δparams| vs tree "
+          f"{pallas['max_abs_param_diff_vs_tree']:.2e}")
+    headline = next(
+        r for r in rows
+        if (r["algo"], r["runtime"], r["channel"])
+        == ("fedosaa_svrg", "vmap", "identity"))
+    out = {
+        "bench": "round_engine",
+        "setup": {"dataset": "covtype-quick", "n": 10_000, "k": 10,
+                  "eta": 1.0, "local_epochs": 10,
+                  "backend": jax.default_backend(),
+                  "xla_flags": os.environ.get("XLA_FLAGS", ""),
+                  "timing": "interleaved reps, per-mode min",
+                  "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")},
+        "smoke": smoke,
+        "rows": rows,
+        "aa_impl_pallas": pallas,
+        "headline": {
+            "cell": "fedosaa_svrg/vmap/identity",
+            "engine_speedup_vs_seed_loop":
+                headline["engine_speedup_vs_seed_loop"],
+            "seed_loop_s_per_round": headline["seed_loop_s_per_round"],
+            "engine_s_per_round": headline["engine_s_per_round"],
+        },
+    }
+    path = SMOKE_PATH if smoke else OUT_PATH
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"headline: {out['headline']['engine_speedup_vs_seed_loop']:.2f}x "
+          f"({path})")
+    return out
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 from functools import lru_cache
 
 import numpy as np
@@ -50,15 +49,20 @@ def logreg_setup(
 def bench_algo(
     prob, wstar, algo: str, hp: AlgoHParams, rounds: int, label: str,
     channel=None, stop_rel_error: float | None = None, runtime: str = "vmap",
+    chunk: int | None = None,
 ) -> dict:
-    t0 = time.perf_counter()
+    """``us_per_call`` is History.wall_time's own per-round timer — the same
+    clock benchmarks/bench_round.py uses (device-side round + the driver's
+    metric sync, excluding the w* solve and History assembly; compile time
+    lands in round 0 either way). ``chunk`` routes the rounds through the
+    device-resident engine (core/engine.py)."""
     h = run_federated(prob, algo, hp, rounds, w_star=wstar, channel=channel,
-                      stop_rel_error=stop_rel_error, runtime=runtime)
-    wall = time.perf_counter() - t0
+                      stop_rel_error=stop_rel_error, runtime=runtime,
+                      chunk=chunk)
     n_rounds = len(h.rounds)
     return {
         "name": label,
-        "us_per_call": 1e6 * wall / max(n_rounds, 1),
+        "us_per_call": 1e6 * float(h.wall_time[-1]) / max(n_rounds, 1),
         "derived": float(h.rel_error[-1]),
         "algo": algo,
         "rounds": n_rounds,

@@ -1,11 +1,18 @@
 """Figure 6: computation-time comparison. DANE's exact local solves cost
 orders of magnitude more per round than everything else (paper: 51 s vs 0.8 s
-per round on covtype); us_per_call is the direct analogue."""
+per round on covtype); us_per_call is the direct analogue.
+
+Timing rides the same per-round clock as benchmarks/bench_round.py
+(History.wall_time via bench_algo), and every algorithm runs through the
+device-resident round engine (chunk=4) so the comparison measures round
+COMPUTE, not per-round dispatch overhead."""
 from __future__ import annotations
 
 from repro.core import AlgoHParams
 
 from benchmarks.common import bench_algo, logreg_setup, print_csv, save_results
+
+ROUND_CHUNK = 4
 
 
 def run(quick: bool = True) -> list[dict]:
@@ -22,7 +29,8 @@ def run(quick: bool = True) -> list[dict]:
         ("dane", AlgoHParams(dane_newton_iters=10, dane_cg_iters=50)),
     ]
     for algo, hp in specs:
-        rows.append(bench_algo(prob, wstar, algo, hp, rounds, f"fig6/{algo}"))
+        rows.append(bench_algo(prob, wstar, algo, hp, rounds, f"fig6/{algo}",
+                               chunk=ROUND_CHUNK))
     save_results("fig6_walltime", rows)
     return rows
 

@@ -24,6 +24,9 @@ def main():
     ap.add_argument("--comm-codec", default="identity",
                     help="wire-compression channel (repro/comm): identity | "
                          "bf16 | int8 | topk[:ratio] ...")
+    ap.add_argument("--round-chunk", type=int, default=0,
+                    help="run this many rounds per donated lax.scan jit "
+                         "(core/engine.py); 0 = per-round loop")
     args = ap.parse_args()
 
     X, y = make_binary_classification("covtype", n=10_000, seed=0)
@@ -37,7 +40,8 @@ def main():
                      participation=args.participation)
     for algo in ALGOS:
         h = run_federated(problem, algo, hp, args.rounds, w_star=w_star,
-                          channel=args.comm_codec)
+                          channel=args.comm_codec,
+                          chunk=args.round_chunk or None)
         print(h.summary())
 
 

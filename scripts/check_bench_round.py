@@ -1,0 +1,59 @@
+"""Validate a bench_round perf artifact (BENCH_round.json schema).
+
+Shared by scripts/ci.sh and .github/workflows/ci.yml so the gate cannot
+drift between the two.
+
+  python scripts/check_bench_round.py <path> [--require-full]
+
+--require-full additionally rejects smoke-mode artifacts and enforces the
+full 12-cell grid: the committed repo-root BENCH_round.json is the curated
+trajectory and must never be replaced by 2-rep smoke numbers (smoke runs
+write to benchmarks/results/BENCH_round_smoke.json).
+
+Failures raise (never bare `assert`, which python -O strips — this script
+is a CI gate).
+"""
+import json
+import sys
+
+args = [a for a in sys.argv[1:] if not a.startswith("--")]
+path = args[0] if args else "BENCH_round.json"
+require_full = "--require-full" in sys.argv
+
+
+def fail(msg: str):
+    raise SystemExit(f"check_bench_round: {path}: {msg}")
+
+
+with open(path) as f:
+    b = json.load(f)
+if b.get("bench") != "round_engine":
+    fail(f"bench != 'round_engine' (got {b.get('bench')!r})")
+if not b.get("rows"):
+    fail("no bench rows")
+for row in b["rows"]:
+    if not (row["engine_s_per_round"] > 0 and row["seed_loop_s_per_round"] > 0):
+        fail(f"non-positive timing in row {row['algo']}/{row['runtime']}/"
+             f"{row['channel']}")
+if "engine_speedup_vs_seed_loop" not in b.get("headline", {}):
+    fail("headline missing engine_speedup_vs_seed_loop")
+if "max_abs_param_diff_vs_tree" not in b.get("aa_impl_pallas", {}):
+    fail("aa_impl_pallas row missing max_abs_param_diff_vs_tree")
+if require_full:
+    if b["smoke"]:
+        fail("holds SMOKE data — the committed trajectory must be the full "
+             "grid (regenerate with: python -m benchmarks.bench_round)")
+    # the full grid's cell set (keep in sync with benchmarks/bench_round.py
+    # ALGOS × RUNTIMES × CHANNELS — not imported: that module pins XLA flags
+    # and initializes jax, far too heavy for this checker)
+    expected = {(a, r, c)
+                for a in ("fedosaa_svrg", "fedosaa_scaffold", "giant")
+                for r in ("vmap", "sharded")
+                for c in ("identity", "int8")}
+    got = {(row["algo"], row["runtime"], row["channel"]) for row in b["rows"]}
+    if got != expected:
+        fail(f"not the full grid: missing {sorted(expected - got)}, "
+             f"unexpected {sorted(got - expected)}")
+print(f"ci: {path} well-formed "
+      f"(headline {b['headline']['engine_speedup_vs_seed_loop']:.2f}x"
+      f"{', full grid' if require_full else ''})")

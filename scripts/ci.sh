@@ -24,3 +24,12 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q --durations=25
 # convergence track; codec regressions fail CI here instead of surviving
 # until the full benchmark run.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.ext_compression --smoke
+
+# Round-engine smoke: the chunked/donated engine and the fused-AA path run
+# end-to-end, emitting a scratch artifact (benchmarks/results/
+# BENCH_round_smoke.json — smoke never clobbers the committed trajectory).
+# The gate validates the fresh emission AND that the committed repo-root
+# BENCH_round.json is still the well-formed FULL grid.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_round --smoke
+python scripts/check_bench_round.py benchmarks/results/BENCH_round_smoke.json
+python scripts/check_bench_round.py BENCH_round.json --require-full

@@ -1,10 +1,17 @@
 from repro.core.anderson import (  # noqa: F401
+    AA_IMPLS,
     AAConfig,
     AAStats,
     aa_mixing_step,
     lbfgs_two_loop,
     multisecant_update,
+    resolve_aa_impl,
     trajectory_to_sy,
+)
+from repro.core.engine import (  # noqa: F401
+    RoundTrace,
+    make_chunk_runner,
+    run_rounds,
 )
 from repro.core.algorithms import (  # noqa: F401
     ALGORITHMS,

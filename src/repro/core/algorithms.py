@@ -48,7 +48,14 @@ from repro.comm.schema import (
     init_schema_state,
     validate_schema,
 )
-from repro.core.anderson import AAConfig, AAStats, lbfgs_two_loop, multisecant_update, trajectory_to_sy
+from repro.core.anderson import (
+    AAConfig,
+    AAStats,
+    lbfgs_two_loop,
+    multisecant_update,
+    resolve_aa_impl,
+    trajectory_to_sy,
+)
 from repro.core.problem import ClientBatch, FLProblem, sample_minibatch
 from repro.utils import tree_math as tm
 
@@ -175,6 +182,12 @@ class AlgoHParams:
                                 # (paper App. A option 1; FedOSAA-SVRG only)
     dane_newton_iters: int = 20
     dane_cg_iters: int = 100
+    aa_impl: str = "auto"       # AA-step implementation: "tree" (leaf-wise
+                                # tree_math), "pallas" (fused single-pass
+                                # kernels on per-dtype flat buffers; vmap
+                                # runtime only), "auto" (pallas on TPU).
+                                # The sharded runtime always falls back to
+                                # "tree" (see core/anderson.resolve_aa_impl).
 
 
 class ServerState(NamedTuple):
@@ -334,12 +347,14 @@ def _client_svrg(problem, hp, use_aa, w_t, g_global, x, y, mask, rng,
         # filtered/regularized LS solve absorbs the inconsistency)
         s_all = jax.tree.map(lambda h, f: jnp.concatenate([h, f], 0), hist_s, s)
         y_all = jax.tree.map(lambda h, f: jnp.concatenate([h, f], 0), hist_y, y_stack)
-        w_k, stats = multisecant_update(w_t, g_global, s_all, y_all, hp.eta, hp.aa)
+        w_k, stats = multisecant_update(w_t, g_global, s_all, y_all, hp.eta,
+                                        hp.aa, impl=hp.aa_impl)
         Hn = hp.carry_history
         new_hs = jax.tree.map(lambda f: f[-Hn:], s)
         new_hy = jax.tree.map(lambda f: f[-Hn:], y_stack)
         return w_k, stats, new_hs, new_hy
-    w_k, stats = multisecant_update(w_t, g_global, s, y_stack, hp.eta, hp.aa)
+    w_k, stats = multisecant_update(w_t, g_global, s, y_stack, hp.eta, hp.aa,
+                                    impl=hp.aa_impl)
     return w_k, stats
 
 
@@ -350,7 +365,8 @@ def _client_scaffold(problem, hp, use_aa, w_t, c, x, y, mask, c_k, rng):
     w_traj, r_traj = _local_trajectory(problem, hp, w_t, batch, residual_fn, rng)
     if use_aa:
         s, y_stack = trajectory_to_sy(w_traj, r_traj, hp.aa.residual_ema)
-        w_k, stats = multisecant_update(w_t, c, s, y_stack, hp.eta, hp.aa)
+        w_k, stats = multisecant_update(w_t, c, s, y_stack, hp.eta, hp.aa,
+                                        impl=hp.aa_impl)
     else:
         w_k = jax.tree.map(lambda t: t[-1], w_traj)
         stats = AAStats(jnp.nan, jnp.nan, jnp.nan, jnp.array(0))
@@ -368,7 +384,8 @@ def _client_avg(problem, hp, use_aa, w_t, x, y, mask, rng):
     s, y_stack = trajectory_to_sy(w_traj, r_traj)
     # negative control: AA against the LOCAL gradient (no correction exists)
     g_local = jax.tree.map(lambda t: t[0], r_traj)
-    w_k, stats = multisecant_update(w_t, g_local, s, y_stack, hp.eta, hp.aa)
+    w_k, stats = multisecant_update(w_t, g_local, s, y_stack, hp.eta, hp.aa,
+                                    impl=hp.aa_impl)
     return w_k, stats
 
 
@@ -800,6 +817,9 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
     """
     if algo not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algo!r}; choose from {ALGORITHMS}")
+    # resolve the AA implementation once for this runtime, so the client
+    # bodies see a concrete "tree"/"pallas" (never "auto")
+    hp = dataclasses.replace(hp, aa_impl=resolve_aa_impl(hp.aa_impl, "vmap"))
     channel = make_channel(channel)
     p0 = problem.init(jax.random.PRNGKey(0))
     comm_bytes = comm_bytes_per_round(algo, p0, channel, hp.line_search)

@@ -92,6 +92,28 @@ def _solve_gram(gram: jax.Array, rhs: jax.Array, cfg: AAConfig):
     return gamma, cond, jnp.sum(keep)
 
 
+#: legal values of the AA-step implementation knob (AlgoHParams.aa_impl)
+AA_IMPLS = ("auto", "tree", "pallas")
+
+
+def resolve_aa_impl(impl: str, runtime: str = "vmap") -> str:
+    """Resolve the ``aa_impl`` knob to a concrete implementation.
+
+    "auto" picks the fused Pallas kernels where they compile natively (TPU)
+    and the pytree path elsewhere. The sharded runtime ALWAYS resolves to
+    "tree" — its leaves may be sharded across the mesh, where leaf-wise
+    contraction (see tree_math sharding notes) is the correct hot path —
+    so an explicit "pallas" falls back without error, as documented.
+    """
+    if impl not in AA_IMPLS:
+        raise ValueError(f"unknown aa_impl {impl!r}; choose from {AA_IMPLS}")
+    if runtime == "sharded":
+        return "tree"
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "tree"
+    return impl
+
+
 def multisecant_update(
     w: Pytree,
     g: Pytree,
@@ -99,6 +121,7 @@ def multisecant_update(
     y_stack: Pytree,
     eta: float,
     cfg: AAConfig = AAConfig(),
+    impl: str = "tree",
 ) -> tuple[Pytree, AAStats]:
     """FedOSAA's one-step AA update (Algorithm 1, lines 15–18).
 
@@ -109,10 +132,17 @@ def multisecant_update(
       s_stack / y_stack: histories with leading axis m:
          s_ℓ = w_{ℓ+1} − w_ℓ,  y_ℓ = r_{ℓ+1} − r_ℓ  (r = corrected gradients).
       eta: local learning rate η.
+      impl: "tree" (leaf-wise tree_math contractions — streams S/Y three
+         times, but keeps sharded leaves sharded), "pallas" (ravel into
+         per-dtype flat buffers and run the single-pass fused Gram/update
+         kernels from kernels/anderson — the vmap-runtime hot path), or
+         "auto" (pallas on TPU, tree elsewhere).
 
     Returns (w⁺, stats) with
       w⁺ = w − η g − damping · (S − ηY) Γ + ... ,  Γ = (YᵀY)⁻¹ Yᵀ g.
     """
+    if resolve_aa_impl(impl) == "pallas":
+        return _multisecant_update_pallas(w, g, s_stack, y_stack, eta, cfg)
     gram = tm.tree_gram(y_stack, y_stack)          # [m, m] YᵀY
     yg = tm.tree_vdot_stacked(y_stack, g)          # [m]    Yᵀg
     gamma, cond, used = _solve_gram(gram, yg, cfg)
@@ -130,6 +160,59 @@ def multisecant_update(
         lambda wi, gi, sg, yg_: wi - eta * gi - beta * (sg - eta * yg_),
         w, g, s_gamma, y_gamma,
     )
+    stats = AAStats(theta=theta, gamma_norm=jnp.linalg.norm(gamma),
+                    gram_cond=cond, used_columns=used)
+    return new_w, stats
+
+
+def _multisecant_update_pallas(
+    w: Pytree, g: Pytree, s_stack: Pytree, y_stack: Pytree,
+    eta: float, cfg: AAConfig,
+) -> tuple[Pytree, AAStats]:
+    """Fused AA step: same math and stats as the tree path, via the
+    single-pass Pallas kernels on per-dtype flat buffers.
+
+    The leaves are grouped by dtype and each group raveled once into a
+    [m, d_g] buffer; the Gram system accumulates ACROSS groups (YᵀY is a sum
+    over all components, so per-group Grams add exactly), the [m,m] solve —
+    including Tikhonov/filtering, shared with the tree path via _solve_gram —
+    happens once, and each group streams through the update kernel. S and Y
+    are read once per pass instead of the tree path's three HBM sweeps.
+    """
+    from repro.kernels.anderson import ops
+
+    w_leaves, treedef = jax.tree.flatten(w)
+    g_leaves = jax.tree.leaves(g)
+    s_leaves = jax.tree.leaves(s_stack)
+    y_leaves = jax.tree.leaves(y_stack)
+    m = y_leaves[0].shape[0]
+    groups = ops.dtype_leaf_groups(w)
+
+    gram = jnp.zeros((m, m), jnp.float32)
+    yg = jnp.zeros((m,), jnp.float32)
+    g_norm2 = jnp.zeros((), jnp.float32)
+    flats = []
+    for _, idxs in groups:
+        wf = ops.ravel_group(w_leaves, idxs)
+        gf = ops.ravel_group(g_leaves, idxs)
+        sf = ops.ravel_stack_group(s_leaves, idxs)
+        yf = ops.ravel_stack_group(y_leaves, idxs)
+        gm, ygv = ops.flat_gram(yf, gf)
+        gram += gm
+        yg += ygv
+        gf32 = gf.astype(jnp.float32)
+        g_norm2 += jnp.dot(gf32, gf32)
+        flats.append((idxs, wf, gf, sf, yf))
+
+    gamma, cond, used = _solve_gram(gram, yg, cfg)
+    proj2 = jnp.dot(yg, gamma)
+    theta = jnp.sqrt(jnp.clip(1.0 - proj2 / jnp.maximum(g_norm2, 1e-30), 0.0, 1.0))
+
+    out_leaves = list(w_leaves)
+    for idxs, wf, gf, sf, yf in flats:
+        of = ops.flat_update(wf, gf, sf, yf, gamma, eta, cfg.damping)
+        ops.unravel_group_into(of, w_leaves, idxs, out_leaves)
+    new_w = jax.tree.unflatten(treedef, out_leaves)
     stats = AAStats(theta=theta, gamma_norm=jnp.linalg.norm(gamma),
                     gram_cond=cond, used_columns=used)
     return new_w, stats

@@ -1,0 +1,209 @@
+"""Device-resident round engine: multi-round scan chunking with donated state.
+
+The seed driver (core/server.py) dispatched ONE jit per aggregation round and
+host-synced every metric — per-round Python/dispatch overhead plus a blocking
+device→host transfer per round, with the K×d-heavy ServerState (params +
+control variates + per-client EF residuals + diff-coding refs) re-uploaded
+conceptually every call. This engine compiles ``chunk`` rounds into one XLA
+computation:
+
+  * ``jax.lax.scan`` over the rounds, so B rounds are one dispatch;
+  * the ServerState argument is DONATED (``donate_argnums``), so XLA reuses
+    the K×d client-state buffers in place instead of doubling peak memory —
+    this holds for the sharded runtime too, whose round_fn carries the
+    stacked per-client buffers through shard_map;
+  * per-round ``RoundMetrics`` (plus the rel-error against a device-resident
+    ``w_star``) stack ON DEVICE; the host syncs once per chunk;
+  * stopping criteria — rel-error target, grad-norm target, non-finite
+    loss — are evaluated IN-GRAPH: once one fires, the carried state passes
+    through the remaining rounds of the chunk untouched (a leaf-wise
+    select), so the final state is identical to the per-round loop that
+    breaks immediately.
+
+Stop criteria therefore resolve at CHUNK granularity from the host's point
+of view (the driver learns about the stop one chunk-sync later) but at ROUND
+granularity numerically: no extra round is ever applied to the carried
+state, and the emitted per-round rows are exactly the rows the Python loop
+would have produced (guarded by tests/test_engine.py in both runtimes).
+
+Why a select and not ``lax.cond``: the scan body applies the round
+UNCONDITIONALLY and selects between old and new state afterwards. Measured
+on this container, that keeps the chunked round BIT-EXACT with the
+standalone per-round jit — wrapping the round in a runtime-predicated cond
+changes XLA's fusion choices by an ulp, which the ill-conditioned AA Gram
+solve then amplifies arbitrarily (the same chaos documented for
+vmap-vs-sharded agreement in core/sharded.py). The price is that scan slots
+past an early stop (or past ``n_live`` in a short final chunk) burn a
+round's FLOPs on a discarded result — bounded by chunk−1 rounds per run,
+zero when no stop criterion fires and chunk divides num_rounds.
+
+``run_rounds`` works with any ``round(state) -> (state, RoundMetrics)`` —
+the vmap runtime's ``make_round_fn`` and the sharded runtime's
+``make_sharded_round_fn`` alike. Pass the UN-jitted round function; the
+engine owns the jit (and its donation).
+
+NOTE donation semantics: with ``donate=True`` (default) the caller's input
+``state`` buffers are consumed by the first chunk — re-init (same PRNGKey
+gives an identical state) if the initial state is needed afterwards.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import tree_math as tm
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class RoundTrace:
+    """Per-round history of an engine run (host-side numpy, one row per
+    EXECUTED round — padded/skipped scan slots are dropped)."""
+
+    loss: np.ndarray           # [T]
+    grad_norm: np.ndarray      # [T]
+    theta_mean: np.ndarray     # [T]
+    gram_cond_max: np.ndarray  # [T]
+    comm_bytes: np.ndarray     # [T] per-round (NOT cumulative) wire bytes
+    rel_error: np.ndarray      # [T] ‖w−w*‖/‖w*‖ (nan when w_star not given)
+    wall_time: np.ndarray      # [T] cumulative seconds; each chunk's measured
+                               # wall time is attributed equally to its rounds
+    stopped: bool              # a stop criterion fired (vs round budget spent)
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.loss)
+
+
+def make_chunk_runner(
+    round_fn: Callable,
+    chunk: int,
+    *,
+    w_star: Pytree | None = None,
+    stop_rel_error: float | None = None,
+    stop_grad_norm: float | None = None,
+    donate: bool = True,
+):
+    """Compile ``chunk`` rounds of ``round_fn`` into one donated jit.
+
+    Returns ``runner(state, n_live) -> (state, done, metrics, rel, live)``:
+      state   — after min(n_live, first-stop) rounds; the INPUT state buffers
+                are donated (consumed) when ``donate``;
+      done    — scalar bool: a stop criterion fired inside the chunk;
+      metrics — RoundMetrics stacked [chunk];
+      rel     — [chunk] f32 rel-error after each round (nan w/o w_star);
+      live    — [chunk] bool: the round's result entered the carried state.
+                Non-live slots (past ``n_live`` or past a stop) computed a
+                round on the frozen state and DISCARDED it — their metric
+                rows are garbage and must be dropped.
+
+    ``n_live`` is a device scalar, so a short final chunk reuses the SAME
+    executable (no recompile); slots with i >= n_live behave exactly like
+    post-stop slots.
+    """
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    w_star_norm = (
+        jnp.maximum(tm.tree_norm(w_star), 1e-30) if w_star is not None else None
+    )
+
+    def chunk_fn(state, n_live):
+        def step(carry, i):
+            s, done = carry
+            # unconditional round + select (NOT lax.cond) — see module
+            # docstring: this keeps the chunk bit-exact with the loop
+            new_s, m = round_fn(s)
+            if w_star is not None:
+                rel = tm.tree_norm(tm.tree_sub(new_s.params, w_star)) / w_star_norm
+            else:
+                rel = jnp.full((), jnp.nan, jnp.float32)
+            live = jnp.logical_and(~done, i < n_live)
+            new_s = tm.tree_where(live, new_s, s)
+            # mirror the loop's break order: the row is emitted, THEN the
+            # stop fires — so the stopping round's row is kept
+            stop = ~jnp.isfinite(m.loss)
+            if stop_rel_error is not None:
+                stop = jnp.logical_or(stop, rel < stop_rel_error)
+            if stop_grad_norm is not None:
+                stop = jnp.logical_or(stop, m.grad_norm < stop_grad_norm)
+            done = jnp.logical_or(done, jnp.logical_and(live, stop))
+            return (new_s, done), (m, rel, live)
+
+        (state, done), (ms, rels, lives) = jax.lax.scan(
+            step, (state, jnp.zeros((), bool)), jnp.arange(chunk)
+        )
+        return state, done, ms, rels, lives
+
+    return jax.jit(chunk_fn, donate_argnums=(0,) if donate else ())
+
+
+def run_rounds(
+    round_fn: Callable,
+    state,
+    num_rounds: int,
+    *,
+    chunk: int = 8,
+    w_star: Pytree | None = None,
+    stop_rel_error: float | None = None,
+    stop_grad_norm: float | None = None,
+    donate: bool = True,
+    runner: Callable | None = None,
+):
+    """Run up to ``num_rounds`` rounds in chunks of ``chunk``; one host sync
+    per chunk. Returns ``(final_state, RoundTrace)`` — the state stays
+    device-resident, the trace is host numpy with one row per executed round
+    (identical to the per-round Python loop's rows).
+
+    ``runner`` — optionally a prebuilt ``make_chunk_runner(...)`` whose
+    compiled executable should be reused (e.g. pre-compiled via
+    ``runner.lower(state, np.int32(n)).compile()`` so the trace excludes
+    compile time). It MUST have been built from the same ``round_fn`` with
+    the same chunk/stop configuration; when omitted, one is built here.
+    """
+    chunk = max(1, min(chunk, num_rounds))
+    if runner is None:
+        runner = make_chunk_runner(
+            round_fn, chunk, w_star=w_star, stop_rel_error=stop_rel_error,
+            stop_grad_norm=stop_grad_norm, donate=donate,
+        )
+    cols: list[list] = [[] for _ in range(7)]
+    t_total = 0.0
+    executed = 0
+    stopped = False
+    while executed < num_rounds and not stopped:
+        n_live = min(chunk, num_rounds - executed)
+        t0 = time.perf_counter()
+        state, done, ms, rels, lives = runner(state, np.int32(n_live))
+        # the ONE host sync of this chunk (device_get blocks on the results)
+        done, ms, rels, lives = jax.device_get((done, ms, rels, lives))
+        elapsed = time.perf_counter() - t0
+        idx = np.flatnonzero(lives)
+        per_round = elapsed / max(len(idx), 1)
+        for i in idx:
+            t_total += per_round
+            cols[0].append(float(np.asarray(ms.loss)[i]))
+            cols[1].append(float(np.asarray(ms.grad_norm)[i]))
+            cols[2].append(float(np.asarray(ms.theta_mean)[i]))
+            cols[3].append(float(np.asarray(ms.gram_cond_max)[i]))
+            cols[4].append(float(np.asarray(ms.comm_bytes)[i]))
+            cols[5].append(float(rels[i]))
+            cols[6].append(t_total)
+        executed += len(idx)
+        stopped = bool(done)
+    trace = RoundTrace(
+        loss=np.asarray(cols[0]),
+        grad_norm=np.asarray(cols[1]),
+        theta_mean=np.asarray(cols[2]),
+        gram_cond_max=np.asarray(cols[3]),
+        comm_bytes=np.asarray(cols[4]),
+        rel_error=np.asarray(cols[5]),
+        wall_time=np.asarray(cols[6]),
+        stopped=stopped,
+    )
+    return state, trace

@@ -65,6 +65,7 @@ def run_federated(
     runtime: str = "vmap",
     mesh=None,
     channel=None,
+    chunk: int | None = None,
 ) -> History:
     """Iterate ``num_rounds`` of ``algo`` and collect the metric history.
 
@@ -77,6 +78,15 @@ def run_federated(
               string like "int8", "topk:0.05", "bf16/bf16"); None = lossless
               fp32. Both runtimes honor it, and ``History.comm_bytes`` counts
               exactly what the chosen codecs put on the wire.
+    chunk   — None (default): the per-round loop — one jit dispatch and one
+              host metric sync per round. chunk >= 1: the device-resident
+              round engine (core/engine.py) compiles ``chunk`` rounds into
+              one lax.scan jit with DONATED state, stacks metrics on device,
+              and evaluates the stop criteria in-graph, syncing the host
+              once per chunk. The History rows are identical either way
+              (tests/test_engine.py, rtol 1e-6); only the wall_time
+              attribution differs — the engine divides each chunk's measured
+              time equally over its rounds.
     """
     from repro.comm import make_channel
 
@@ -87,7 +97,10 @@ def run_federated(
     channel = make_channel(channel)
     state = init_state(problem, rng, hp, channel, algo)
     if w0 is not None:
-        state = state._replace(params=w0)
+        # the engine path DONATES the state; copy so the caller's w0 buffers
+        # are never consumed (the loop path aliases them harmlessly)
+        state = state._replace(
+            params=jax.tree.map(jnp.array, w0) if chunk is not None else w0)
     if runtime == "sharded":
         from repro.core.sharded import make_sharded_round_fn
 
@@ -95,14 +108,45 @@ def run_federated(
             from repro.launch.mesh import make_host_mesh
 
             mesh = make_host_mesh()
-        round_fn = jax.jit(
-            make_sharded_round_fn(algo, problem, hp, mesh, channel=channel))
+        round_fn = make_sharded_round_fn(algo, problem, hp, mesh,
+                                         channel=channel)
     else:
-        round_fn = jax.jit(make_round_fn(algo, problem, hp, channel))
+        round_fn = make_round_fn(algo, problem, hp, channel)
 
+    if chunk is not None:
+        if chunk < 1:
+            # the CLIs map their 0-means-loop knob to None before calling;
+            # a direct chunk=0 should not silently pick either path
+            raise ValueError(
+                f"chunk must be >= 1 (or None for the per-round loop), "
+                f"got {chunk}")
+        from repro.core import engine
+
+        state, trace = engine.run_rounds(
+            round_fn, state, num_rounds, chunk=chunk, w_star=w_star,
+            stop_rel_error=stop_rel_error, stop_grad_norm=stop_grad_norm,
+        )
+        return History(
+            algo=algo,
+            rounds=np.arange(trace.num_rounds, dtype=np.float64),
+            loss=trace.loss,
+            grad_norm=trace.grad_norm,
+            rel_error=trace.rel_error,
+            theta_mean=trace.theta_mean,
+            comm_bytes=np.cumsum(trace.comm_bytes),
+            wall_time=trace.wall_time,
+            final_params=jax.device_get(state.params),
+            channel=channel.name,
+        )
+
+    round_fn = jax.jit(round_fn)
     w_star_norm = None
+    rel_fn = None
     if w_star is not None:
         w_star_norm = float(tm.tree_norm(w_star))
+        # jit once, reuse every round: un-jitted tree_norm(tree_sub(...))
+        # eagerly dispatched O(n_leaves) kernels per round
+        rel_fn = jax.jit(lambda p: tm.tree_norm(tm.tree_sub(p, w_star)))
 
     rows = []
     comm_total = 0.0
@@ -113,9 +157,8 @@ def run_federated(
         m = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), m)
         t_total += time.perf_counter() - t0
         comm_total += float(m.comm_bytes)
-        if w_star is not None:
-            diff = tm.tree_norm(tm.tree_sub(state.params, w_star))
-            rel = float(diff) / max(w_star_norm, 1e-30)
+        if rel_fn is not None:
+            rel = float(rel_fn(state.params)) / max(w_star_norm, 1e-30)
         else:
             rel = float("nan")
         rows.append((t, float(m.loss), float(m.grad_norm), rel,

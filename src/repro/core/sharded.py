@@ -33,6 +33,7 @@ simply not mentioned in any spec: the round is replicated over it.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 
 import jax
@@ -57,6 +58,7 @@ from repro.core.algorithms import (
     comm_bytes_per_round,
     finalize_metrics,
 )
+from repro.core.anderson import resolve_aa_impl
 from repro.core.problem import FLProblem
 from repro.utils.compat import shard_map
 
@@ -145,6 +147,10 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
     """
     if algo not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algo!r}; choose from {ALGORITHMS}")
+    # the sharded runtime always takes the leaf-wise tree AA path: leaves may
+    # be sharded across the mesh, where the flat-buffer Pallas ravel would
+    # force an all-gather; aa_impl="pallas"/"auto" falls back without error
+    hp = dataclasses.replace(hp, aa_impl=resolve_aa_impl(hp.aa_impl, "sharded"))
     axes = client_mesh_axes(mesh) if client_axes is None else tuple(client_axes)
     if not axes:
         raise ValueError(

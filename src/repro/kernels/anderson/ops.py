@@ -1,10 +1,21 @@
-"""Jit'd public wrapper: one-shot flat-vector AA step via the Pallas kernels.
+"""Jit'd public wrappers: flat-vector AA passes via the Pallas kernels.
 
 On CPU (this container) the kernels execute in interpret mode; on TPU they
-compile natively. The wrapper pads d up to the tile size and m up to the
-8-sublane granule, then strips the padding — padded Y columns are zero so
-they contribute nothing to the Gram matrix (gamma entries for them are zeroed
-after the solve).
+compile natively. The wrappers pad d up to the tile size and m up to the
+8-sublane granule (histories longer than one granule — m > 8, e.g. L=10
+local epochs or carried cross-round columns — pad to the next multiple of
+8), then strip the padding: padded Y columns are zero so they contribute
+nothing to the Gram matrix, and gamma entries for them are zeroed after the
+solve.
+
+Besides the one-shot ``aa_step_flat`` (kept as the flat-vector reference
+entry point), this module exposes the two passes separately
+(``flat_gram`` / ``flat_update``) plus dtype-preserving ravel helpers, so
+the round cores can fuse the AA hot path over a *pytree*: group the leaves
+by dtype, ravel each group into one flat buffer, accumulate ONE Gram system
+across groups, solve once, and stream each group through the update kernel —
+every S/Y element is read exactly once per pass instead of the three
+HBM sweeps of the naive tree_math path.
 """
 from __future__ import annotations
 
@@ -35,6 +46,86 @@ def _pad_to(x, n, axis):
     return jnp.pad(x, widths)
 
 
+def _pad_dims(m: int, d: int, tile: int) -> tuple[int, int, int]:
+    """(tile, d_pad, m_pad): shrink the tile for small vectors, pad d to a
+    tile multiple and m to the 8-sublane granule (handles m > 8)."""
+    t = min(tile, 256) if d < tile else tile
+    d_pad = ((d + t - 1) // t) * t
+    m_pad = ((m + 7) // 8) * 8
+    return t, d_pad, m_pad
+
+
+# --------------------------------------------------------------------------
+# the two single-pass kernels on unpadded flat buffers
+# --------------------------------------------------------------------------
+
+def flat_gram(y, g, *, tile: int = DEFAULT_TILE, interpret: bool | None = None):
+    """One-pass Gram build on flat buffers: y [m,d], g [d] →
+    (YᵀY [m,m] f32, Yᵀg [m] f32). Pads internally; any m ≥ 1."""
+    if interpret is None:
+        interpret = _interpret_default()
+    m, d = y.shape
+    t, d_pad, m_pad = _pad_dims(m, d, tile)
+    yp = _pad_to(_pad_to(y, d_pad, 1), m_pad, 0)
+    gp = _pad_to(g, d_pad, 0)
+    gram, yg = gram_pallas(yp, gp, tile=t, interpret=interpret)
+    return gram[:m, :m], yg[:m]
+
+
+def flat_update(w, g, s, y, gamma, eta, beta, *, tile: int = DEFAULT_TILE,
+                interpret: bool | None = None):
+    """One-pass update on flat buffers: w⁺ = w − ηg − β(SᵀΓ − ηYᵀΓ).
+    w,g: [d]; s,y: [m,d]; gamma: [m]. Pads internally; preserves w.dtype."""
+    if interpret is None:
+        interpret = _interpret_default()
+    m, d = s.shape
+    t, d_pad, m_pad = _pad_dims(m, d, tile)
+    wp, gp = _pad_to(w, d_pad, 0), _pad_to(g, d_pad, 0)
+    sp = _pad_to(_pad_to(s, d_pad, 1), m_pad, 0)
+    yp = _pad_to(_pad_to(y, d_pad, 1), m_pad, 0)
+    gp_ = _pad_to(gamma.astype(jnp.float32), m_pad, 0)
+    out = update_pallas(wp, gp, sp, yp, gp_, eta, beta, tile=t,
+                        interpret=interpret)
+    return out[:d]
+
+
+# --------------------------------------------------------------------------
+# dtype-preserving ravel helpers (pytree ↔ per-dtype flat buffers)
+# --------------------------------------------------------------------------
+
+def dtype_leaf_groups(tree) -> list[tuple[jnp.dtype, list[int]]]:
+    """Flattened-leaf indices grouped by dtype, in first-seen leaf order.
+
+    A single-dtype model (the common case) yields exactly one group — one
+    flat buffer per round through the kernels; mixed-dtype trees get one
+    buffer per dtype, sharing a single Gram system across groups."""
+    groups: dict = {}
+    for i, leaf in enumerate(jax.tree.leaves(tree)):
+        groups.setdefault(jnp.dtype(leaf.dtype), []).append(i)
+    return list(groups.items())
+
+
+def ravel_group(leaves: list, idxs: list[int]):
+    """Concatenate the selected plain leaves into one flat [d_g] buffer."""
+    return jnp.concatenate([leaves[i].reshape(-1) for i in idxs])
+
+
+def ravel_stack_group(leaves: list, idxs: list[int]):
+    """Concatenate the selected stacked leaves ([m, ...]) into [m, d_g]."""
+    m = leaves[idxs[0]].shape[0]
+    return jnp.concatenate([leaves[i].reshape(m, -1) for i in idxs], axis=1)
+
+
+def unravel_group_into(flat, leaves: list, idxs: list[int], out: list) -> None:
+    """Scatter a flat [d_g] buffer back into ``out`` at the group's leaf
+    slots, restoring each leaf's shape and dtype (dtype-preserving)."""
+    off = 0
+    for i in idxs:
+        ref = leaves[i]
+        out[i] = flat[off:off + ref.size].reshape(ref.shape).astype(ref.dtype)
+        off += ref.size
+
+
 @partial(jax.jit, static_argnames=("eta", "beta", "tikhonov", "tile", "interpret"))
 def aa_step_flat(w, g, s, y, *, eta: float, beta: float = 1.0,
                  tikhonov: float = 1e-10, tile: int = DEFAULT_TILE,
@@ -42,18 +133,9 @@ def aa_step_flat(w, g, s, y, *, eta: float, beta: float = 1.0,
     """One AA step on flat vectors. w,g: [d]; s,y: [m,d]. Returns w⁺ [d]."""
     if interpret is None:
         interpret = _interpret_default()
-    m, d = s.shape
-    t = min(tile, 256) if d < tile else tile
-    d_pad = ((d + t - 1) // t) * t
-    m_pad = ((m + 7) // 8) * 8
-    wp, gp = _pad_to(w, d_pad, 0), _pad_to(g, d_pad, 0)
-    sp = _pad_to(_pad_to(s, d_pad, 1), m_pad, 0)
-    yp = _pad_to(_pad_to(y, d_pad, 1), m_pad, 0)
-
-    gram, yg = gram_pallas(yp, gp, tile=t, interpret=interpret)
-    # solve only over the true m columns (padded rows/cols are zero)
-    gamma_true = solve_gamma_ref(gram[:m, :m], yg[:m], tikhonov)
-    gamma = jnp.zeros((m_pad,), jnp.float32).at[:m].set(gamma_true)
-    out = update_pallas(wp, gp, sp, yp, gamma, eta, beta, tile=t,
-                        interpret=interpret)
-    return out[:d]
+    # solve only over the true m columns (padded rows/cols are zero; the
+    # padded gamma entries flat_update re-pads are zero too)
+    gram, yg = flat_gram(y, g, tile=tile, interpret=interpret)
+    gamma = solve_gamma_ref(gram, yg, tikhonov)
+    return flat_update(w, g, s, y, gamma, eta, beta, tile=tile,
+                       interpret=interpret)

@@ -235,7 +235,8 @@ _NEWTON_ALGOS = ("giant", "newton_gmres", "dane")
 
 def dryrun_fl_round(algo: str, multi_pod: bool = False,
                     num_clients: int = 64, n: int | None = None,
-                    comm_codec: str = "identity", rounds: int = 1) -> dict:
+                    comm_codec: str = "identity", rounds: int = 1,
+                    round_chunk: int = 1, aa_impl: str = "auto") -> dict:
     """Compile + execute shard_mapped FL round(s) on the production mesh.
 
     Uses a synthetic logistic-regression problem (the paper's workload) with
@@ -251,22 +252,35 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
     ``int8+noef`` on a Newton-family algo measures the schema'd stateful
     wire (diff-coded gradients): run several rounds and watch the recorded
     rel-error trace converge.
+
+    ``round_chunk > 1`` executes the rounds through the device-resident
+    engine (core/engine.py): one donated lax.scan jit per chunk, metrics
+    stacked on device, one host sync per chunk — the sharded-runtime
+    exercise of the round engine. ``aa_impl`` threads AlgoHParams.aa_impl
+    (the sharded runtime resolves it to "tree" — the fallback path).
     """
     from repro.comm import make_channel
-    from repro.core import AlgoHParams, init_state, solve_reference
+    from repro.core import AlgoHParams, init_state, run_rounds, solve_reference
     from repro.core.sharded import make_sharded_round_fn, num_client_shards
     from repro.data import make_binary_classification, partition
     from repro.models.logreg import make_logreg_problem
     from repro.utils import tree_math as tm
 
     t0 = time.time()
+    # clamp up front so the recorded round_chunk (and main()'s artifact tag)
+    # always names the chunk that actually executed
+    if round_chunk > rounds:
+        print(f"note: --round-chunk {round_chunk} clamped to --fl-rounds "
+              f"{rounds}" + (" — the per-round loop runs, NOT the engine"
+                             if rounds <= 1 else ""))
+    round_chunk = max(1, min(round_chunk, rounds))
     mesh = make_production_mesh(multi_pod=multi_pod)
     if algo in _NEWTON_ALGOS:
         n = 8192 if n is None else n
-        hp = AlgoHParams(eta=1.0, local_epochs=10)
+        hp = AlgoHParams(eta=1.0, local_epochs=10, aa_impl=aa_impl)
     else:
         n = 2048 if n is None else n
-        hp = AlgoHParams(eta=0.5, local_epochs=3)
+        hp = AlgoHParams(eta=0.5, local_epochs=3, aa_impl=aa_impl)
     X, y = make_binary_classification("synthetic_small", n=n, seed=0)
     clients = partition(X, y, num_clients=num_clients, scheme="iid")
     problem = make_logreg_problem(clients, gamma=1e-3)
@@ -274,8 +288,9 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
     # algo-aware init: ServerState.comm gets exactly the buffers the
     # algorithm's uplink schema (UPLINK_SCHEMAS) declares for this channel
     state = init_state(problem, jax.random.PRNGKey(0), hp, channel, algo)
-    round_fn = jax.jit(
-        make_sharded_round_fn(algo, problem, hp, mesh, channel=channel))
+    raw_round_fn = make_sharded_round_fn(algo, problem, hp, mesh,
+                                         channel=channel)
+    round_fn = jax.jit(raw_round_fn)
     compiled = round_fn.lower(state).compile()
     compile_s = time.time() - t0
 
@@ -285,16 +300,42 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
     wstar = solve_reference(problem, iters=50)
     wstar_norm = float(tm.tree_norm(wstar))
 
-    t0 = time.time()
-    losses, rel_errors = [], []
-    for _ in range(rounds):
-        state, metrics = round_fn(state)
-        losses.append(float(metrics.loss))
-        rel_errors.append(
-            float(tm.tree_norm(tm.tree_sub(state.params, wstar)))
-            / max(wstar_norm, 1e-30))
-    jax.block_until_ready(metrics.loss)
-    run_s = (time.time() - t0) / rounds
+    engine_compile_s = None
+    if round_chunk > 1:
+        from repro.core.engine import make_chunk_runner
+
+        # Warm the chunked executable with ONE real call on a throwaway
+        # state so run_s measures execution only. (.lower().compile() does
+        # NOT populate the jit dispatch cache on this jax — a subsequent
+        # call would recompile inside the timed region.) The warmup time is
+        # compile-dominated but includes one chunk's execution.
+        chunk = round_chunk
+        runner = make_chunk_runner(raw_round_fn, chunk, w_star=wstar)
+        warm_state = init_state(problem, jax.random.PRNGKey(0), hp, channel,
+                                algo)
+        t0 = time.time()
+        out = runner(warm_state, jnp.int32(chunk))
+        jax.block_until_ready(out[1])
+        engine_compile_s = round(time.time() - t0, 1)
+        t0 = time.time()
+        state, trace = run_rounds(raw_round_fn, state, rounds, chunk=chunk,
+                                  w_star=wstar, runner=runner)
+        losses = [float(v) for v in trace.loss]
+        rel_errors = [float(v) for v in trace.rel_error]
+        comm_bytes = float(trace.comm_bytes[-1])
+        run_s = (time.time() - t0) / max(trace.num_rounds, 1)
+    else:
+        t0 = time.time()
+        losses, rel_errors = [], []
+        for _ in range(rounds):
+            state, metrics = round_fn(state)
+            losses.append(float(metrics.loss))
+            rel_errors.append(
+                float(tm.tree_norm(tm.tree_sub(state.params, wstar)))
+                / max(wstar_norm, 1e-30))
+        jax.block_until_ready(metrics.loss)
+        comm_bytes = float(metrics.comm_bytes)
+        run_s = (time.time() - t0) / rounds
 
     cost = _cost_dict(compiled)
     return {
@@ -304,13 +345,16 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
         "client_shards": num_client_shards(mesh),
         "num_clients": num_clients,
         "channel": channel.name,
+        "round_chunk": round_chunk,
+        "aa_impl": aa_impl,
         "compile_s": round(compile_s, 1),
+        "engine_compile_s": engine_compile_s,
         "run_s": round(run_s, 2),
         "loss": losses[-1],
         "loss_curve": losses,
         "rel_error": rel_errors[-1],
         "rel_error_curve": rel_errors,
-        "comm_bytes": float(metrics.comm_bytes),
+        "comm_bytes": comm_bytes,
         "flops": float(cost.get("flops", 0.0)),
         "collectives": collective_bytes(compiled.as_text()),
     }
@@ -332,6 +376,15 @@ def main() -> None:
     ap.add_argument("--fl-rounds", type=int, default=1,
                     help="rounds to execute in the --fl-round dry-run "
                          "(>1 records a loss trace for numerics comparisons)")
+    ap.add_argument("--round-chunk", type=int, default=1,
+                    help="with --fl-round: execute the rounds through the "
+                         "device-resident engine (core/engine.py), this many "
+                         "rounds per donated lax.scan jit; 1 = per-round loop")
+    ap.add_argument("--aa-impl", choices=("auto", "tree", "pallas"),
+                    default="auto",
+                    help="with --fl-round: AlgoHParams.aa_impl (the sharded "
+                         "runtime resolves to 'tree' — exercises the "
+                         "automatic fallback)")
     args = ap.parse_args()
 
     if args.fl_round:
@@ -341,13 +394,23 @@ def main() -> None:
         failures = []
         codec_tag = ("" if args.comm_codec == "identity"
                      else f"{args.comm_codec.replace('/', '-').replace(':', '')}__")
+        engine_tag = ""  # distinct artifact names for engine/pallas runs
+        # same clamp as dryrun_fl_round: the tag names the EXECUTED chunk
+        eff_chunk = max(1, min(args.round_chunk, args.fl_rounds))
+        if eff_chunk > 1:
+            engine_tag += f"chunk{eff_chunk}"
+        if args.aa_impl != "auto":
+            engine_tag += ("+" if engine_tag else "") + args.aa_impl
+        engine_tag = f"{engine_tag}__" if engine_tag else ""
         for algo in algos:
-            tag = (f"fl_round__{algo}__{codec_tag}"
+            tag = (f"fl_round__{algo}__{codec_tag}{engine_tag}"
                    f"{'2x16x16' if args.multi_pod else '16x16'}")
             try:
                 res = dryrun_fl_round(algo, args.multi_pod,
                                       comm_codec=args.comm_codec,
-                                      rounds=args.fl_rounds)
+                                      rounds=args.fl_rounds,
+                                      round_chunk=args.round_chunk,
+                                      aa_impl=args.aa_impl)
                 with open(os.path.join(RESULTS_DIR, tag + ".json"), "w") as f:
                     json.dump(res, f, indent=1)
                 print(f"OK   {tag}: compile={res['compile_s']}s "

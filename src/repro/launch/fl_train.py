@@ -49,6 +49,18 @@ def main() -> None:
     ap.add_argument("--runtime", choices=("vmap", "sharded"), default="vmap",
                     help="'sharded' shard_maps the client fan-out over the "
                          "('pod','data') mesh axes (core/sharded.py)")
+    ap.add_argument("--round-chunk", type=int, default=0,
+                    help="compile this many rounds into ONE donated lax.scan "
+                         "jit (core/engine.py): metrics stack on device and "
+                         "the host syncs once per chunk. 0 = the per-round "
+                         "loop")
+    ap.add_argument("--aa-impl", choices=("auto", "tree", "pallas"),
+                    default="auto",
+                    help="AA-step implementation (AlgoHParams.aa_impl): "
+                         "'pallas' ravels each client's leaves into flat "
+                         "buffers and runs the fused single-pass kernels "
+                         "(kernels/anderson); 'auto' = pallas on TPU, tree "
+                         "elsewhere; the sharded runtime always uses tree")
     ap.add_argument("--multi-pod", action="store_true",
                     help="with --runtime sharded: use the 2x16x16 two-pod "
                          "mesh instead of the single-pod 16x16 (requires "
@@ -71,8 +83,10 @@ def main() -> None:
     from repro.core.anderson import AAConfig
     hp = AlgoHParams(eta=args.eta, local_epochs=args.local_epochs,
                      participation=args.participation,
-                     aa=AAConfig(damping=args.damping, tikhonov=1e-8))
+                     aa=AAConfig(damping=args.damping, tikhonov=1e-8),
+                     aa_impl=args.aa_impl)
     channel = make_channel(args.comm_codec)
+    chunk = args.round_chunk if args.round_chunk > 0 else None
 
     mesh = None
     if args.runtime == "sharded":
@@ -96,7 +110,8 @@ def main() -> None:
     for algo in algos:
         t0 = time.time()
         h = run_federated(problem, algo, hp, args.rounds,
-                          runtime=args.runtime, mesh=mesh, channel=channel)
+                          runtime=args.runtime, mesh=mesh, channel=channel,
+                          chunk=chunk)
         results[algo] = {
             "loss_curve": [float(v) for v in h.loss],
             "grad_norm_curve": [float(v) for v in h.grad_norm],

@@ -9,6 +9,7 @@ try:
 except ImportError:  # property tests skip; the rest of the module runs
     from _hypothesis_stub import given, settings, strategies as st
 
+from repro.core import AlgoHParams
 from repro.kernels.anderson.ops import aa_step_flat
 from repro.kernels.anderson.ref import aa_step_ref, gram_ref, update_ref
 from repro.kernels.anderson.anderson import gram_pallas, update_pallas
@@ -98,6 +99,165 @@ class TestAndersonKernel:
         np.testing.assert_allclose(
             np.asarray(out_kernel), np.asarray(out_core), rtol=2e-3, atol=2e-4
         )
+
+    @pytest.mark.parametrize("m", [9, 10, 16, 21])
+    def test_flat_passes_m_beyond_one_granule(self, m):
+        """m > 8 histories (L>8 local epochs, carried cross-round columns):
+        the wrappers pad m to the next 8-sublane granule and the padded
+        columns must contribute nothing."""
+        from repro.kernels.anderson.ops import flat_gram, flat_update
+        from repro.kernels.anderson.ref import gram_ref, update_ref
+        rng = np.random.default_rng(m)
+        d = 1000
+        y = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+        g = jnp.asarray(rng.standard_normal(d), jnp.float32)
+        gram, yg = flat_gram(y, g, interpret=True)
+        gram_r, yg_r = gram_ref(y, g)
+        assert gram.shape == (m, m) and yg.shape == (m,)
+        np.testing.assert_allclose(np.asarray(gram), np.asarray(gram_r),
+                                   rtol=1e-4, atol=1e-2)
+        np.testing.assert_allclose(np.asarray(yg), np.asarray(yg_r),
+                                   rtol=1e-4, atol=1e-2)
+        w = jnp.asarray(rng.standard_normal(d), jnp.float32)
+        s = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+        gamma = jnp.asarray(rng.standard_normal(m), jnp.float32)
+        out = flat_update(w, g, s, y, gamma, 0.3, 0.9, interpret=True)
+        ref = update_ref(w, g, s, y, gamma, 0.3, 0.9)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_dtype_ravel_helpers_roundtrip(self):
+        """The dtype-preserving ravel helpers: grouped ravel → unravel is the
+        identity, dtypes and shapes preserved, mixed-dtype trees split into
+        per-dtype groups."""
+        from repro.kernels.anderson.ops import (
+            dtype_leaf_groups,
+            ravel_group,
+            ravel_stack_group,
+            unravel_group_into,
+        )
+        rng = np.random.default_rng(0)
+        tree = {
+            "a": jnp.asarray(rng.standard_normal((3, 4)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal(7), jnp.bfloat16),
+            "c": jnp.asarray(rng.standard_normal((2, 2)), jnp.float32),
+        }
+        leaves = jax.tree.leaves(tree)
+        groups = dtype_leaf_groups(tree)
+        assert len(groups) == 2
+        assert sorted(i for _, idxs in groups for i in idxs) == [0, 1, 2]
+        out = list(leaves)
+        for _, idxs in groups:
+            flat = ravel_group(leaves, idxs)
+            assert flat.ndim == 1
+            unravel_group_into(flat, leaves, idxs, out)
+        for orig, rt in zip(leaves, out):
+            assert orig.dtype == rt.dtype and orig.shape == rt.shape
+            np.testing.assert_allclose(
+                np.asarray(orig, np.float32), np.asarray(rt, np.float32))
+        # stacked variant keeps the leading history axis
+        stack = jax.tree.map(lambda x: jnp.stack([x, x + 1]), tree)
+        sleaves = jax.tree.leaves(stack)
+        for _, idxs in groups:
+            flat = ravel_stack_group(sleaves, idxs)
+            assert flat.shape[0] == 2
+
+
+class TestAndersonRoundParity:
+    """Round-level parity of aa_impl="pallas" vs "tree" (interpret mode on
+    CPU): the fused kernels wired into the FULL round core — vmapped clients,
+    comm channel, metrics — must reproduce the tree path. Both paths share
+    the _solve_gram eigh solve; the only difference is the accumulation
+    order of the one-pass tiled Gram/update, so parity is tight."""
+
+    @pytest.fixture(scope="class")
+    def prob(self):
+        from repro.data import make_binary_classification, partition
+        from repro.models.logreg import make_logreg_problem
+        X, y = make_binary_classification("synthetic_small", n=200, seed=0)
+        clients = partition(X, y, num_clients=4, scheme="iid")
+        return make_logreg_problem(clients, gamma=1e-3)
+
+    def _roundwise(self, prob, algo, hp, rounds=3, channel=None):
+        import dataclasses
+        from repro.core import init_state, make_round_fn
+        ft = jax.jit(make_round_fn(
+            algo, prob, dataclasses.replace(hp, aa_impl="tree"), channel))
+        fp = jax.jit(make_round_fn(
+            algo, prob, dataclasses.replace(hp, aa_impl="pallas"), channel))
+        state = init_state(prob, jax.random.PRNGKey(0), hp, channel, algo)
+        for t in range(rounds):
+            st, mt = ft(state)
+            sp, mp = fp(state)
+            for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(sp)):
+                np.testing.assert_allclose(
+                    np.asarray(a, np.float32), np.asarray(b, np.float32),
+                    rtol=1e-5, atol=1e-6,
+                    err_msg=f"{algo} round {t} state")
+            np.testing.assert_allclose(float(mt.loss), float(mp.loss),
+                                       rtol=1e-6)
+            np.testing.assert_allclose(float(mt.theta_mean),
+                                       float(mp.theta_mean), rtol=1e-4)
+            state = st
+
+    @pytest.mark.parametrize("algo", ["fedosaa_svrg", "fedosaa_scaffold"])
+    def test_round_parity(self, prob, algo):
+        self._roundwise(prob, algo,
+                        AlgoHParams(eta=0.5, local_epochs=3))
+
+    @pytest.mark.parametrize("algo", ["fedosaa_svrg", "fedosaa_scaffold"])
+    def test_round_parity_l_gt_8(self, prob, algo):
+        """L > 8 local epochs: the per-client history exceeds one 8-sublane
+        granule, exercising the padded-m kernel path inside the round."""
+        self._roundwise(prob, algo,
+                        AlgoHParams(eta=0.5, local_epochs=10), rounds=2)
+
+    def test_round_parity_carry_history(self, prob):
+        """carry_history columns prepend to the per-round history (m = H+L),
+        and the carried columns themselves must round-trip identically."""
+        from repro.core.anderson import AAConfig
+        hp = AlgoHParams(eta=0.5, local_epochs=3, carry_history=2,
+                         aa=AAConfig(tikhonov=1e-6, damping=0.7))
+        self._roundwise(prob, "fedosaa_svrg", hp, rounds=3)
+
+    def test_round_parity_with_codec(self, prob):
+        """The fused path composes with the wire channel (per-client int8
+        encode/decode happens before the AA step's ravel)."""
+        self._roundwise(prob, "fedosaa_svrg",
+                        AlgoHParams(eta=0.5, local_epochs=3), rounds=2,
+                        channel="int8")
+
+    def test_sharded_runtime_falls_back_to_tree(self, prob):
+        """aa_impl="pallas" under the sharded runtime: automatic fallback to
+        the tree path, no error, numerics identical to an explicit "tree"."""
+        import dataclasses
+        from repro.core import init_state
+        from repro.core.sharded import make_sharded_round_fn
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+        hp = AlgoHParams(eta=0.5, local_epochs=3, aa_impl="pallas")
+        fs = jax.jit(make_sharded_round_fn("fedosaa_svrg", prob, hp, mesh))
+        ftree = jax.jit(make_sharded_round_fn(
+            "fedosaa_svrg", prob,
+            dataclasses.replace(hp, aa_impl="tree"), mesh))
+        state = init_state(prob, jax.random.PRNGKey(0), hp, None,
+                           "fedosaa_svrg")
+        sa, ma = fs(state)
+        sb, mb = ftree(state)
+        for a, b in zip(jax.tree.leaves(sa.params), jax.tree.leaves(sb.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.isfinite(float(ma.loss))
+
+    def test_auto_resolution(self):
+        from repro.core import resolve_aa_impl
+        assert resolve_aa_impl("tree") == "tree"
+        assert resolve_aa_impl("pallas") == "pallas"
+        assert resolve_aa_impl("pallas", "sharded") == "tree"
+        assert resolve_aa_impl("auto", "sharded") == "tree"
+        expected = "pallas" if jax.default_backend() == "tpu" else "tree"
+        assert resolve_aa_impl("auto") == expected
+        with pytest.raises(ValueError, match="aa_impl"):
+            resolve_aa_impl("fused")
 
 
 # ---------------------------------------------------------------------------
