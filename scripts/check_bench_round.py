@@ -35,25 +35,52 @@ for row in b["rows"]:
     if not (row["engine_s_per_round"] > 0 and row["seed_loop_s_per_round"] > 0):
         fail(f"non-positive timing in row {row['algo']}/{row['runtime']}/"
              f"{row['channel']}")
+    if row.get("local_impl") not in ("tree", "pallas"):
+        fail(f"row {row['algo']}/{row['runtime']}/{row['channel']} missing "
+             f"the local_impl axis (got {row.get('local_impl')!r})")
 if "engine_speedup_vs_seed_loop" not in b.get("headline", {}):
     fail("headline missing engine_speedup_vs_seed_loop")
 if "max_abs_param_diff_vs_tree" not in b.get("aa_impl_pallas", {}):
     fail("aa_impl_pallas row missing max_abs_param_diff_vs_tree")
+if "trajectory_max_abs_diff_vs_tree" not in b.get("local_impl_pallas", {}):
+    fail("local_impl_pallas row missing trajectory_max_abs_diff_vs_tree")
 if require_full:
     if b["smoke"]:
         fail("holds SMOKE data — the committed trajectory must be the full "
              "grid (regenerate with: python -m benchmarks.bench_round)")
     # the full grid's cell set (keep in sync with benchmarks/bench_round.py
-    # ALGOS × RUNTIMES × CHANNELS — not imported: that module pins XLA flags
-    # and initializes jax, far too heavy for this checker)
-    expected = {(a, r, c)
-                for a in ("fedosaa_svrg", "fedosaa_scaffold", "giant")
-                for r in ("vmap", "sharded")
-                for c in ("identity", "int8")}
-    got = {(row["algo"], row["runtime"], row["channel"]) for row in b["rows"]}
+    # ALGOS × RUNTIMES × CHANNELS × _local_impls — not imported: that module
+    # pins XLA flags and initializes jax, far too heavy for this checker).
+    # The fused local_impl axis exists on eligible vmap cells only (the
+    # Newton family and the sharded runtime have no fused path).
+    fused_algos = ("fedosaa_svrg", "fedosaa_scaffold")
+    expected = set()
+    for a in ("fedosaa_svrg", "fedosaa_scaffold", "giant"):
+        for r in ("vmap", "sharded"):
+            for c in ("identity", "int8"):
+                impls = (("tree", "pallas")
+                         if r == "vmap" and a in fused_algos else ("tree",))
+                for li in impls:
+                    expected.add((a, r, c, li))
+    got = {(row["algo"], row["runtime"], row["channel"], row["local_impl"])
+           for row in b["rows"]}
     if got != expected:
         fail(f"not the full grid: missing {sorted(expected - got)}, "
              f"unexpected {sorted(got - expected)}")
+    # the fused trajectory must WIN on every eligible vmap cell (engine
+    # mode, the hot path) — this is the PR's acceptance bar
+    by_cell = {(row["algo"], row["runtime"], row["channel"],
+                row["local_impl"]): row for row in b["rows"]}
+    for a in fused_algos:
+        for c in ("identity", "int8"):
+            t = by_cell[(a, "vmap", c, "tree")]["engine_s_per_round"]
+            p = by_cell[(a, "vmap", c, "pallas")]["engine_s_per_round"]
+            if not p < t:
+                fail(f"fused local path does not beat tree on {a}/vmap/{c}: "
+                     f"{p*1e3:.2f} vs {t*1e3:.2f} ms/round")
+    if not b["headline"]["engine_speedup_vs_seed_loop"] > 2.0:
+        fail("headline engine+pallas speedup vs the seed loop must exceed "
+             f"2.0x (got {b['headline']['engine_speedup_vs_seed_loop']:.2f}x)")
 print(f"ci: {path} well-formed "
       f"(headline {b['headline']['engine_speedup_vs_seed_loop']:.2f}x"
       f"{', full grid' if require_full else ''})")

@@ -25,11 +25,26 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q --durations=25
 # until the full benchmark run.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.ext_compression --smoke
 
-# Round-engine smoke: the chunked/donated engine and the fused-AA path run
+# Fused local-trajectory kernels: the interpret-mode kernel↔oracle parity
+# suite (bit-exact on granule shapes) runs inside tier-1 above; re-select it
+# here by name so a kernel regression is called out as such in the CI log,
+# not buried in the full-suite dots.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    tests/test_local_update.py -k "KernelParity or MaskedRow"
+
+# Round-engine smoke: the chunked/donated engine, the fused-AA path and the
+# fused local_impl rows (tree vs pallas on the eligible vmap cells) run
 # end-to-end, emitting a scratch artifact (benchmarks/results/
 # BENCH_round_smoke.json — smoke never clobbers the committed trajectory).
 # The gate validates the fresh emission AND that the committed repo-root
-# BENCH_round.json is still the well-formed FULL grid.
+# BENCH_round.json is still the well-formed FULL grid (which includes the
+# fused-beats-tree and headline >2x acceptance bars).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_round --smoke
 python scripts/check_bench_round.py benchmarks/results/BENCH_round_smoke.json
 python scripts/check_bench_round.py BENCH_round.json --require-full
+
+# XLA:CPU thunk-runtime loop-body repro (ROADMAP item): records the
+# scan-body penalty of the default runtime vs the legacy one — the artifact
+# to attach upstream and to re-check on jaxlib upgrades. Not gated on a
+# threshold (jaxlib-version dependent).
+python scripts/repro_thunk_runtime.py --smoke

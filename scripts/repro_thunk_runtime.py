@@ -1,0 +1,164 @@
+"""Minimal standalone repro of the XLA:CPU thunk-runtime loop-body slowdown.
+
+PR 4's round benchmark found that under XLA:CPU's default *thunk runtime*
+the SAME jitted body costs ~1.6x more inside a ``lax.scan`` than dispatched
+as a standalone jit (and in-loop collectives degrade ~10x) — enough to
+invert the chunked round engine's win, which is why
+``benchmarks/bench_round.py`` pins ``--xla_cpu_use_thunk_runtime=false``.
+This script is the upstream-reportable repro the ROADMAP asks for: no repro
+internals, just a small chain of matmul/elementwise ops (sized like the
+quick-covtype round body) timed
+
+  standalone — one jit of the body, called N times (device-synced each call)
+  scan       — one jit of ``lax.scan`` over the same body, N iterations
+
+under BOTH runtime settings (each in a fresh subprocess — the flag is read
+once at backend init). The regression is the ``thunk_scan_penalty_vs_legacy``
+ratio: the SAME compiled scan body per-iteration cost, thunk vs legacy
+(~1.2x on this container's einsum body; the real round body shows ~1.6x in
+bench_round); scan_over_standalone per setting is recorded too.
+
+  python scripts/repro_thunk_runtime.py            # full (N=100)
+  python scripts/repro_thunk_runtime.py --smoke    # CI-sized (N=20)
+
+Writes benchmarks/results/thunk_runtime_repro.json and exits non-zero only
+on execution errors — the ratio is recorded, not gated (it is jaxlib-
+version dependent; retest on upgrades).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+#: committed artifact (full run); --smoke writes to the gitignored scratch
+#: path so CI never clobbers the recorded full-size measurement
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "results", "thunk_runtime_repro.json")
+SMOKE_PATH = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                          "results", "thunk_runtime_repro_smoke.json")
+
+
+def child(n_iters: int) -> None:
+    """Runs in a subprocess with XLA_FLAGS already set; prints one JSON."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    # ~quick-covtype round-body scale (a few ms/iter, so per-call dispatch
+    # overhead is NOT what is measured): L inner corrected-GD steps over a
+    # [K, n, d] batch, like one FL round's local trajectories
+    K, n, d, L = 10, 2000, 96, 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (K, n, d))
+    w0 = jax.random.normal(jax.random.PRNGKey(1), (K, d))
+
+    def body(w):
+        def gd(w, _):
+            z = jnp.einsum("knd,kd->kn", x, w)
+            c = jax.nn.sigmoid(z) - 0.5
+            g = jnp.einsum("kn,knd->kd", c, x) / n
+            return w - 0.5 * (g + 1e-3 * w), None
+        return jax.lax.scan(gd, w, None, length=L)[0]
+
+    jit_body = jax.jit(body)
+
+    def scanned(w):
+        return jax.lax.scan(lambda c, _: (body(c), None), w, None,
+                            length=n_iters)[0]
+
+    jit_scan = jax.jit(scanned)
+
+    jax.block_until_ready(jit_body(w0))       # compile
+    jax.block_until_ready(jit_scan(w0))
+
+    def time_standalone():
+        t0 = time.perf_counter()
+        w = w0
+        for _ in range(n_iters):
+            w = jit_body(w)
+        jax.block_until_ready(w)
+        return (time.perf_counter() - t0) / n_iters
+
+    def time_scan():
+        t0 = time.perf_counter()
+        jax.block_until_ready(jit_scan(w0))
+        return (time.perf_counter() - t0) / n_iters
+
+    # interleaved min-of-reps, as in benchmarks/bench_round.py — this
+    # shared container's noisy-neighbor spikes exceed the effect size, and
+    # interleaving means a spike hits both modes, not just one
+    reps = 5
+    standalone_t, scan_t = [], []
+    for _ in range(reps):
+        standalone_t.append(time_standalone())
+        scan_t.append(time_scan())
+    standalone, scan = min(standalone_t), min(scan_t)
+    print(json.dumps({
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "n_iters": n_iters,
+        "reps_min_taken": reps,
+        "standalone_s_per_iter": standalone,
+        "scan_s_per_iter": scan,
+        "scan_over_standalone": scan / standalone,
+    }))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    n_iters = 20 if args.smoke else 100
+
+    if args.child:
+        child(n_iters)
+        return
+
+    results = {}
+    for thunk in (True, False):
+        env = dict(os.environ)
+        # scrub any conflicting pre-set flag (bench_round users often pin
+        # one in their shell) and append ours LAST — the last occurrence
+        # wins in XLA, so a prepended flag would be silently overridden and
+        # both children would measure the same runtime
+        inherited = [t for t in env.get("XLA_FLAGS", "").split()
+                     if not t.startswith("--xla_cpu_use_thunk_runtime")]
+        env["XLA_FLAGS"] = " ".join(
+            inherited + [f"--xla_cpu_use_thunk_runtime={str(thunk).lower()}"])
+        out = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--child"]
+            + (["--smoke"] if args.smoke else []),
+            env=env, capture_output=True, text=True, check=True)
+        results["thunk_runtime" if thunk else "legacy_runtime"] = json.loads(
+            out.stdout.strip().splitlines()[-1])
+
+    ratio_thunk = results["thunk_runtime"]["scan_over_standalone"]
+    ratio_legacy = results["legacy_runtime"]["scan_over_standalone"]
+    summary = {
+        "repro": "xla_cpu_thunk_runtime_scan_slowdown",
+        "body": "K=10,n=2000,d=96 x L=8 sigmoid-GD steps (round-body scale)",
+        "results": results,
+        "thunk_scan_penalty_vs_legacy":
+            results["thunk_runtime"]["scan_s_per_iter"]
+            / results["legacy_runtime"]["scan_s_per_iter"],
+        "note": "thunk_scan_penalty_vs_legacy >> 1 is the regression (the "
+                "same compiled loop body, slower runtime); bench_round.py "
+                "pins the legacy runtime.",
+    }
+    summary["smoke"] = args.smoke
+    path = SMOKE_PATH if args.smoke else OUT_PATH
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"thunk runtime: scan/standalone = {ratio_thunk:.2f}; "
+          f"legacy runtime: {ratio_legacy:.2f}; thunk-vs-legacy scan "
+          f"penalty = {summary['thunk_scan_penalty_vs_legacy']:.2f} "
+          f"({path})")
+
+
+if __name__ == "__main__":
+    main()

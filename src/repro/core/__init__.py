@@ -16,6 +16,8 @@ from repro.core.engine import (  # noqa: F401
 from repro.core.algorithms import (  # noqa: F401
     ALGORITHMS,
     COMM_TABLE,
+    LOCAL_IMPLS,
+    TRAJECTORY_ALGOS,
     UPLINK_SCHEMAS,
     AlgoHParams,
     CommCost,
@@ -23,9 +25,11 @@ from repro.core.algorithms import (  # noqa: F401
     ServerState,
     comm_bytes_per_round,
     comm_floats_per_round,
+    fused_local_eligible,
     init_comm_state,
     init_state,
     make_round_fn,
+    resolve_local_impl,
 )
 from repro.comm.schema import UplinkSpec  # noqa: F401
 from repro.comm import CommChannel, make_channel  # noqa: F401
@@ -33,8 +37,10 @@ from repro.core.sharded import make_sharded_round_fn  # noqa: F401
 from repro.core.problem import (  # noqa: F401
     ClientBatch,
     FLProblem,
+    LinearDesign,
     StackedClients,
     sample_minibatch,
+    sample_minibatch_indices,
     stack_client_arrays,
 )
 from repro.core.server import History, run_federated, solve_reference  # noqa: F401

@@ -56,7 +56,12 @@ from repro.core.anderson import (
     resolve_aa_impl,
     trajectory_to_sy,
 )
-from repro.core.problem import ClientBatch, FLProblem, sample_minibatch
+from repro.core.problem import (
+    ClientBatch,
+    FLProblem,
+    sample_minibatch,
+    sample_minibatch_indices,
+)
 from repro.utils import tree_math as tm
 
 Pytree = Any
@@ -188,6 +193,16 @@ class AlgoHParams:
                                 # runtime only), "auto" (pallas on TPU).
                                 # The sharded runtime always falls back to
                                 # "tree" (see core/anderson.resolve_aa_impl).
+    local_impl: str = "auto"    # local-trajectory implementation: "tree"
+                                # (autodiff residuals — 2 loss autodiffs =
+                                # 4 design-matrix sweeps per local step),
+                                # "pallas" (fused dual-gradient kernels,
+                                # kernels/local_update — ONE X sweep per
+                                # step, at best fully VMEM-resident; only
+                                # for linear-design models, see
+                                # resolve_local_impl), "auto" (pallas on
+                                # TPU where eligible). The sharded runtime
+                                # always falls back to "tree", like aa_impl.
 
 
 class ServerState(NamedTuple):
@@ -265,36 +280,150 @@ def init_comm_state(channel: CommChannel, params: Pytree, K: int,
 # local trajectories
 # --------------------------------------------------------------------------
 
+#: legal values of the local-trajectory implementation knob
+#: (AlgoHParams.local_impl)
+LOCAL_IMPLS = ("auto", "tree", "pallas")
+
+#: private, benchmark-only value: the SEED driver's trajectory form
+#: (pre-PR5 L-step scan + standalone r_L dispatch + per-leaf concatenate
+#: epilogue). bench_round.py's seed_loop mode replays it so the committed
+#: "vs seed" timings stay comparable across PRs; bit-identical VALUES to
+#: the folded scan, deliberately not in LOCAL_IMPLS.
+LOCAL_IMPL_SEED = "tree_seed"
+
+#: algorithms whose local work is the L-step corrected-GD trajectory — the
+#: only ones the fused kernels apply to (the Newton family runs CG/GMRES
+#: matvecs, not a trajectory)
+TRAJECTORY_ALGOS = ("fedavg", "fedsvrg", "scaffold", "fedosaa_svrg",
+                    "fedosaa_scaffold", "fedosaa_avg", "lbfgs")
+
+
+def fused_local_eligible(problem: FLProblem, algo: str | None = None,
+                         params: Pytree | None = None) -> bool:
+    """Can ``algo`` on ``problem`` run the fused local-trajectory kernels?
+
+    Requires the model to declare the linear-design protocol
+    (FLProblem.linear_design — logreg/linreg do, MLP/decoder do not), the
+    params pytree to BE a single flat [d] array (not merely contain one —
+    the fused path returns [steps, d] arrays in the params' structure), and
+    a trajectory-based algorithm. Everything else keeps the autodiff path.
+    """
+    if problem.linear_design is None:
+        return False
+    if algo is not None and algo not in TRAJECTORY_ALGOS:
+        return False
+    if params is None:
+        params = problem.init(jax.random.PRNGKey(0))
+    return isinstance(params, jax.Array) and params.ndim == 1
+
+
+def resolve_local_impl(impl: str, runtime: str = "vmap",
+                       problem: FLProblem | None = None,
+                       algo: str | None = None,
+                       params: Pytree | None = None) -> str:
+    """Resolve the ``local_impl`` knob to a concrete "tree"/"pallas".
+
+    Mirrors core/anderson.resolve_aa_impl: "auto" picks the fused path
+    where the kernels compile natively (TPU) and the autodiff path
+    elsewhere; the sharded runtime ALWAYS resolves to "tree" (client data
+    shards stay put; the fused ravel assumes whole per-client designs), and
+    an ineligible problem/algorithm (see fused_local_eligible) falls back
+    to "tree" without error, as documented — so MLP/decoder and the Newton
+    family simply keep autodiff even under an explicit "pallas".
+    """
+    if impl not in LOCAL_IMPLS + (LOCAL_IMPL_SEED,):
+        raise ValueError(f"unknown local_impl {impl!r}; choose from {LOCAL_IMPLS}")
+    if impl == LOCAL_IMPL_SEED:   # benchmark-only seed replay, any runtime
+        return impl
+    if runtime == "sharded" or impl == "tree":
+        return "tree"
+    if problem is not None and not fused_local_eligible(problem, algo, params):
+        return "tree"
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "tree"
+    return impl
+
+
 def _local_trajectory(
-    problem: FLProblem,
     hp: AlgoHParams,
     w0: Pytree,
-    batch: ClientBatch,
     residual_fn: Callable[[Pytree, jax.Array], Pytree],
     rng: jax.Array,
 ):
     """Run L corrected-GD steps from w0 and return the full trajectory.
 
     Returns (w_traj, r_traj) with leading axis L+1 — FedOSAA evaluates L+1
-    gradients (Alg. 1 needs r_L for the last Y column).
+    gradients (Alg. 1 needs r_L for the last Y column). One scan over L+1
+    step keys emits every (w_ℓ, r_ℓ) pair directly: the final residual is
+    just the last scan iteration (its unused w_{L+1} is a single axpy), so
+    there is no per-leaf concatenate epilogue and no standalone r_L
+    dispatch in either runtime.
     """
-    L = hp.local_epochs
-    rngs = jax.random.split(rng, L + 1)
+    rngs = jax.random.split(rng, hp.local_epochs + 1)
 
     def step(w, step_rng):
         r = residual_fn(w, step_rng)
-        w_next = tm.tree_axpy(-hp.eta, r, w)
-        return w_next, (w, r)
+        return tm.tree_axpy(-hp.eta, r, w), (w, r)
 
-    w_L, (w_hist, r_hist) = jax.lax.scan(step, w0, rngs[:L])
-    r_L = residual_fn(w_L, rngs[L])
-    w_traj = jax.tree.map(
-        lambda h, last: jnp.concatenate([h, last[None]], axis=0), w_hist, w_L
-    )
-    r_traj = jax.tree.map(
-        lambda h, last: jnp.concatenate([h, last[None]], axis=0), r_hist, r_L
-    )
+    if hp.local_impl == LOCAL_IMPL_SEED:
+        # the seed form, replayed for bench_round's baseline: scan stops at
+        # L, r_L dispatches standalone, the history is concatenated per leaf
+        L = hp.local_epochs
+        w_L, (w_hist, r_hist) = jax.lax.scan(step, w0, rngs[:L])
+        r_L = residual_fn(w_L, rngs[L])
+        w_traj = jax.tree.map(
+            lambda h, last: jnp.concatenate([h, last[None]], axis=0),
+            w_hist, w_L)
+        r_traj = jax.tree.map(
+            lambda h, last: jnp.concatenate([h, last[None]], axis=0),
+            r_hist, r_L)
+        return w_traj, r_traj
+
+    _, (w_traj, r_traj) = jax.lax.scan(step, w0, rngs)
     return w_traj, r_traj
+
+
+def _fused_trajectory(
+    problem: FLProblem,
+    hp: AlgoHParams,
+    w0: Pytree,
+    batch: ClientBatch,
+    anchor_scale: float,
+    corr: Pytree | None,
+    rng: jax.Array,
+):
+    """The fused linear-design twin of _local_trajectory
+    (kernels/local_update): both residual gradients of every local step ride
+    ONE design-matrix sweep, with the L-step loop VMEM-resident when the
+    client's block fits.
+
+    The residual family is r(w;ζ) = ∇f_k(w;ζ) − a·∇f_k(w^t;ζ) + corr, which
+    in linear-design form collapses to Xᵀ(c(Xw) − a·c(Xw^t))/n + reg·w + u
+    with u = corr − a·reg·w^t:  a=1/corr=∇f(w^t) is the SVRG family,
+    a=0/corr=c−c_k is SCAFFOLD, a=0/corr=None is FedAvg. Minibatch mode
+    draws the bit-identical per-step row gathers the autodiff path draws
+    (sample_minibatch_indices) and evaluates live and anchor on the same
+    rows, exactly like _make_residual_fn.
+    """
+    from repro.kernels.local_update import fused_trajectory
+
+    design = problem.linear_design(batch)
+    steps = hp.local_epochs + 1
+    if hp.batch_size is None:
+        x, y, mask = design.x[None], design.y[None], batch.mask[None]
+    else:
+        rngs = jax.random.split(rng, steps)
+        idx = jax.vmap(
+            lambda r: sample_minibatch_indices(batch.mask, r, hp.batch_size)
+        )(rngs)
+        x, y = design.x[idx], design.y[idx]
+        mask = jnp.ones(idx.shape, batch.mask.dtype)
+    u = tm.tree_zeros_like(w0) if corr is None else corr
+    if anchor_scale:
+        u = u - design.reg * w0
+    return fused_trajectory(
+        x, y, mask, w0, u, link=design.link, reg=design.reg, eta=hp.eta,
+        anchor_scale=anchor_scale, steps=steps)
 
 
 def _make_residual_fn(
@@ -326,16 +455,24 @@ def _make_residual_fn(
 # per-client updates (to be vmapped over the stacked client axis)
 # --------------------------------------------------------------------------
 
-def _client_svrg(problem, hp, use_aa, w_t, g_global, x, y, mask, rng,
-                 hist_s=None, hist_y=None):
-    batch = ClientBatch(x, y, mask)
+def _svrg_trajectory(problem, hp, w_t, g_global, batch, rng):
+    """SVRG-corrected trajectory: fused dual-gradient kernels when resolved,
+    else the two-autodiff residual path."""
+    if hp.local_impl == "pallas":
+        return _fused_trajectory(problem, hp, w_t, batch, 1.0, g_global, rng)
 
     def svrg_correction(mb):
         # −∇f_k(w^t; ζ) + ∇f(w^t): the SAME minibatch ζ as the live gradient.
         return tm.tree_sub(g_global, problem.grad(w_t, mb))
 
     residual_fn = _make_residual_fn(problem, hp, batch, svrg_correction)
-    w_traj, r_traj = _local_trajectory(problem, hp, w_t, batch, residual_fn, rng)
+    return _local_trajectory(hp, w_t, residual_fn, rng)
+
+
+def _client_svrg(problem, hp, use_aa, w_t, g_global, x, y, mask, rng,
+                 hist_s=None, hist_y=None):
+    batch = ClientBatch(x, y, mask)
+    w_traj, r_traj = _svrg_trajectory(problem, hp, w_t, g_global, batch, rng)
     nan_st = AAStats(jnp.nan, jnp.nan, jnp.nan, jnp.array(0))
     if not use_aa:
         w_k = jax.tree.map(lambda t: t[-1], w_traj)
@@ -361,8 +498,12 @@ def _client_svrg(problem, hp, use_aa, w_t, g_global, x, y, mask, rng,
 def _client_scaffold(problem, hp, use_aa, w_t, c, x, y, mask, c_k, rng):
     batch = ClientBatch(x, y, mask)
     correction = tm.tree_sub(c, c_k)
-    residual_fn = _make_residual_fn(problem, hp, batch, correction)
-    w_traj, r_traj = _local_trajectory(problem, hp, w_t, batch, residual_fn, rng)
+    if hp.local_impl == "pallas":
+        w_traj, r_traj = _fused_trajectory(problem, hp, w_t, batch, 0.0,
+                                           correction, rng)
+    else:
+        residual_fn = _make_residual_fn(problem, hp, batch, correction)
+        w_traj, r_traj = _local_trajectory(hp, w_t, residual_fn, rng)
     if use_aa:
         s, y_stack = trajectory_to_sy(w_traj, r_traj, hp.aa.residual_ema)
         w_k, stats = multisecant_update(w_t, c, s, y_stack, hp.eta, hp.aa,
@@ -376,8 +517,12 @@ def _client_scaffold(problem, hp, use_aa, w_t, c, x, y, mask, c_k, rng):
 
 def _client_avg(problem, hp, use_aa, w_t, x, y, mask, rng):
     batch = ClientBatch(x, y, mask)
-    residual_fn = _make_residual_fn(problem, hp, batch, None)
-    w_traj, r_traj = _local_trajectory(problem, hp, w_t, batch, residual_fn, rng)
+    if hp.local_impl == "pallas":
+        w_traj, r_traj = _fused_trajectory(problem, hp, w_t, batch, 0.0,
+                                           None, rng)
+    else:
+        residual_fn = _make_residual_fn(problem, hp, batch, None)
+        w_traj, r_traj = _local_trajectory(hp, w_t, residual_fn, rng)
     if not use_aa:
         w_k = jax.tree.map(lambda t: t[-1], w_traj)
         return w_k, AAStats(jnp.nan, jnp.nan, jnp.nan, jnp.array(0))
@@ -391,12 +536,7 @@ def _client_avg(problem, hp, use_aa, w_t, x, y, mask, rng):
 
 def _client_lbfgs(problem, hp, w_t, g_global, x, y, mask, rng):
     batch = ClientBatch(x, y, mask)
-
-    def svrg_correction(mb):
-        return tm.tree_sub(g_global, problem.grad(w_t, mb))
-
-    residual_fn = _make_residual_fn(problem, hp, batch, svrg_correction)
-    w_traj, r_traj = _local_trajectory(problem, hp, w_t, batch, residual_fn, rng)
+    w_traj, r_traj = _svrg_trajectory(problem, hp, w_t, g_global, batch, rng)
     s, y_stack = trajectory_to_sy(w_traj, r_traj)
     direction = lbfgs_two_loop(g_global, s, y_stack, hp.eta)
     w_k = tm.tree_sub(w_t, direction)
@@ -817,11 +957,14 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
     """
     if algo not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algo!r}; choose from {ALGORITHMS}")
-    # resolve the AA implementation once for this runtime, so the client
-    # bodies see a concrete "tree"/"pallas" (never "auto")
-    hp = dataclasses.replace(hp, aa_impl=resolve_aa_impl(hp.aa_impl, "vmap"))
-    channel = make_channel(channel)
+    # resolve the AA and local-trajectory implementations once for this
+    # runtime, so the client bodies see a concrete "tree"/"pallas" (never
+    # "auto") and ineligible problems/algos fall back before tracing
     p0 = problem.init(jax.random.PRNGKey(0))
+    hp = dataclasses.replace(
+        hp, aa_impl=resolve_aa_impl(hp.aa_impl, "vmap"),
+        local_impl=resolve_local_impl(hp.local_impl, "vmap", problem, algo, p0))
+    channel = make_channel(channel)
     comm_bytes = comm_bytes_per_round(algo, p0, channel, hp.line_search)
     C = problem.clients
     R = CrossClientReduce(channel)

@@ -30,6 +30,28 @@ class ClientBatch(NamedTuple):
     mask: jax.Array
 
 
+class LinearDesign(NamedTuple):
+    """A batch's loss declared in canonical linear-design form.
+
+    The model asserts that its per-sample loss is ``link_loss(x_jᵀw, y_j)``
+    plus ``reg/2·‖w‖²``, mask-mean-reduced — which is what makes the fused
+    local-trajectory kernels (kernels/local_update) applicable: both the
+    live and the anchor gradient of a variance-reduced local step are then
+    ``Xᵀ c(Xw) / n + reg·w`` for a cheap per-sample coefficient c, so one
+    X sweep serves all four autodiff passes of the naive step.
+
+    x: [n, d] design rows (row-aligned with the batch: row j of ``x`` must
+       correspond to batch row j, so minibatch index gathers agree with the
+       autodiff path); y: [n] targets (±1 for "logistic"); link: one of
+       kernels.local_update.LINKS; reg: the ℓ2 coefficient.
+    """
+
+    x: jax.Array
+    y: jax.Array
+    link: str
+    reg: float
+
+
 @dataclasses.dataclass(frozen=True)
 class StackedClients:
     """All K clients, padded & stacked on axis 0.
@@ -61,6 +83,12 @@ class FLProblem:
     loss: Callable[[Pytree, ClientBatch], jax.Array]
     init: Callable[[jax.Array], Pytree]
     clients: StackedClients
+    #: optional protocol: declare a batch's loss in canonical linear-design
+    #: form (see LinearDesign). Models that implement it (logreg, linreg)
+    #: become eligible for the fused local-trajectory kernel path
+    #: (AlgoHParams.local_impl="pallas"); models that cannot (MLP, decoder)
+    #: leave it None and keep the autodiff path.
+    linear_design: "Callable[[ClientBatch], LinearDesign] | None" = None
 
     # ---- single-client oracles -------------------------------------------
     def grad(self, params: Pytree, batch: ClientBatch) -> Pytree:
@@ -97,14 +125,23 @@ class FLProblem:
         return jnp.dot(self.clients.weight, losses)
 
 
+def sample_minibatch_indices(
+    mask: jax.Array, rng: jax.Array, batch_size: int
+) -> jax.Array:
+    """The row indices ``sample_minibatch`` gathers — exposed so the fused
+    local-trajectory path (kernels/local_update) can draw the bit-identical
+    minibatches from the design matrix."""
+    n = mask.shape[0]
+    p = mask / jnp.maximum(jnp.sum(mask), 1.0)
+    return jax.random.choice(rng, n, shape=(batch_size,), p=p)
+
+
 def sample_minibatch(
     batch: ClientBatch, rng: jax.Array, batch_size: int
 ) -> ClientBatch:
     """Uniformly sample ``batch_size`` valid rows (with replacement — standard
     for SVRG-style estimators and shape-static under jit)."""
-    n = batch.mask.shape[0]
-    p = batch.mask / jnp.maximum(jnp.sum(batch.mask), 1.0)
-    idx = jax.random.choice(rng, n, shape=(batch_size,), p=p)
+    idx = sample_minibatch_indices(batch.mask, rng, batch_size)
     return ClientBatch(batch.x[idx], batch.y[idx], jnp.ones(batch_size, batch.mask.dtype))
 
 
@@ -116,16 +153,20 @@ def stack_client_arrays(
 
     K = len(xs)
     n_max = max(x.shape[0] for x in xs)
-    total = sum(x.shape[0] for x in xs)
     x0, y0 = np.asarray(xs[0]), np.asarray(ys[0])
     X = np.zeros((K, n_max) + x0.shape[1:], dtype=x0.dtype)
     Y = np.zeros((K, n_max) + y0.shape[1:], dtype=y0.dtype)
     M = np.zeros((K, n_max), dtype=np.float32)
-    W = np.zeros((K,), dtype=np.float32)
     for k, (x, y) in enumerate(zip(xs, ys)):
         n = x.shape[0]
         X[k, :n] = x
         Y[k, :n] = y
         M[k, :n] = 1.0
-        W[k] = n / total
+    # Aggregation weights in float64, normalized BEFORE the f32 cast: per-
+    # element f32 rounding of n_k/N leaves Σ W off 1 by O(K·eps), a bias the
+    # delta-form aggregation then applies to the model every round and that
+    # scales with K. Normalizing in f64 keeps the f32 sum within 1 ulp of 1
+    # for ragged K=100 splits (regression-tested).
+    counts = np.array([x.shape[0] for x in xs], dtype=np.float64)
+    W = (counts / counts.sum()).astype(np.float32)
     return StackedClients(jnp.asarray(X), jnp.asarray(Y), jnp.asarray(M), jnp.asarray(W))

@@ -57,6 +57,7 @@ from repro.core.algorithms import (
     _svrg_round_core,
     comm_bytes_per_round,
     finalize_metrics,
+    resolve_local_impl,
 )
 from repro.core.anderson import resolve_aa_impl
 from repro.core.problem import FLProblem
@@ -147,10 +148,13 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
     """
     if algo not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algo!r}; choose from {ALGORITHMS}")
-    # the sharded runtime always takes the leaf-wise tree AA path: leaves may
+    # the sharded runtime always takes the leaf-wise tree AA path (leaves may
     # be sharded across the mesh, where the flat-buffer Pallas ravel would
-    # force an all-gather; aa_impl="pallas"/"auto" falls back without error
-    hp = dataclasses.replace(hp, aa_impl=resolve_aa_impl(hp.aa_impl, "sharded"))
+    # force an all-gather) AND the autodiff local-trajectory path:
+    # aa_impl/local_impl "pallas"/"auto" fall back without error
+    hp = dataclasses.replace(
+        hp, aa_impl=resolve_aa_impl(hp.aa_impl, "sharded"),
+        local_impl=resolve_local_impl(hp.local_impl, "sharded"))
     axes = client_mesh_axes(mesh) if client_axes is None else tuple(client_axes)
     if not axes:
         raise ValueError(

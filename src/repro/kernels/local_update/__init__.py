@@ -1,0 +1,10 @@
+from repro.kernels.local_update.ops import (  # noqa: F401
+    FUSED_IMPLS,
+    fused_trajectory,
+)
+from repro.kernels.local_update.local_update import (  # noqa: F401
+    LINKS,
+    link_coeff,
+    trajectory_pallas,
+)
+from repro.kernels.local_update.ref import trajectory_ref  # noqa: F401

@@ -236,7 +236,8 @@ _NEWTON_ALGOS = ("giant", "newton_gmres", "dane")
 def dryrun_fl_round(algo: str, multi_pod: bool = False,
                     num_clients: int = 64, n: int | None = None,
                     comm_codec: str = "identity", rounds: int = 1,
-                    round_chunk: int = 1, aa_impl: str = "auto") -> dict:
+                    round_chunk: int = 1, aa_impl: str = "auto",
+                    local_impl: str = "auto") -> dict:
     """Compile + execute shard_mapped FL round(s) on the production mesh.
 
     Uses a synthetic logistic-regression problem (the paper's workload) with
@@ -256,8 +257,9 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
     ``round_chunk > 1`` executes the rounds through the device-resident
     engine (core/engine.py): one donated lax.scan jit per chunk, metrics
     stacked on device, one host sync per chunk — the sharded-runtime
-    exercise of the round engine. ``aa_impl`` threads AlgoHParams.aa_impl
-    (the sharded runtime resolves it to "tree" — the fallback path).
+    exercise of the round engine. ``aa_impl``/``local_impl`` thread
+    AlgoHParams.aa_impl and .local_impl (the sharded runtime resolves both
+    to "tree" — this dry-run exercises the automatic fallback).
     """
     from repro.comm import make_channel
     from repro.core import AlgoHParams, init_state, run_rounds, solve_reference
@@ -277,10 +279,12 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
     mesh = make_production_mesh(multi_pod=multi_pod)
     if algo in _NEWTON_ALGOS:
         n = 8192 if n is None else n
-        hp = AlgoHParams(eta=1.0, local_epochs=10, aa_impl=aa_impl)
+        hp = AlgoHParams(eta=1.0, local_epochs=10, aa_impl=aa_impl,
+                         local_impl=local_impl)
     else:
         n = 2048 if n is None else n
-        hp = AlgoHParams(eta=0.5, local_epochs=3, aa_impl=aa_impl)
+        hp = AlgoHParams(eta=0.5, local_epochs=3, aa_impl=aa_impl,
+                         local_impl=local_impl)
     X, y = make_binary_classification("synthetic_small", n=n, seed=0)
     clients = partition(X, y, num_clients=num_clients, scheme="iid")
     problem = make_logreg_problem(clients, gamma=1e-3)
@@ -347,6 +351,7 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
         "channel": channel.name,
         "round_chunk": round_chunk,
         "aa_impl": aa_impl,
+        "local_impl": local_impl,
         "compile_s": round(compile_s, 1),
         "engine_compile_s": engine_compile_s,
         "run_s": round(run_s, 2),
@@ -385,6 +390,11 @@ def main() -> None:
                     help="with --fl-round: AlgoHParams.aa_impl (the sharded "
                          "runtime resolves to 'tree' — exercises the "
                          "automatic fallback)")
+    ap.add_argument("--local-impl", choices=("auto", "tree", "pallas"),
+                    default="auto",
+                    help="with --fl-round: AlgoHParams.local_impl (the "
+                         "sharded runtime resolves to 'tree' — exercises "
+                         "the fused-kernel fallback path)")
     args = ap.parse_args()
 
     if args.fl_round:
@@ -401,6 +411,8 @@ def main() -> None:
             engine_tag += f"chunk{eff_chunk}"
         if args.aa_impl != "auto":
             engine_tag += ("+" if engine_tag else "") + args.aa_impl
+        if args.local_impl != "auto":
+            engine_tag += ("+" if engine_tag else "") + f"local-{args.local_impl}"
         engine_tag = f"{engine_tag}__" if engine_tag else ""
         for algo in algos:
             tag = (f"fl_round__{algo}__{codec_tag}{engine_tag}"
@@ -410,7 +422,8 @@ def main() -> None:
                                       comm_codec=args.comm_codec,
                                       rounds=args.fl_rounds,
                                       round_chunk=args.round_chunk,
-                                      aa_impl=args.aa_impl)
+                                      aa_impl=args.aa_impl,
+                                      local_impl=args.local_impl)
                 with open(os.path.join(RESULTS_DIR, tag + ".json"), "w") as f:
                     json.dump(res, f, indent=1)
                 print(f"OK   {tag}: compile={res['compile_s']}s "

@@ -61,6 +61,14 @@ def main() -> None:
                          "buffers and runs the fused single-pass kernels "
                          "(kernels/anderson); 'auto' = pallas on TPU, tree "
                          "elsewhere; the sharded runtime always uses tree")
+    ap.add_argument("--local-impl", choices=("auto", "tree", "pallas"),
+                    default="auto",
+                    help="local-trajectory implementation "
+                         "(AlgoHParams.local_impl): 'pallas' runs the fused "
+                         "dual-gradient kernels (kernels/local_update) — "
+                         "linear-design models only, so LM architectures "
+                         "fall back to the autodiff path; 'auto' = pallas "
+                         "on TPU where eligible; sharded always uses tree")
     ap.add_argument("--multi-pod", action="store_true",
                     help="with --runtime sharded: use the 2x16x16 two-pod "
                          "mesh instead of the single-pod 16x16 (requires "
@@ -84,7 +92,7 @@ def main() -> None:
     hp = AlgoHParams(eta=args.eta, local_epochs=args.local_epochs,
                      participation=args.participation,
                      aa=AAConfig(damping=args.damping, tikhonov=1e-8),
-                     aa_impl=args.aa_impl)
+                     aa_impl=args.aa_impl, local_impl=args.local_impl)
     channel = make_channel(args.comm_codec)
     chunk = args.round_chunk if args.round_chunk > 0 else None
 

@@ -1,0 +1,59 @@
+"""ℓ2-regularized linear (ridge) regression.
+
+The second member of the linear-design family: a strongly-convex quadratic
+federated problem whose local trajectories exercise the fused kernels'
+"linear" link (kernels/local_update). Useful as a closed-form-checkable
+workload — the global optimum solves (XᵀX/N + γI) w = Xᵀy/N — and as the
+FL analogue of the least-squares problems the second-order baselines
+(GIANT, DANE) were published on.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import ClientBatch, FLProblem, LinearDesign, StackedClients
+
+
+def make_linreg_problem(
+    clients: StackedClients, gamma: float = 1e-3, init_scale: float = 0.0,
+    dtype=jnp.float32,
+) -> FLProblem:
+    """f_k(w) = mean_j ½ (wᵀx_j − y_j)² + γ/2 ‖w‖²  over client k's data.
+
+    Declares the linear-design protocol (link "linear") — eligible for the
+    fused dual-gradient local-trajectory kernels, like logreg.
+    """
+    d = clients.x.shape[-1]
+
+    def loss(w: jax.Array, batch: ClientBatch) -> jax.Array:
+        z = batch.x.astype(w.dtype) @ w
+        per = 0.5 * (z - batch.y.astype(w.dtype)) ** 2
+        n = jnp.maximum(jnp.sum(batch.mask), 1.0)
+        return jnp.sum(per * batch.mask) / n + 0.5 * gamma * jnp.dot(w, w)
+
+    def init(rng: jax.Array) -> jax.Array:
+        if init_scale == 0.0:
+            return jnp.zeros((d,), dtype)
+        return init_scale * jax.random.normal(rng, (d,), dtype)
+
+    def linear_design(batch: ClientBatch) -> LinearDesign:
+        return LinearDesign(batch.x, batch.y, "linear", gamma)
+
+    return FLProblem(loss=loss, init=init, clients=clients,
+                     linear_design=linear_design)
+
+
+def linreg_exact_solution(clients: StackedClients, gamma: float) -> jax.Array:
+    """The global ridge optimum of Σ_k (N_k/N)·f_k — the weighted normal
+    equations (dense d×d, small-d reference for tests)."""
+    K, _, d = clients.x.shape
+    A = jnp.zeros((d, d))
+    b = jnp.zeros((d,))
+    for k in range(K):
+        xk, yk, mk = clients.x[k], clients.y[k], clients.mask[k]
+        nk = jnp.maximum(jnp.sum(mk), 1.0)
+        A = A + clients.weight[k] * (xk.T * mk) @ xk / nk
+        b = b + clients.weight[k] * (xk.T * mk) @ yk / nk
+    A = A + gamma * jnp.eye(d)
+    return jnp.linalg.solve(A, b)

@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.problem import ClientBatch, FLProblem, StackedClients
+from repro.core.problem import ClientBatch, FLProblem, LinearDesign, StackedClients
 
 
 def make_logreg_problem(
@@ -17,6 +17,11 @@ def make_logreg_problem(
     ``dtype=jnp.float64`` (with jax_enable_x64) reproduces the paper's deep
     rel-error plots — f32 local-step iterations have a fixed-point bias floor
     around 1e-5 (measured in benchmarks/ext_compression.py).
+
+    Declares the linear-design protocol (link "logistic"), so the SVRG /
+    SCAFFOLD / FedAvg local trajectories are eligible for the fused
+    dual-gradient kernels (``AlgoHParams.local_impl="pallas"``,
+    kernels/local_update).
     """
     d = clients.x.shape[-1]
 
@@ -32,7 +37,11 @@ def make_logreg_problem(
             return jnp.zeros((d,), dtype)
         return init_scale * jax.random.normal(rng, (d,), dtype)
 
-    return FLProblem(loss=loss, init=init, clients=clients)
+    def linear_design(batch: ClientBatch) -> LinearDesign:
+        return LinearDesign(batch.x, batch.y, "logistic", gamma)
+
+    return FLProblem(loss=loss, init=init, clients=clients,
+                     linear_design=linear_design)
 
 
 def logreg_accuracy(w: jax.Array, x: jax.Array, y: jax.Array) -> float:
