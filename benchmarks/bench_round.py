@@ -108,11 +108,12 @@ def _local_impls(algo: str, runtime: str) -> tuple:
     return ("tree",)
 
 
-def _hp(local_impl: str = "tree") -> AlgoHParams:
+def _hp(local_impl: str = "tree", cohort: int | None = None) -> AlgoHParams:
     # fig6's quick-covtype hyperparameters for every cell (η=1, L=10 —
     # L doubles as GIANT's CG iteration count), so the timer bases agree
     # across benchmarks
-    return AlgoHParams(eta=1.0, local_epochs=10, local_impl=local_impl)
+    return AlgoHParams(eta=1.0, local_epochs=10, local_impl=local_impl,
+                       cohort_size=cohort)
 
 
 def _make_round_fn(algo, prob, hp, runtime, channel, mesh):
@@ -135,8 +136,12 @@ class _Cell:
     see _bench_cell."""
 
     def __init__(self, prob, wstar, algo, runtime, channel, mesh, rounds,
-                 chunk, local_impl="tree", seed_cell=None):
-        hp = _hp(local_impl)
+                 chunk, local_impl="tree", seed_cell=None, cohort=None):
+        # cohort cells time the sampled-cohort round (AlgoHParams.cohort_size)
+        # in loop/engine; the seed replay below stays DENSE — "vs seed"
+        # then measures cohort compute reduction + engine against the true
+        # pre-cohort driver
+        hp = _hp(local_impl, cohort)
         self.prob, self.hp, self.algo, self.channel = prob, hp, algo, channel
         self.rounds, self.chunk = rounds, chunk
         self.wstar = wstar
@@ -202,7 +207,7 @@ class _Cell:
 
 
 def _bench_cell(prob, wstar, algo, runtime, channel, mesh, rounds, chunk,
-                reps, local_impls=("tree",)):
+                reps, local_impls=("tree",), cohort=None):
     """Bench every local_impl of one (algo, runtime, channel) together:
     ONE seed-loop baseline (the LOCAL_IMPL_SEED seed trajectory replay —
     identical for every row) and per-impl loop/engine modes, all
@@ -211,7 +216,7 @@ def _bench_cell(prob, wstar, algo, runtime, channel, mesh, rounds, chunk,
     cells, seed_cell = {}, None
     for li in local_impls:
         cells[li] = _Cell(prob, wstar, algo, runtime, channel, mesh, rounds,
-                          chunk, li, seed_cell)
+                          chunk, li, seed_cell, cohort)
         seed_cell = seed_cell or cells[li]
     modes = {"seed_loop": cells[local_impls[0]].seed_loop}
     for li in local_impls:
@@ -233,6 +238,7 @@ def _bench_cell(prob, wstar, algo, runtime, channel, mesh, rounds, chunk,
             "runtime": runtime,
             "channel": channel,
             "local_impl": li,
+            "cohort": cohort,
             "rounds_timed": rounds,
             "chunk": chunk,
             "reps": reps,
@@ -347,6 +353,20 @@ def run(smoke: bool = False) -> dict:
                           f"ms/round -> engine "
                           f"{row['engine_s_per_round']*1e3:7.2f}"
                           f"  ({row['engine_speedup_vs_seed_loop']:.2f}x)")
+    # cohort cells: the sampled-cohort round (C=4 of K=10) against the SAME
+    # dense seed-loop baseline — the participation-as-memory-model row of
+    # the trajectory (benchmarks/ext_cohort.py sweeps the K axis)
+    for runtime in (("vmap",) if smoke else RUNTIMES):
+        for row in _bench_cell(prob, wstar, "fedosaa_svrg", runtime,
+                               "identity", mesh, rounds, chunk, reps,
+                               ("tree",), cohort=4):
+            rows.append(row)
+            print(f"{'fedosaa_svrg':18s} {runtime:7s} {'identity':8s} "
+                  f"{row['local_impl']:6s} cohort=4 "
+                  f"seed {row['seed_loop_s_per_round']*1e3:7.2f} "
+                  f"ms/round -> engine "
+                  f"{row['engine_s_per_round']*1e3:7.2f}"
+                  f"  ({row['engine_speedup_vs_seed_loop']:.2f}x)")
     pallas = _pallas_row(prob, wstar, rounds=2 if smoke else 4)
     print(f"aa_impl=pallas parity: max |Δparams| vs tree "
           f"{pallas['max_abs_param_diff_vs_tree']:.2e}")

@@ -19,8 +19,12 @@ def main():
                     choices=["iid", "imbalance", "label_skew"])
     ap.add_argument("--rounds", type=int, default=15)
     ap.add_argument("--participation", type=float, default=1.0,
-                    help="fraction of clients active per round (<1.0 draws a "
-                         "Bernoulli subset each round)")
+                    help="fraction of clients active per round (<1.0 samples "
+                         "a ⌈pK⌉-client cohort each round)")
+    ap.add_argument("--cohort-size", type=int, default=0,
+                    help="explicit per-round cohort size C (overrides "
+                         "--participation; non-sampled clients' state stays "
+                         "frozen); 0 = derive from --participation")
     ap.add_argument("--comm-codec", default="identity",
                     help="wire-compression channel (repro/comm): identity | "
                          "bf16 | int8 | topk[:ratio] ...")
@@ -37,7 +41,8 @@ def main():
 
     eta = 0.5 if args.scheme == "label_skew" else 1.0
     hp = AlgoHParams(eta=eta, local_epochs=10,
-                     participation=args.participation)
+                     participation=args.participation,
+                     cohort_size=args.cohort_size or None)
     for algo in ALGOS:
         h = run_federated(problem, algo, hp, args.rounds, w_star=w_star,
                           channel=args.comm_codec,

@@ -43,6 +43,14 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_round --smo
 python scripts/check_bench_round.py benchmarks/results/BENCH_round_smoke.json
 python scripts/check_bench_round.py BENCH_round.json --require-full
 
+# Cohort smoke: sampled-cohort engine rounds (C=16 gathered out of the
+# K-sized client store, frozen non-sampled rows) run end-to-end on the
+# reduced K sweep, including XLA's compiled-memory analysis of the chunk
+# executable — exercising the gather/scatter round plan under CI. Scratch
+# output only; the committed K∈{32,512,4096} sweep lives in
+# benchmarks/results/ext_cohort.json.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.ext_cohort --smoke
+
 # XLA:CPU thunk-runtime loop-body repro (ROADMAP item): records the
 # scan-body penalty of the default runtime vs the legacy one — the artifact
 # to attach upstream and to re-check on jaxlib upgrades. Not gated on a

@@ -29,7 +29,13 @@ from repro.core.algorithms import (  # noqa: F401
     init_comm_state,
     init_state,
     make_round_fn,
+    resolve_cohort_size,
     resolve_local_impl,
+)
+from repro.core.client_store import (  # noqa: F401
+    ClientStateStore,
+    gather_rows,
+    scatter_rows,
 )
 from repro.comm.schema import UplinkSpec  # noqa: F401
 from repro.comm import CommChannel, make_channel  # noqa: F401

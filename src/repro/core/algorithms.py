@@ -56,6 +56,7 @@ from repro.core.anderson import (
     resolve_aa_impl,
     trajectory_to_sy,
 )
+from repro.core.client_store import ClientStateStore
 from repro.core.problem import (
     ClientBatch,
     FLProblem,
@@ -182,7 +183,16 @@ class AlgoHParams:
     batch_size: int | None = None   # None => full-batch local gradients
     aa: AAConfig = AAConfig()
     line_search: bool = False   # GIANT-style global backtracking
-    participation: float = 1.0  # fraction of clients active per round (ext.)
+    participation: float = 1.0  # fraction of clients active per round (ext.):
+                                # < 1 samples a ⌈pK⌉-client cohort each round
+                                # (resolve_cohort_size / _sample_cohort)
+    cohort_size: int | None = None  # explicit per-round cohort size C: the
+                                # round computes on C gathered clients over
+                                # the K-sized ClientStateStore (O(C·d) round
+                                # compute, O(K·d) store); None derives C from
+                                # ``participation`` (full participation keeps
+                                # the dense all-K path). Takes precedence
+                                # over ``participation`` when both are set.
     carry_history: int = 0      # extra (s,y) columns carried ACROSS rounds
                                 # (paper App. A option 1; FedOSAA-SVRG only)
     dane_newton_iters: int = 20
@@ -268,9 +278,12 @@ def init_comm_state(channel: CommChannel, params: Pytree, K: int,
     has no aux uplink, the Newton family carries "grad"/"dir" instead of
     "grad"/"delta"; at LM scale each skipped buffer is a K×d array.
     ``algo=None`` allocates the union DEFAULT_SCHEMA for algorithm-agnostic
-    callers. Inactive clients of a partial-participation round still advance
-    their buffers in this simulation (every client computes, weights zero the
-    aggregation) — a real deployment would freeze them.
+    callers. The store is allocated ONCE at K; a cohort round (participation
+    < 1 or an explicit ``cohort_size``) gathers only its C sampled rows into
+    the compiled round body and scatters the updated rows back, so a client
+    outside the cohort keeps its error-feedback residual / diff-coding
+    reference bit-frozen — exactly the offline-client semantics of a real
+    deployment (pinned in tests/test_cohort.py).
     """
     schema = DEFAULT_SCHEMA if algo is None else UPLINK_SCHEMAS[algo]
     return init_schema_state(channel, schema, params, K)
@@ -619,17 +632,115 @@ def _client_dane(problem, hp, w_t, g_global, x, y, mask):
 
 
 # --------------------------------------------------------------------------
-# participation mask (extension: partial client participation)
+# cohort sampling (extension: partial client participation as the MEMORY
+# model, not just an aggregation mask)
+#
+# A round with C < K computes on a sampled cohort: client data, rng keys and
+# the per-client state rows (ClientStateStore: control variates, carried AA
+# columns, comm buffers) are GATHERED to [C, ...] before the round core runs,
+# and the updated rows are SCATTERED back afterwards — non-sampled clients'
+# state is bit-frozen and the compiled round touches O(C·d), not O(K·d).
+# The historical dense path (every client computes, which full participation
+# still uses) remains the csize=None branch of _plan_round.
 # --------------------------------------------------------------------------
 
-def _participation_weights(problem: FLProblem, hp: AlgoHParams, rng: jax.Array):
-    w = problem.clients.weight
+def resolve_cohort_size(hp: AlgoHParams, num_clients: int) -> int | None:
+    """The per-round cohort size C, or None for the dense full-K path.
+
+    An explicit ``hp.cohort_size`` always wins (C == K still runs the
+    cohort gather/scatter machinery — the identity cohort, bit-identical to
+    the dense path and pinned so in tests/test_cohort.py). Otherwise
+    ``participation < 1`` derives C = max(1, round(p·K)): a fixed-size
+    weighted draw without replacement, replacing the historical Bernoulli
+    mask whose inactive clients still computed (and, worse, still advanced
+    their comm buffers — the wart init_comm_state used to document).
+    """
+    if hp.cohort_size is not None:
+        c = int(hp.cohort_size)
+        if not 1 <= c <= num_clients:
+            raise ValueError(
+                f"cohort_size={c} must be in [1, num_clients={num_clients}]")
+        return c
     if hp.participation >= 1.0:
-        return w
-    K = w.shape[0]
-    active = jax.random.bernoulli(rng, hp.participation, (K,))
-    wm = jnp.where(active, w, 0.0)
-    return wm / jnp.maximum(jnp.sum(wm), 1e-30)
+        return None
+    return max(1, int(round(hp.participation * num_clients)))
+
+
+def _sample_cohort(weight: jax.Array, cohort_size: int, rng: jax.Array):
+    """Draw the round's cohort: ([C] indices, [C] renormalized weights).
+
+    Sampling is without replacement, data-size weighted (p ∝ N_k/N), and the
+    drawn weights renormalize to sum 1 so the delta-form aggregation stays
+    exact. C == K short-circuits to the identity cohort with the RAW
+    weights — renormalizing would perturb the last ulp and break the
+    bit-identity of the C=K path with the dense path.
+    """
+    K = weight.shape[0]
+    if cohort_size >= K:
+        return jnp.arange(K), weight
+    idx = jax.random.choice(rng, K, shape=(cohort_size,), replace=False,
+                            p=weight)
+    cw = weight[idx]
+    return idx, cw / jnp.maximum(jnp.sum(cw), 1e-30)
+
+
+class CohortPlan(NamedTuple):
+    """One round's resolved client axis: the [C, ...] views the round core
+    consumes plus what the epilogue needs to scatter updates back."""
+
+    idx: jax.Array | None    # [C] cohort indices; None = dense full-K round
+    x: jax.Array             # [C, ...] client data views
+    y: jax.Array
+    mask: jax.Array
+    dweight: jax.Array       # [C] reduction weights (losses, global grad)
+    pweight: jax.Array       # [C] aggregation weights for the model update
+    rngs: jax.Array          # [C, 2] per-client round keys
+    store: ClientStateStore  # the FULL K-sized store (scatter target)
+    cohort: ClientStateStore # the gathered [C, ...] rows the core reads
+
+
+def _plan_round(problem: FLProblem, csize: int | None, state: ServerState,
+                part_rng: jax.Array, rngs_K: jax.Array) -> CohortPlan:
+    """Resolve the round's client axis.
+
+    Dense (csize None): the full stacks and store pass through untouched —
+    byte-for-byte the historical round. Cohort: sample C indices, gather
+    data + state rows + the C of the K prologue-split client keys
+    (``rngs_K[idx]``, NOT a fresh split — cohort client k sees the same key
+    the dense path would hand client k, which is what makes the masked-dense
+    equivalence in tests/test_cohort.py exact per client).
+    """
+    C = problem.clients
+    store = ClientStateStore.from_state(state)
+    if csize is None:
+        return CohortPlan(None, C.x, C.y, C.mask, C.weight, C.weight, rngs_K,
+                          store, store)
+    idx, cw = _sample_cohort(C.weight, csize, part_rng)
+    if csize >= C.num_clients:
+        # identity cohort (C == K): gathers at arange are value-identical but
+        # perturb XLA fusion by an ulp, which the ill-conditioned AA Gram
+        # solve amplifies — so the original arrays ARE the cohort view. The
+        # scatter epilogue still runs (an exact write of the computed rows,
+        # bit-safe), keeping the commit machinery under test.
+        return CohortPlan(idx, C.x, C.y, C.mask, cw, cw, rngs_K, store, store)
+    return CohortPlan(idx, C.x[idx], C.y[idx], C.mask[idx], cw, cw,
+                      rngs_K[idx], store, store.gather(idx))
+
+
+def _commit_plan(plan: CohortPlan, **updates) -> dict:
+    """ServerState field updates from a round core's per-client outputs.
+
+    Dense: passed through unchanged. Cohort: the [C, ...] rows scatter into
+    the K-sized store — rows outside the cohort are bit-frozen, and fields
+    the core did not touch (None here) emit no scatter op at all.
+    """
+    if plan.idx is None:
+        return updates
+    rows = ClientStateStore(
+        c_k=updates.get("c_k"), hist_s=updates.get("hist_s"),
+        hist_y=updates.get("hist_y"), comm=updates.get("comm"))
+    new = plan.store.scatter(plan.idx, rows)
+    return {k: getattr(new, k) for k in updates}
 
 
 def _aggregate(weights: jax.Array, stacked: Pytree, anchor: Pytree | None = None) -> Pytree:
@@ -967,29 +1078,39 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
     channel = make_channel(channel)
     comm_bytes = comm_bytes_per_round(algo, p0, channel, hp.line_search)
     C = problem.clients
+    csize = resolve_cohort_size(hp, C.num_clients)
     R = CrossClientReduce(channel)
+
+    def prologue(state: ServerState):
+        """Shared round prologue: rng splits + the resolved client axis.
+        The split order matches the historical dense round exactly, and the
+        dense branch of _plan_round forwards the original arrays — so the
+        csize=None graph is byte-identical to the pre-cohort round."""
+        rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
+        rngs_K = jax.random.split(cl_rng, C.num_clients)
+        return rng, _plan_round(problem, csize, state, part_rng, rngs_K)
 
     # ---------------- SVRG family ----------------
     if algo in ("fedsvrg", "fedosaa_svrg"):
         use_aa = algo == "fedosaa_svrg"
 
         def round_fn(state: ServerState):
-            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
-            weights = _participation_weights(problem, hp, part_rng)
-            rngs = jax.random.split(cl_rng, C.num_clients)
+            rng, plan = prologue(state)
             carry = hp.carry_history > 0 and state.hist_s is not None
             new_params, parts, new_hs, new_hy, new_comm = _svrg_round_core(
-                problem, hp, use_aa, R, state.params, C.x, C.y, C.mask,
-                C.weight, weights, rngs,
-                state.hist_s if carry else None,
-                state.hist_y if carry else None,
-                state.comm,
+                problem, hp, use_aa, R, state.params, plan.x, plan.y,
+                plan.mask, plan.dweight, plan.pweight, plan.rngs,
+                plan.cohort.hist_s if carry else None,
+                plan.cohort.hist_y if carry else None,
+                plan.cohort.comm,
             )
             metrics = finalize_metrics(parts, comm_bytes)
-            upd = dict(params=new_params, t=state.t + 1, rng=rng, comm=new_comm)
+            upd = dict(comm=new_comm)
             if carry:
                 upd.update(hist_s=new_hs, hist_y=new_hy)
-            return state._replace(**upd), metrics
+            upd = _commit_plan(plan, **upd)
+            return state._replace(params=new_params, t=state.t + 1, rng=rng,
+                                  **upd), metrics
 
         return round_fn
 
@@ -998,18 +1119,17 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         use_aa = algo == "fedosaa_scaffold"
 
         def round_fn(state: ServerState):
-            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
-            weights = _participation_weights(problem, hp, part_rng)
-            rngs = jax.random.split(cl_rng, C.num_clients)
+            rng, plan = prologue(state)
             new_params, new_c, new_c_k, parts, new_comm = _scaffold_round_core(
                 problem, hp, use_aa, R, state.params, state.c,
-                C.x, C.y, C.mask, state.c_k, C.weight, weights, rngs,
-                state.comm,
+                plan.x, plan.y, plan.mask, plan.cohort.c_k,
+                plan.dweight, plan.pweight, plan.rngs, plan.cohort.comm,
             )
             metrics = finalize_metrics(parts, comm_bytes)
+            upd = _commit_plan(plan, c_k=new_c_k, comm=new_comm)
             return (
-                state._replace(params=new_params, c=new_c, c_k=new_c_k,
-                               t=state.t + 1, rng=rng, comm=new_comm),
+                state._replace(params=new_params, c=new_c, t=state.t + 1,
+                               rng=rng, **upd),
                 metrics,
             )
 
@@ -1020,16 +1140,16 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         use_aa = algo == "fedosaa_avg"
 
         def round_fn(state: ServerState):
-            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
-            weights = _participation_weights(problem, hp, part_rng)
-            rngs = jax.random.split(cl_rng, C.num_clients)
+            rng, plan = prologue(state)
             new_params, parts, new_comm = _avg_round_core(
-                problem, hp, use_aa, R, state.params, C.x, C.y, C.mask,
-                C.weight, weights, rngs, state.comm,
+                problem, hp, use_aa, R, state.params, plan.x, plan.y,
+                plan.mask, plan.dweight, plan.pweight, plan.rngs,
+                plan.cohort.comm,
             )
             metrics = finalize_metrics(parts, comm_bytes)
+            upd = _commit_plan(plan, comm=new_comm)
             return state._replace(params=new_params, t=state.t + 1, rng=rng,
-                                  comm=new_comm), metrics
+                                  **upd), metrics
 
         return round_fn
 
@@ -1037,16 +1157,15 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
     if algo == "lbfgs":
 
         def round_fn(state: ServerState):
-            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
-            weights = _participation_weights(problem, hp, part_rng)
-            rngs = jax.random.split(cl_rng, C.num_clients)
+            rng, plan = prologue(state)
             new_params, parts, new_comm = _lbfgs_round_core(
-                problem, hp, R, state.params, C.x, C.y, C.mask,
-                C.weight, weights, rngs, state.comm,
+                problem, hp, R, state.params, plan.x, plan.y, plan.mask,
+                plan.dweight, plan.pweight, plan.rngs, plan.cohort.comm,
             )
             metrics = finalize_metrics(parts, comm_bytes)
+            upd = _commit_plan(plan, comm=new_comm)
             return state._replace(params=new_params, t=state.t + 1, rng=rng,
-                                  comm=new_comm), metrics
+                                  **upd), metrics
 
         return round_fn
 
@@ -1055,16 +1174,16 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         client_fn = _client_giant if algo == "giant" else _client_newton_gmres
 
         def round_fn(state: ServerState):
-            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
-            weights = _participation_weights(problem, hp, part_rng)
-            rngs = jax.random.split(cl_rng, C.num_clients)
+            rng, plan = prologue(state)
             new_params, parts, new_comm = _newton_round_core(
-                problem, hp, client_fn, R, state.params, C.x, C.y, C.mask,
-                C.weight, weights, rngs, state.comm,
+                problem, hp, client_fn, R, state.params, plan.x, plan.y,
+                plan.mask, plan.dweight, plan.pweight, plan.rngs,
+                plan.cohort.comm,
             )
             metrics = finalize_metrics(parts, comm_bytes)
+            upd = _commit_plan(plan, comm=new_comm)
             return state._replace(params=new_params, t=state.t + 1, rng=rng,
-                                  comm=new_comm), metrics
+                                  **upd), metrics
 
         return round_fn
 
@@ -1072,15 +1191,14 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
     assert algo == "dane"
 
     def round_fn(state: ServerState):
-        rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
-        weights = _participation_weights(problem, hp, part_rng)
-        rngs = jax.random.split(cl_rng, C.num_clients)
+        rng, plan = prologue(state)
         new_params, parts, new_comm = _dane_round_core(
-            problem, hp, R, state.params, C.x, C.y, C.mask, C.weight, weights,
-            rngs, state.comm,
+            problem, hp, R, state.params, plan.x, plan.y, plan.mask,
+            plan.dweight, plan.pweight, plan.rngs, plan.cohort.comm,
         )
         metrics = finalize_metrics(parts, comm_bytes)
+        upd = _commit_plan(plan, comm=new_comm)
         return state._replace(params=new_params, t=state.t + 1, rng=rng,
-                              comm=new_comm), metrics
+                              **upd), metrics
 
     return round_fn

@@ -1,0 +1,95 @@
+"""Cohort-resident client state: the K-sized store behind a sampled round.
+
+FL is "a large number of clients": the per-client state a server carries —
+control variates (``ServerState.c_k``), carried AA history columns
+(``hist_s``/``hist_y``), per-tag comm buffers (error-feedback residuals,
+diff-coding references) — scales O(K·d), but a round only ever *computes* on
+the sampled cohort of C ≪ K clients. ``ClientStateStore`` is the seam
+between the two regimes:
+
+  * the store OWNS the [K, ...] buffers (allocated once by
+    ``init_state``/``init_comm_state``, donated through the round engine);
+  * ``gather(idx)`` slices the cohort's [C, ...] rows — the ONLY view the
+    round cores (core/algorithms.py) and the shard_mapped runtime
+    (core/sharded.py) ever see;
+  * ``scatter(idx, rows)`` writes the updated cohort rows back in place
+    (``.at[idx].set`` — XLA aliases the donated buffer, so the store is
+    updated without a second K-sized allocation). Rows outside the cohort
+    are BIT-FROZEN: a client that did not participate cannot advance its
+    error-feedback residual or diff-coding reference, exactly as a real
+    deployment's offline client keeps its local state
+    (tests/test_cohort.py pins this bitwise).
+
+Fields mirror the per-client slots of ``ServerState``; a field that is None
+(algorithm carries no such state) stays None through gather/scatter, and a
+field that is None in the ``scatter`` update is left untouched — no scatter
+op is even emitted, so e.g. a FedOSAA-SVRG round without carried history
+never materializes a [K, d] operation (the jaxpr assertion in
+tests/test_cohort.py).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+
+Pytree = Any
+
+
+def gather_rows(tree: Pytree, idx: jax.Array) -> Pytree:
+    """Leaf-wise ``leaf[idx]``: the [C, ...] cohort rows of a [K, ...] pytree."""
+    return jax.tree.map(lambda b: b[idx], tree)
+
+
+def scatter_rows(full: Pytree, idx: jax.Array, rows: Pytree) -> Pytree:
+    """Leaf-wise ``full.at[idx].set(rows)``; rows outside ``idx`` untouched.
+
+    ``unique_indices=True`` — cohorts are sampled WITHOUT replacement
+    (core/algorithms._sample_cohort), which lets XLA lower a plain
+    (aliasable) scatter instead of a serialized combiner.
+    """
+    return jax.tree.map(
+        lambda f, r: f.at[idx].set(r, unique_indices=True), full, rows
+    )
+
+
+class ClientStateStore(NamedTuple):
+    """The per-client [K, ...] slots of a ServerState as one gather/scatter
+    unit. Construct with :meth:`from_state`; fields absent from the
+    algorithm's state are None and pass through untouched."""
+
+    c_k: Pytree = None      # [K, ...] client control variates
+    hist_s: Pytree = None   # [K, H, ...] carried AA columns
+    hist_y: Pytree = None
+    comm: Pytree = None     # {tag: {"ef"/"ref": [K, ...]}} wire state
+
+    @classmethod
+    def from_state(cls, state) -> "ClientStateStore":
+        return cls(c_k=state.c_k, hist_s=state.hist_s, hist_y=state.hist_y,
+                   comm=state.comm)
+
+    @property
+    def num_clients(self) -> int:
+        leaves = jax.tree.leaves(self)
+        if not leaves:
+            raise ValueError("empty ClientStateStore has no client axis")
+        return leaves[0].shape[0]
+
+    def gather(self, idx: jax.Array) -> "ClientStateStore":
+        """The cohort's [C, ...] rows (None fields stay None)."""
+        return ClientStateStore(
+            *(None if f is None else gather_rows(f, idx) for f in self)
+        )
+
+    def scatter(self, idx: jax.Array, rows: "ClientStateStore") -> "ClientStateStore":
+        """Write updated [C, ...] rows back at ``idx``.
+
+        A field that is None in ``rows`` is returned untouched — the SAME
+        array object, so no scatter op enters the graph for state the round
+        never advanced. Rows outside ``idx`` keep their bits.
+        """
+        return ClientStateStore(*(
+            full if (full is None or upd is None)
+            else scatter_rows(full, idx, upd)
+            for full, upd in zip(self, rows)
+        ))

@@ -42,6 +42,15 @@ the vmap runtime's ``make_round_fn`` and the sharded runtime's
 ``make_sharded_round_fn`` alike. Pass the UN-jitted round function; the
 engine owns the jit (and its donation).
 
+Cohort rounds compose with all of the above: a round_fn built with
+``cohort_size`` (or participation < 1) gathers its C sampled rows from the
+K-sized client store inside the scan body and scatters the updated rows
+back (core/client_store.py), so donation still reuses the O(K·d) store in
+place while each scan slot computes O(C·d). The live/stop select passes
+untouched store fields through by OBJECT IDENTITY (see tree_math.tree_where)
+— no [K, ...] select op enters the compiled chunk, which is what the
+no-dense-compute jaxpr assertion in tests/test_cohort.py pins.
+
 NOTE donation semantics: with ``donate=True`` (default) the caller's input
 ``state`` buffers are consumed by the first chunk — re-init (same PRNGKey
 gives an identical state) if the initial state is needed afterwards.

@@ -50,13 +50,15 @@ from repro.core.algorithms import (
     _client_giant,
     _client_newton_gmres,
     _dane_round_core,
+    _commit_plan,
     _lbfgs_round_core,
     _newton_round_core,
-    _participation_weights,
+    _plan_round,
     _scaffold_round_core,
     _svrg_round_core,
     comm_bytes_per_round,
     finalize_metrics,
+    resolve_cohort_size,
     resolve_local_impl,
 )
 from repro.core.anderson import resolve_aa_impl
@@ -164,10 +166,16 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
     n_shards = num_client_shards(mesh, axes)
     C = problem.clients
     K = C.num_clients
-    if K % n_shards != 0:
+    csize = resolve_cohort_size(hp, K)
+    if csize is None and K % n_shards != 0:
         raise ValueError(
             f"num_clients={K} does not divide over {n_shards} client shards "
             f"(mesh axes {axes}); pad the client stack to a multiple"
+        )
+    if csize is not None and csize % n_shards != 0:
+        raise ValueError(
+            f"cohort_size={csize} does not divide over {n_shards} client "
+            f"shards (mesh axes {axes}); pick a cohort that is a multiple"
         )
     channel = make_channel(channel)
     R = ShardReduce(axes, channel)
@@ -176,6 +184,18 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
 
     csh = P(axes)   # leading (client) dim split over the client mesh axes
     rep = P()       # replicated
+
+    def prologue(state: ServerState):
+        """Shared round prologue: rng splits + the cohort (or dense) plan.
+
+        The gather stays at jit level, OUTSIDE shard_map: GSPMD reshards the
+        gathered [C, ...] rows onto the client shards, so the mapped bodies
+        and their in_specs are identical for both paths — only the leading
+        axis extent changes. The scatter in _commit_plan likewise runs at jit
+        level, writing the cohort rows back into the K-sized store."""
+        rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
+        rngs_K = _split_client_rngs(cl_rng, K, mesh)
+        return rng, _plan_round(problem, csize, state, part_rng, rngs_K)
 
     def smap(body, in_specs, out_specs):
         # check_vma off: the bodies close over `problem`/`hp` and batch psums
@@ -193,9 +213,7 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         use_aa = algo == "fedosaa_svrg"
 
         def round_fn(state: ServerState):
-            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
-            weights = _participation_weights(problem, hp, part_rng)
-            rngs = _split_client_rngs(cl_rng, K, mesh)
+            rng, plan = prologue(state)
             carry = hp.carry_history > 0 and state.hist_s is not None
 
             def body(w_t, x, y, mask, dw, pw, r, hs, hy, e):
@@ -207,14 +225,17 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
                 body,
                 in_specs=(rep, csh, csh, csh, csh, csh, csh, csh, csh, csh),
                 out_specs=(rep, rep, csh, csh, csh),
-            )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs,
-              state.hist_s if carry else None,
-              state.hist_y if carry else None,
-              state.comm)
-            upd = dict(params=new_params, t=state.t + 1, rng=rng, comm=new_comm)
+            )(state.params, plan.x, plan.y, plan.mask, plan.dweight,
+              plan.pweight, plan.rngs,
+              plan.cohort.hist_s if carry else None,
+              plan.cohort.hist_y if carry else None,
+              plan.cohort.comm)
+            upd = dict(comm=new_comm)
             if carry:
                 upd.update(hist_s=new_hs, hist_y=new_hy)
-            return state._replace(**upd), finalize_metrics(parts, comm_bytes)
+            upd = _commit_plan(plan, **upd)
+            return state._replace(params=new_params, t=state.t + 1, rng=rng,
+                                  **upd), finalize_metrics(parts, comm_bytes)
 
         return round_fn
 
@@ -223,9 +244,7 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         use_aa = algo == "fedosaa_scaffold"
 
         def round_fn(state: ServerState):
-            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
-            weights = _participation_weights(problem, hp, part_rng)
-            rngs = _split_client_rngs(cl_rng, K, mesh)
+            rng, plan = prologue(state)
 
             def body(w_t, c, x, y, mask, c_k, dw, pw, r, e):
                 return _scaffold_round_core(
@@ -236,11 +255,13 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
                 body,
                 in_specs=(rep, rep, csh, csh, csh, csh, csh, csh, csh, csh),
                 out_specs=(rep, rep, csh, rep, csh),
-            )(state.params, state.c, C.x, C.y, C.mask, state.c_k, C.weight,
-              weights, rngs, state.comm)
+            )(state.params, state.c, plan.x, plan.y, plan.mask,
+              plan.cohort.c_k, plan.dweight, plan.pweight, plan.rngs,
+              plan.cohort.comm)
+            upd = _commit_plan(plan, c_k=new_c_k, comm=new_comm)
             return (
-                state._replace(params=new_params, c=new_c, c_k=new_c_k,
-                               t=state.t + 1, rng=rng, comm=new_comm),
+                state._replace(params=new_params, c=new_c, t=state.t + 1,
+                               rng=rng, **upd),
                 finalize_metrics(parts, comm_bytes),
             )
 
@@ -251,9 +272,7 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         use_aa = algo == "fedosaa_avg"
 
         def round_fn(state: ServerState):
-            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
-            weights = _participation_weights(problem, hp, part_rng)
-            rngs = _split_client_rngs(cl_rng, K, mesh)
+            rng, plan = prologue(state)
 
             def body(w_t, x, y, mask, dw, pw, r, e):
                 return _avg_round_core(
@@ -263,10 +282,11 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
                 body,
                 in_specs=(rep, csh, csh, csh, csh, csh, csh, csh),
                 out_specs=(rep, rep, csh),
-            )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs,
-              state.comm)
+            )(state.params, plan.x, plan.y, plan.mask, plan.dweight,
+              plan.pweight, plan.rngs, plan.cohort.comm)
+            upd = _commit_plan(plan, comm=new_comm)
             return state._replace(params=new_params, t=state.t + 1,
-                                  rng=rng, comm=new_comm), finalize_metrics(parts, comm_bytes)
+                                  rng=rng, **upd), finalize_metrics(parts, comm_bytes)
 
         return round_fn
 
@@ -274,9 +294,7 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
     if algo == "lbfgs":
 
         def round_fn(state: ServerState):
-            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
-            weights = _participation_weights(problem, hp, part_rng)
-            rngs = _split_client_rngs(cl_rng, K, mesh)
+            rng, plan = prologue(state)
 
             def body(w_t, x, y, mask, dw, pw, r, e):
                 return _lbfgs_round_core(
@@ -286,10 +304,11 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
                 body,
                 in_specs=(rep, csh, csh, csh, csh, csh, csh, csh),
                 out_specs=(rep, rep, csh),
-            )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs,
-              state.comm)
+            )(state.params, plan.x, plan.y, plan.mask, plan.dweight,
+              plan.pweight, plan.rngs, plan.cohort.comm)
+            upd = _commit_plan(plan, comm=new_comm)
             return state._replace(params=new_params, t=state.t + 1,
-                                  rng=rng, comm=new_comm), finalize_metrics(parts, comm_bytes)
+                                  rng=rng, **upd), finalize_metrics(parts, comm_bytes)
 
         return round_fn
 
@@ -298,9 +317,7 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         client_fn = _client_giant if algo == "giant" else _client_newton_gmres
 
         def round_fn(state: ServerState):
-            rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
-            weights = _participation_weights(problem, hp, part_rng)
-            rngs = _split_client_rngs(cl_rng, K, mesh)
+            rng, plan = prologue(state)
 
             def body(w_t, x, y, mask, dw, pw, r, e):
                 return _newton_round_core(
@@ -310,10 +327,11 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
                 body,
                 in_specs=(rep, csh, csh, csh, csh, csh, csh, csh),
                 out_specs=(rep, rep, csh),
-            )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs,
-              state.comm)
+            )(state.params, plan.x, plan.y, plan.mask, plan.dweight,
+              plan.pweight, plan.rngs, plan.cohort.comm)
+            upd = _commit_plan(plan, comm=new_comm)
             return state._replace(params=new_params, t=state.t + 1,
-                                  rng=rng, comm=new_comm), finalize_metrics(parts, comm_bytes)
+                                  rng=rng, **upd), finalize_metrics(parts, comm_bytes)
 
         return round_fn
 
@@ -321,9 +339,7 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
     assert algo == "dane"
 
     def round_fn(state: ServerState):
-        rng, part_rng, cl_rng = jax.random.split(state.rng, 3)
-        weights = _participation_weights(problem, hp, part_rng)
-        rngs = _split_client_rngs(cl_rng, K, mesh)
+        rng, plan = prologue(state)
 
         def body(w_t, x, y, mask, dw, pw, r, e):
             return _dane_round_core(problem, hp, R, w_t, x, y, mask, dw, pw,
@@ -333,8 +349,10 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
             body,
             in_specs=(rep, csh, csh, csh, csh, csh, csh, csh),
             out_specs=(rep, rep, csh),
-        )(state.params, C.x, C.y, C.mask, C.weight, weights, rngs, state.comm)
+        )(state.params, plan.x, plan.y, plan.mask, plan.dweight, plan.pweight,
+          plan.rngs, plan.cohort.comm)
+        upd = _commit_plan(plan, comm=new_comm)
         return state._replace(params=new_params, t=state.t + 1,
-                              rng=rng, comm=new_comm), finalize_metrics(parts, comm_bytes)
+                              rng=rng, **upd), finalize_metrics(parts, comm_bytes)
 
     return round_fn

@@ -237,7 +237,8 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
                     num_clients: int = 64, n: int | None = None,
                     comm_codec: str = "identity", rounds: int = 1,
                     round_chunk: int = 1, aa_impl: str = "auto",
-                    local_impl: str = "auto") -> dict:
+                    local_impl: str = "auto",
+                    cohort_size: int | None = None) -> dict:
     """Compile + execute shard_mapped FL round(s) on the production mesh.
 
     Uses a synthetic logistic-regression problem (the paper's workload) with
@@ -260,6 +261,16 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
     exercise of the round engine. ``aa_impl``/``local_impl`` thread
     AlgoHParams.aa_impl and .local_impl (the sharded runtime resolves both
     to "tree" — this dry-run exercises the automatic fallback).
+
+    ``cohort_size`` samples a C-client cohort each round (AlgoHParams
+    .cohort_size): the compiled round computes on [C, ...] tensors gathered
+    from the K-sized client store — the scale demonstration is
+    ``num_clients=4096, cohort_size=16``, where the round body never
+    materializes a [K, d] float tensor (tests/test_cohort.py). C must divide
+    over the mesh's client shards. At large K the default n grows to keep
+    8 samples per client — fewer and the client-local SVRG full-batch
+    gradient is too noisy for a 16-of-4096 cohort to converge (measured:
+    2/client diverges).
     """
     from repro.comm import make_channel
     from repro.core import AlgoHParams, init_state, run_rounds, solve_reference
@@ -280,11 +291,11 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
     if algo in _NEWTON_ALGOS:
         n = 8192 if n is None else n
         hp = AlgoHParams(eta=1.0, local_epochs=10, aa_impl=aa_impl,
-                         local_impl=local_impl)
+                         local_impl=local_impl, cohort_size=cohort_size)
     else:
-        n = 2048 if n is None else n
+        n = max(2048, 8 * num_clients) if n is None else n
         hp = AlgoHParams(eta=0.5, local_epochs=3, aa_impl=aa_impl,
-                         local_impl=local_impl)
+                         local_impl=local_impl, cohort_size=cohort_size)
     X, y = make_binary_classification("synthetic_small", n=n, seed=0)
     clients = partition(X, y, num_clients=num_clients, scheme="iid")
     problem = make_logreg_problem(clients, gamma=1e-3)
@@ -348,6 +359,7 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
         "chips": 512 if multi_pod else 256,
         "client_shards": num_client_shards(mesh),
         "num_clients": num_clients,
+        "cohort_size": cohort_size,
         "channel": channel.name,
         "round_chunk": round_chunk,
         "aa_impl": aa_impl,
@@ -385,6 +397,16 @@ def main() -> None:
                     help="with --fl-round: execute the rounds through the "
                          "device-resident engine (core/engine.py), this many "
                          "rounds per donated lax.scan jit; 1 = per-round loop")
+    ap.add_argument("--fl-clients", type=int, default=64,
+                    help="with --fl-round: number of clients K (must divide "
+                         "over the mesh's client shards unless --cohort-size "
+                         "is set)")
+    ap.add_argument("--cohort-size", type=int, default=0,
+                    help="with --fl-round: sample a C-client cohort each "
+                         "round; the compiled round computes O(C·d) over the "
+                         "O(K·d) client store (core/client_store.py). The "
+                         "scale demo: --fl-clients 4096 --cohort-size 16. "
+                         "0 = dense full-K rounds")
     ap.add_argument("--aa-impl", choices=("auto", "tree", "pallas"),
                     default="auto",
                     help="with --fl-round: AlgoHParams.aa_impl (the sharded "
@@ -404,10 +426,14 @@ def main() -> None:
         failures = []
         codec_tag = ("" if args.comm_codec == "identity"
                      else f"{args.comm_codec.replace('/', '-').replace(':', '')}__")
-        engine_tag = ""  # distinct artifact names for engine/pallas runs
+        engine_tag = ""  # distinct artifact names for engine/pallas/cohort runs
         # same clamp as dryrun_fl_round: the tag names the EXECUTED chunk
         eff_chunk = max(1, min(args.round_chunk, args.fl_rounds))
-        if eff_chunk > 1:
+        if args.cohort_size:
+            # the cohort tag subsumes the chunk tag (the JSON records
+            # round_chunk either way)
+            engine_tag += f"cohort{args.cohort_size}-of-{args.fl_clients}"
+        elif eff_chunk > 1:
             engine_tag += f"chunk{eff_chunk}"
         if args.aa_impl != "auto":
             engine_tag += ("+" if engine_tag else "") + args.aa_impl
@@ -419,11 +445,13 @@ def main() -> None:
                    f"{'2x16x16' if args.multi_pod else '16x16'}")
             try:
                 res = dryrun_fl_round(algo, args.multi_pod,
+                                      num_clients=args.fl_clients,
                                       comm_codec=args.comm_codec,
                                       rounds=args.fl_rounds,
                                       round_chunk=args.round_chunk,
                                       aa_impl=args.aa_impl,
-                                      local_impl=args.local_impl)
+                                      local_impl=args.local_impl,
+                                      cohort_size=args.cohort_size or None)
                 with open(os.path.join(RESULTS_DIR, tag + ".json"), "w") as f:
                     json.dump(res, f, indent=1)
                 print(f"OK   {tag}: compile={res['compile_s']}s "

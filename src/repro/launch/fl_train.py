@@ -39,8 +39,17 @@ def main() -> None:
     ap.add_argument("--local-epochs", type=int, default=5)
     ap.add_argument("--damping", type=float, default=1.0)
     ap.add_argument("--participation", type=float, default=1.0,
-                    help="fraction of clients active per round (<1.0 draws a "
-                         "Bernoulli subset each round; weights renormalize)")
+                    help="fraction of clients active per round: <1.0 samples "
+                         "a ⌈pK⌉-client cohort each round (weighted, without "
+                         "replacement; weights renormalize) — the round then "
+                         "computes O(C·d) over the O(K·d) client store")
+    ap.add_argument("--cohort-size", type=int, default=0,
+                    help="explicit per-round cohort size C (overrides "
+                         "--participation): each round gathers C sampled "
+                         "clients' data + state rows, computes on [C, ...] "
+                         "tensors only, and scatters updates back — "
+                         "non-sampled clients' state stays bit-frozen. "
+                         "0 = derive from --participation")
     ap.add_argument("--comm-codec", default="identity",
                     help="wire-compression channel spec (repro/comm): "
                          "identity | bf16 | int8[:chunk] | topk[:ratio], "
@@ -91,6 +100,7 @@ def main() -> None:
     from repro.core.anderson import AAConfig
     hp = AlgoHParams(eta=args.eta, local_epochs=args.local_epochs,
                      participation=args.participation,
+                     cohort_size=args.cohort_size or None,
                      aa=AAConfig(damping=args.damping, tikhonov=1e-8),
                      aa_impl=args.aa_impl, local_impl=args.local_impl)
     channel = make_channel(args.comm_codec)

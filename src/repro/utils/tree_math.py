@@ -132,7 +132,12 @@ def tree_size(a: Pytree) -> int:
 
 
 def tree_where(pred, a: Pytree, b: Pytree) -> Pytree:
-    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+    """Leaf-wise select; leaves that are the SAME object in a and b pass
+    through untouched (no select op). ServerState._replace preserves object
+    identity of unchanged fields, so the engine's live/stop select never
+    drags pass-through state — e.g. the frozen [K, ...] client store rows of
+    a cohort round — into the compiled graph."""
+    return jax.tree.map(lambda x, y: x if x is y else jnp.where(pred, x, y), a, b)
 
 
 def tree_random_like(key: jax.Array, a: Pytree, scale: float = 1.0) -> Pytree:

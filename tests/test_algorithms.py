@@ -8,9 +8,11 @@ from repro.core import AlgoHParams, init_state, make_round_fn, run_federated, so
 from repro.core.algorithms import (
     ALGORITHMS,
     COMM_TABLE,
-    _participation_weights,
+    _aggregate,
+    _sample_cohort,
     comm_bytes_per_round,
     comm_floats_per_round,
+    resolve_cohort_size,
 )
 from repro.data import make_binary_classification, partition
 from repro.models.logreg import make_logreg_problem
@@ -199,64 +201,90 @@ class TestMechanics:
 
 
 class TestParticipation:
-    """Dedicated coverage for _participation_weights and the partial-
-    participation round behavior (AlgoHParams.participation < 1.0)."""
+    """Dedicated coverage for the cohort sampler (resolve_cohort_size /
+    _sample_cohort) and the partial-participation round behavior
+    (AlgoHParams.participation < 1.0 / AlgoHParams.cohort_size)."""
 
     def _problem(self, K=10):
         X, y = make_binary_classification("synthetic_small", n=1000, seed=2)
         clients = partition(X, y, num_clients=K, scheme="imbalance")
         return make_logreg_problem(clients, gamma=1e-3)
 
-    def test_full_participation_returns_data_weights(self):
+    def test_resolve_cohort_size_routing(self):
+        # full participation, no explicit cohort → dense path
+        assert resolve_cohort_size(AlgoHParams(participation=1.0), 10) is None
+        # participation < 1 derives C = max(1, round(p·K))
+        assert resolve_cohort_size(AlgoHParams(participation=0.5), 10) == 5
+        assert resolve_cohort_size(AlgoHParams(participation=1e-9), 10) == 1
+        # explicit cohort_size wins, even at C == K
+        hp = AlgoHParams(participation=0.5, cohort_size=10)
+        assert resolve_cohort_size(hp, 10) == 10
+        with pytest.raises(ValueError):
+            resolve_cohort_size(AlgoHParams(cohort_size=11), 10)
+        with pytest.raises(ValueError):
+            resolve_cohort_size(AlgoHParams(cohort_size=0), 10)
+
+    def test_sample_cohort_renormalizes(self):
+        """The drawn indices are unique and the cohort weights sum to 1, so
+        the delta-form aggregation stays exact under sampling."""
         prob = self._problem()
-        hp = AlgoHParams(participation=1.0)
-        w = _participation_weights(prob, hp, jax.random.PRNGKey(0))
-        np.testing.assert_array_equal(np.asarray(w),
+        for seed in range(5):
+            idx, cw = _sample_cohort(prob.clients.weight, 5,
+                                     jax.random.PRNGKey(seed))
+            idx, cw = np.asarray(idx), np.asarray(cw)
+            assert len(np.unique(idx)) == 5
+            np.testing.assert_allclose(cw.sum(), 1.0, rtol=1e-6)
+
+    def test_sample_cohort_identity_at_full_size(self):
+        """C == K short-circuits to arange + the RAW data weights — the
+        bit-identity anchor of the C=K parity tests (test_cohort.py)."""
+        prob = self._problem()
+        idx, cw = _sample_cohort(prob.clients.weight, 10, jax.random.PRNGKey(0))
+        np.testing.assert_array_equal(np.asarray(idx), np.arange(10))
+        np.testing.assert_array_equal(np.asarray(cw),
                                       np.asarray(prob.clients.weight))
 
-    def test_active_weights_renormalize_to_one(self):
-        """Whenever at least one client is drawn, the active weights must sum
-        to 1 and inactive clients must get exactly 0."""
+    def test_sampling_prefers_large_clients(self):
+        """The draw is data-size weighted: under the imbalance partition the
+        largest client must appear in far more cohorts than the smallest."""
         prob = self._problem()
-        hp = AlgoHParams(participation=0.5)
-        drew_partial = False
-        for seed in range(20):
-            w = np.asarray(_participation_weights(
-                prob, hp, jax.random.PRNGKey(seed)))
-            active = w > 0
-            if 0 < active.sum() < prob.clients.num_clients:
-                drew_partial = True
-                np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
-        assert drew_partial      # 20 seeds at p=0.5, K=10: essentially sure
+        w = np.asarray(prob.clients.weight)
+        big, small = int(np.argmax(w)), int(np.argmin(w))
+        hits = np.zeros(10)
+        for seed in range(200):
+            idx, _ = _sample_cohort(prob.clients.weight, 3,
+                                    jax.random.PRNGKey(seed))
+            hits[np.asarray(idx)] += 1
+        assert hits[big] > 2 * hits[small]
 
-    def test_zero_active_clients_yields_zero_weights(self):
-        prob = self._problem()
-        hp = AlgoHParams(participation=1e-9)   # Bernoulli(1e-9): nobody drawn
-        w = np.asarray(_participation_weights(prob, hp, jax.random.PRNGKey(0)))
-        np.testing.assert_array_equal(w, 0.0)
+    def test_aggregate_zero_weights_is_no_op(self):
+        """The delta-form aggregation degrades to keeping the anchor — not a
+        zeroed model — if every weight is zero."""
+        anchor = jax.numpy.full((7,), 0.37)
+        stacked = jax.random.normal(jax.random.PRNGKey(0), (4, 7))
+        out = _aggregate(jax.numpy.zeros(4), stacked, anchor=anchor)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(anchor))
 
     @pytest.mark.parametrize("algo", ["fedosaa_svrg", "scaffold", "giant",
                                       "dane"])
-    def test_zero_active_round_keeps_model_fixed(self, algo):
-        """The delta-form aggregation degrades to a no-op — not a zeroed
-        model — when a partial-participation round draws no clients."""
+    def test_singleton_cohort_round_is_finite(self, algo):
+        """Vanishing participation now draws a 1-client cohort (never an
+        empty round): the model still takes a finite, well-defined step."""
         prob = self._problem(K=8)
         hp = AlgoHParams(eta=0.5, local_epochs=2, participation=1e-9,
                          dane_newton_iters=1, dane_cg_iters=3)
         state = init_state(prob, jax.random.PRNGKey(0), hp)
         state = state._replace(params=state.params + 0.37)  # off-origin start
         new_state, m = jax.jit(make_round_fn(algo, prob, hp))(state)
-        np.testing.assert_allclose(np.asarray(new_state.params),
-                                   np.asarray(state.params), rtol=1e-6,
-                                   err_msg=algo)
+        assert np.all(np.isfinite(np.asarray(new_state.params))), algo
         assert np.isfinite(float(m.loss))
 
-    def test_vmap_and_sharded_draw_identical_active_sets(self):
-        """The participation draw happens in the shared prologue: with the
-        same rng both runtimes pick the same clients, so full histories agree
-        (non-AA algorithm — multi-round AA comparisons drift by amplified
-        ulps, see test_sharded_runtime.py). Complements that module's
-        per-round test_partial_participation."""
+    def test_vmap_and_sharded_draw_identical_cohorts(self):
+        """The cohort draw happens in the shared prologue: with the same rng
+        both runtimes pick the same clients, so full histories agree (non-AA
+        algorithm — multi-round AA comparisons drift by amplified ulps, see
+        test_sharded_runtime.py). Complements that module's per-round
+        test_partial_participation."""
         prob = self._problem(K=8)
         hp = AlgoHParams(eta=0.5, local_epochs=3, participation=0.5)
         hv = run_federated(prob, "fedsvrg", hp, 4, rng=3)

@@ -1,0 +1,414 @@
+"""Cohort-resident client state (core/client_store.py + the cohort plan in
+core/algorithms.py).
+
+Four contracts, matching the design's acceptance criteria:
+
+  1. C = K with an explicit cohort_size is BIT-IDENTICAL to the dense path
+     on both runtimes — the cohort machinery is a pure reorganization of the
+     same arithmetic (TestIdentityCohortParity).
+  2. A sampled cohort C < K computes exactly what the dense round would with
+     the cohort's renormalized weights masked onto the full client axis
+     (rtol 1e-6 in f64 — TestSampledCohortVsMaskedDense).
+  3. Non-sampled clients are bit-frozen: their comm buffers (EF residuals,
+     diff-coding references) and control variates keep their exact bits
+     across rounds they sit out (TestFrozenClientState — the regression for
+     the historical wart where inactive clients still advanced their
+     buffers).
+  4. The compiled cohort round touches O(C·d), not O(K·d): no equation in
+     the jaxpr of a K=4096 / C=16 round — or of the engine's donated scan
+     chunk — produces a float tensor with leading dimension K
+     (TestNoDenseComputeInCohortRound).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import make_channel
+from repro.core import (
+    AlgoHParams,
+    ClientStateStore,
+    init_state,
+    make_chunk_runner,
+    make_round_fn,
+    make_sharded_round_fn,
+    run_rounds,
+)
+from repro.core.algorithms import (
+    CrossClientReduce,
+    _sample_cohort,
+    _scaffold_round_core,
+    _svrg_round_core,
+)
+from repro.core.anderson import AAConfig
+from repro.core.client_store import gather_rows, scatter_rows
+from repro.data import make_binary_classification, partition
+from repro.launch.mesh import make_host_mesh
+from repro.models.logreg import make_logreg_problem
+
+
+@pytest.fixture(scope="module")
+def setup():
+    X, y = make_binary_classification("synthetic_small", n=800, seed=0)
+    clients = partition(X, y, num_clients=8, scheme="imbalance")
+    prob = make_logreg_problem(clients, gamma=1e-3)
+    return prob, make_host_mesh()
+
+
+@pytest.fixture
+def x64():
+    was = jax.config.read("jax_enable_x64")
+    jax.config.update("jax_enable_x64", True)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_enable_x64", was)
+
+
+def leaves_bitwise_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        if np.issubdtype(x.dtype, np.floating):
+            np.testing.assert_array_equal(x, y)  # NaN-tolerant via ==-bits?
+        else:
+            np.testing.assert_array_equal(x, y)
+
+
+def assert_state_bitwise(sa, sb, what=""):
+    for field in sa._fields:
+        a, b = getattr(sa, field), getattr(sb, field)
+        assert (a is None) == (b is None), f"{what} {field}"
+        if a is None:
+            continue
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            x, y = np.asarray(x), np.asarray(y)
+            if np.issubdtype(x.dtype, np.floating):
+                assert np.array_equal(x, y, equal_nan=True), f"{what} {field}"
+            else:
+                assert np.array_equal(x, y), f"{what} {field}"
+
+
+class TestClientStateStore:
+    def _tree(self, K=6):
+        k = jax.random.PRNGKey(0)
+        return {
+            "a": jax.random.normal(k, (K, 5)),
+            "b": {"c": jax.random.normal(jax.random.fold_in(k, 1), (K, 2, 3))},
+        }
+
+    def test_gather_scatter_roundtrip(self):
+        tree = self._tree()
+        idx = jnp.asarray([4, 1, 3])
+        rows = gather_rows(tree, idx)
+        assert jax.tree.leaves(rows)[0].shape[0] == 3
+        back = scatter_rows(tree, idx, rows)
+        leaves_bitwise_equal(tree, back)
+
+    def test_scatter_freezes_other_rows(self):
+        tree = self._tree()
+        idx = jnp.asarray([0, 5])
+        rows = jax.tree.map(lambda r: r + 100.0, gather_rows(tree, idx))
+        out = scatter_rows(tree, idx, rows)
+        for orig, new in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(orig)[1:5],
+                                          np.asarray(new)[1:5])
+            np.testing.assert_array_equal(np.asarray(new)[np.asarray(idx)],
+                                          np.asarray(orig)[np.asarray(idx)] + 100.0)
+
+    def test_none_fields_pass_through(self):
+        store = ClientStateStore(c_k=self._tree(), comm=None)
+        idx = jnp.asarray([2, 0])
+        cohort = store.gather(idx)
+        assert cohort.comm is None and cohort.hist_s is None
+        # a field None in the UPDATE is returned as the same object — no
+        # scatter op for state the round never advanced
+        out = store.scatter(idx, ClientStateStore(c_k=None, comm=None))
+        assert out.c_k is store.c_k
+
+    def test_num_clients(self):
+        store = ClientStateStore(c_k=self._tree(K=7))
+        assert store.num_clients == 7
+        with pytest.raises(ValueError):
+            _ = ClientStateStore().num_clients
+
+
+class TestIdentityCohortParity:
+    """cohort_size == K runs the full plan/commit machinery yet stays
+    bit-identical to the dense path — state AND metrics, both runtimes,
+    including carried AA history and int8 comm state."""
+
+    CONFIGS = [
+        ("fedosaa_svrg", None, {}),
+        ("fedosaa_scaffold", "int8", {}),
+        ("fedosaa_svrg", "int8", {"carry_history": 2}),
+    ]
+
+    @pytest.mark.parametrize("algo,chan,extra", CONFIGS)
+    @pytest.mark.parametrize("runtime", ["vmap", "sharded"])
+    def test_c_equals_k_bitwise(self, setup, algo, chan, extra, runtime):
+        prob, mesh = setup
+        K = prob.clients.num_clients
+        hp = AlgoHParams(eta=0.5, local_epochs=3, **extra)
+        hpk = dataclasses.replace(hp, cohort_size=K)
+        if runtime == "vmap":
+            fd = jax.jit(make_round_fn(algo, prob, hp, chan))
+            fk = jax.jit(make_round_fn(algo, prob, hpk, chan))
+        else:
+            fd = jax.jit(make_sharded_round_fn(algo, prob, hp, mesh, channel=chan))
+            fk = jax.jit(make_sharded_round_fn(algo, prob, hpk, mesh, channel=chan))
+        sd = init_state(prob, jax.random.PRNGKey(0), hp, chan, algo)
+        sk = init_state(prob, jax.random.PRNGKey(0), hpk, chan, algo)
+        for t in range(3):
+            sd, md = fd(sd)
+            sk, mk = fk(sk)
+            assert_state_bitwise(sd, sk, what=f"{algo} round {t}")
+            for f, a, b in zip(md._fields, md, mk):
+                a, b = np.asarray(a), np.asarray(b)
+                assert np.array_equal(a, b, equal_nan=True), f"{algo} {f}"
+
+
+class TestSampledCohortVsMaskedDense:
+    """A C < K cohort round == the dense round core fed the cohort's
+    renormalized weights masked onto the full client axis (zero weight for
+    non-sampled clients), on the same drawn client set, at rtol 1e-6.
+
+    Runs in f64: the ill-conditioned AA Gram solve amplifies the fusion-level
+    ulp differences between the gathered [C,...] and the masked [K,...]
+    graphs far past 1e-6 in f32."""
+
+    C = 4
+
+    def _setup64(self):
+        X, y = make_binary_classification("synthetic_small", n=800, seed=0)
+        clients = partition(X, y, num_clients=8, scheme="imbalance")
+        return make_logreg_problem(clients, gamma=1e-3, dtype=jnp.float64)
+
+    def _hp(self, **extra):
+        return AlgoHParams(eta=0.5, local_epochs=3, aa_impl="tree",
+                           local_impl="tree", aa=AAConfig(tikhonov=1e-8),
+                           cohort_size=self.C, **extra)
+
+    def _replay_prologue(self, prob, state):
+        """The exact draw the cohort round makes, plus its masked-dense
+        image: zero weights off-cohort, the renormalized weights at idx."""
+        _, part_rng, cl_rng = jax.random.split(state.rng, 3)
+        rngs_K = jax.random.split(cl_rng, prob.clients.num_clients)
+        idx, cw = _sample_cohort(prob.clients.weight, self.C, part_rng)
+        wm = jnp.zeros(prob.clients.num_clients,
+                       cw.dtype).at[idx].set(cw)
+        return np.asarray(idx), wm, rngs_K
+
+    def test_svrg_matches_masked_dense(self, x64):
+        prob = self._setup64()
+        hp = self._hp()
+        state = init_state(prob, jax.random.PRNGKey(0), hp, None,
+                           "fedosaa_svrg")
+        new_state, m = jax.jit(make_round_fn("fedosaa_svrg", prob, hp))(state)
+
+        idx, wm, rngs_K = self._replay_prologue(prob, state)
+        R = CrossClientReduce(make_channel(None))
+        Cl = prob.clients
+        ref_params, ref_parts, _, _, _ = _svrg_round_core(
+            prob, hp, True, R, state.params, Cl.x, Cl.y, Cl.mask,
+            wm, wm, rngs_K)
+        np.testing.assert_allclose(np.asarray(new_state.params),
+                                   np.asarray(ref_params), rtol=1e-6)
+        np.testing.assert_allclose(float(m.loss), float(ref_parts.loss),
+                                   rtol=1e-6)
+
+    def test_scaffold_matches_masked_dense(self, x64):
+        prob = self._setup64()
+        hp = self._hp()
+        state = init_state(prob, jax.random.PRNGKey(0), hp, None,
+                           "fedosaa_scaffold")
+        rf = jax.jit(make_round_fn("fedosaa_scaffold", prob, hp))
+        new_state, m = rf(state)
+
+        idx, wm, rngs_K = self._replay_prologue(prob, state)
+        R = CrossClientReduce(make_channel(None))
+        Cl = prob.clients
+        ref_params, ref_c, ref_c_k, ref_parts, _ = _scaffold_round_core(
+            prob, hp, True, R, state.params, state.c, Cl.x, Cl.y, Cl.mask,
+            state.c_k, wm, wm, rngs_K)
+        np.testing.assert_allclose(np.asarray(new_state.params),
+                                   np.asarray(ref_params), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(new_state.c),
+                                   np.asarray(ref_c), rtol=1e-6, atol=1e-12)
+        # the cohort's control-variate rows match the dense update at idx;
+        # rows OFF the cohort differ by design (frozen vs wart-advanced)
+        np.testing.assert_allclose(np.asarray(new_state.c_k)[idx],
+                                   np.asarray(ref_c_k)[idx], rtol=1e-6,
+                                   atol=1e-12)
+        np.testing.assert_allclose(float(m.loss), float(ref_parts.loss),
+                                   rtol=1e-6)
+
+
+class TestFrozenClientState:
+    """Non-sampled clients keep their state bit-frozen across rounds — the
+    regression test for the historical partial-participation wart where
+    every client advanced its EF/diff-coding comm buffers with zero weight."""
+
+    def _run(self, algo, setup, rounds=2):
+        prob, _ = setup
+        hp = AlgoHParams(eta=0.5, local_epochs=3, participation=0.5)
+        rf = jax.jit(make_round_fn(algo, prob, hp, "int8"))
+        states = [init_state(prob, jax.random.PRNGKey(0), hp, "int8", algo)]
+        cohorts = []
+        for _ in range(rounds):
+            _, part_rng, _ = jax.random.split(states[-1].rng, 3)
+            idx, _ = _sample_cohort(prob.clients.weight, 4, part_rng)
+            cohorts.append(np.asarray(idx))
+            s, _ = rf(states[-1])
+            states.append(s)
+        return states, cohorts
+
+    @staticmethod
+    def _rows(tree, rows):
+        return [np.asarray(l)[rows] for l in jax.tree.leaves(tree)]
+
+    def test_comm_rows_frozen(self, setup):
+        states, cohorts = self._run("fedosaa_svrg", setup)
+        K = 8
+        sampled_any = np.union1d(cohorts[0], cohorts[1])
+        never = np.setdiff1d(np.arange(K), sampled_any)
+        only_r1 = np.setdiff1d(cohorts[0], cohorts[1])
+        assert len(never) > 0 or len(only_r1) > 0  # K=8, C=4: essentially sure
+        # rows never sampled: still exactly the init bits after 2 rounds
+        for a, b in zip(self._rows(states[0].comm, never),
+                        self._rows(states[2].comm, never)):
+            np.testing.assert_array_equal(a, b)
+        # rows sampled only in round 1: untouched by round 2
+        for a, b in zip(self._rows(states[1].comm, only_r1),
+                        self._rows(states[2].comm, only_r1)):
+            np.testing.assert_array_equal(a, b)
+        # sanity: round 1's cohort rows DID advance from init
+        moved = any(
+            not np.array_equal(a, b)
+            for a, b in zip(self._rows(states[0].comm, cohorts[0]),
+                            self._rows(states[1].comm, cohorts[0]))
+        )
+        assert moved
+
+    def test_control_variate_rows_frozen(self, setup):
+        states, cohorts = self._run("fedosaa_scaffold", setup)
+        never = np.setdiff1d(np.arange(8), np.union1d(cohorts[0], cohorts[1]))
+        only_r1 = np.setdiff1d(cohorts[0], cohorts[1])
+        for a, b in zip(self._rows(states[0].c_k, never),
+                        self._rows(states[2].c_k, never)):
+            np.testing.assert_array_equal(a, b)
+        for a, b in zip(self._rows(states[1].c_k, only_r1),
+                        self._rows(states[2].c_k, only_r1)):
+            np.testing.assert_array_equal(a, b)
+        moved = any(
+            not np.array_equal(a, b)
+            for a, b in zip(self._rows(states[0].c_k, cohorts[0]),
+                            self._rows(states[1].c_k, cohorts[0]))
+        )
+        assert moved
+
+
+# ---------------------------------------------------------------------------
+# O(C·d) compute: jaxpr shape assertion + a real K=4096 engine run
+# ---------------------------------------------------------------------------
+
+def _iter_subjaxprs(params):
+    """Sub-jaxprs referenced by an equation's params (scan/pjit/cond/...)."""
+    for v in params.values():
+        vs = v if isinstance(v, (tuple, list)) else (v,)
+        for w in vs:
+            if hasattr(w, "jaxpr") and hasattr(w.jaxpr, "eqns"):  # ClosedJaxpr
+                yield w.jaxpr
+            elif hasattr(w, "eqns"):  # Jaxpr
+                yield w
+
+
+def _dense_float_eqns(jaxpr, K, found):
+    """Collect leaf equations producing a float tensor with ndim >= 2 and
+    leading dim K. Container equations (those carrying sub-jaxprs — scan,
+    pjit, cond) are not themselves flagged: a [K, ...] scan carry that merely
+    passes state through is not compute; their bodies are recursed into."""
+    for eqn in jaxpr.eqns:
+        subs = list(_iter_subjaxprs(eqn.params))
+        if subs:
+            for s in subs:
+                _dense_float_eqns(s, K, found)
+            continue
+        for v in eqn.outvars:
+            aval = v.aval
+            shape = getattr(aval, "shape", ())
+            if (len(shape) >= 2 and shape[0] == K
+                    and jnp.issubdtype(aval.dtype, jnp.floating)):
+                found.append((eqn.primitive.name, shape))
+
+
+class TestNoDenseComputeInCohortRound:
+    """K=4096, C=16: the compiled round body must not materialize any
+    [K, d] float tensor — the acceptance criterion that the cohort refactor
+    actually changed the compute scaling, not just the API."""
+
+    K, C = 4096, 16
+
+    def _problem(self):
+        # 8 samples per client: enough for the client-local SVRG full-batch
+        # gradient to be informative (2/client diverges at this cohort ratio)
+        X, y = make_binary_classification("synthetic_small", n=32768, seed=0)
+        clients = partition(X, y, num_clients=self.K, scheme="iid")
+        return make_logreg_problem(clients, gamma=1e-3)
+
+    def _hp(self):
+        return AlgoHParams(eta=0.5, local_epochs=2, cohort_size=self.C)
+
+    def test_round_jaxpr_has_no_dense_float_eqn(self):
+        prob = self._problem()
+        hp = self._hp()
+        rf = make_round_fn("fedosaa_svrg", prob, hp)
+        state = init_state(prob, jax.random.PRNGKey(0), hp, None,
+                           "fedosaa_svrg")
+        jaxpr = jax.make_jaxpr(rf)(state)
+        found = []
+        _dense_float_eqns(jaxpr.jaxpr, self.K, found)
+        assert not found, f"dense [K, ...] float equations in round: {found}"
+
+    def test_engine_chunk_jaxpr_has_no_dense_float_eqn(self):
+        """The donated scan chunk keeps the frozen store rows out of the
+        graph too (tree_where passes untouched fields by object identity)."""
+        prob = self._problem()
+        hp = self._hp()
+        rf = make_round_fn("fedosaa_svrg", prob, hp)
+        state = init_state(prob, jax.random.PRNGKey(0), hp, None,
+                           "fedosaa_svrg")
+        runner = make_chunk_runner(rf, 2, donate=False)
+        jaxpr = jax.make_jaxpr(runner)(state, jnp.int32(2))
+        found = []
+        _dense_float_eqns(jaxpr.jaxpr, self.K, found)
+        assert not found, f"dense [K, ...] float equations in chunk: {found}"
+
+    def test_k4096_engine_run_converges(self):
+        """The acceptance run: K=4096, C=16 FedOSAA-SVRG through the sharded
+        runtime's engine path on the host mesh. Judged on the GLOBAL
+        (all-K, data-weighted) loss — the per-round trace loss is the
+        cohort-weighted loss of that round's 16-client draw and too noisy to
+        order."""
+        from repro.core.algorithms import _stack_losses
+
+        prob = self._problem()
+        hp = self._hp()
+        mesh = make_host_mesh()
+        rf = make_sharded_round_fn("fedosaa_svrg", prob, hp, mesh)
+        state = init_state(prob, jax.random.PRNGKey(0), hp, None,
+                           "fedosaa_svrg")
+
+        def global_loss(w):
+            Cl = prob.clients
+            l = _stack_losses(prob, w, Cl.x, Cl.y, Cl.mask)
+            return float(jnp.sum(Cl.weight * l))
+
+        l0 = global_loss(state.params)
+        state, trace = run_rounds(rf, state, 8, chunk=4)
+        assert trace.num_rounds == 8
+        assert np.all(np.isfinite(trace.loss))
+        assert global_loss(state.params) < 0.7 * l0
