@@ -1,0 +1,113 @@
+#!/usr/bin/env python
+"""Validate a telemetry JSONL file emitted by ``fl_train --metrics-out``
+(or any JsonlSink — repro/obs/sinks.py).
+
+Checks the versioned row contract the sink promises:
+
+  * every line is strict JSON (no NaN/Infinity literals — non-finite values
+    must have been serialized as null);
+  * line 1 is a header row (kind="header") carrying the schema version,
+    field list, and run metadata (algo/runtime/channel/uplink_bytes);
+  * the last line is a footer row (kind="footer") whose "rounds" equals the
+    number of round rows;
+  * every row in between is kind="round" with all ROW_FIELDS present
+    (numeric or null), matching schema version, and strictly increasing
+    contiguous "round" indices from the header's start_round;
+  * cumulative columns (comm_bytes_total, wall_time_s) are non-decreasing.
+
+Exit 0 and a one-line summary on success; exit 1 with the first violation
+otherwise.
+
+  PYTHONPATH=src python scripts/check_metrics_jsonl.py metrics.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.obs.sinks import ROW_FIELDS, SCHEMA_VERSION  # noqa: E402
+
+
+def fail(lineno: int, msg: str) -> None:
+    print(f"check_metrics_jsonl: line {lineno}: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_file(path: str) -> dict:
+    with open(path) as f:
+        lines = f.read().splitlines()
+    if len(lines) < 2:
+        fail(len(lines), "need at least a header and a footer row")
+
+    rows = []
+    for i, line in enumerate(lines, 1):
+        try:
+            # strict JSON: the nan->null sanitization is part of the contract
+            rows.append(json.loads(line, parse_constant=lambda c: fail(
+                i, f"non-strict JSON constant {c}")))
+        except json.JSONDecodeError as e:
+            fail(i, f"invalid JSON: {e}")
+
+    header, body, footer = rows[0], rows[1:-1], rows[-1]
+    if header.get("kind") != "header":
+        fail(1, f"first row kind={header.get('kind')!r}, expected 'header'")
+    if header.get("v") != SCHEMA_VERSION:
+        fail(1, f"schema version {header.get('v')!r} != {SCHEMA_VERSION}")
+    if header.get("fields") != list(ROW_FIELDS):
+        fail(1, f"header fields {header.get('fields')} != {list(ROW_FIELDS)}")
+    for key in ("algo", "runtime", "channel", "num_clients", "uplink_bytes"):
+        if key not in header:
+            fail(1, f"header missing {key!r}")
+    if footer.get("kind") != "footer":
+        fail(len(lines), f"last row kind={footer.get('kind')!r}, "
+             "expected 'footer'")
+
+    expected_round = int(header.get("start_round", 0))
+    prev = {"comm_bytes_total": float("-inf"), "wall_time_s": float("-inf")}
+    for off, row in enumerate(body):
+        lineno = off + 2
+        if row.get("kind") != "round":
+            fail(lineno, f"kind={row.get('kind')!r}, expected 'round'")
+        if row.get("v") != SCHEMA_VERSION:
+            fail(lineno, f"schema version {row.get('v')!r}")
+        if row.get("round") != expected_round:
+            fail(lineno, f"round={row.get('round')}, expected "
+                 f"{expected_round} (contiguous from start_round)")
+        expected_round += 1
+        for field in ROW_FIELDS:
+            if field not in row:
+                fail(lineno, f"missing field {field!r}")
+            v = row[field]
+            if v is not None and not isinstance(v, (int, float)):
+                fail(lineno, f"field {field!r} is {type(v).__name__}, "
+                     "expected number or null")
+        for field in ("comm_bytes_total", "wall_time_s"):
+            v = row[field]
+            if v is not None:
+                if v < prev[field]:
+                    fail(lineno, f"{field} decreased: {v} < {prev[field]}")
+                prev[field] = v
+
+    if footer.get("rounds") != len(body):
+        fail(len(lines), f"footer rounds={footer.get('rounds')} but file "
+             f"has {len(body)} round rows")
+    return {"rounds": len(body), "algo": header.get("algo"),
+            "stopped": footer.get("stopped"),
+            "alarms": len(footer.get("alarms", []))}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+")
+    args = ap.parse_args()
+    for path in args.paths:
+        info = check_file(path)
+        print(f"{path}: OK — {info['rounds']} rounds of {info['algo']}, "
+              f"stopped={info['stopped']}, alarms={info['alarms']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -56,3 +56,15 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.ext_cohort --smok
 # to attach upstream and to re-check on jaxlib upgrades. Not gated on a
 # threshold (jaxlib-version dependent).
 python scripts/repro_thunk_runtime.py --smoke
+
+# Telemetry smoke (repro/obs): a chunked engine run streams per-round rows
+# to a JSONL sink (with the default health monitors attached), then the
+# schema validator checks the versioned header/round/footer contract — so a
+# row-schema or sink regression fails CI before any long run depends on the
+# telemetry. Scratch artifact only (gitignored).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.fl_train \
+    --arch smollm-135m --reduced --algo fedosaa_svrg --rounds 6 \
+    --clients 4 --round-chunk 3 \
+    --metrics-out benchmarks/results/metrics_smoke.jsonl
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/check_metrics_jsonl.py \
+    benchmarks/results/metrics_smoke.jsonl

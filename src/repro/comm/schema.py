@@ -77,6 +77,21 @@ def validate_schema(schema: "tuple[UplinkSpec, ...]") -> "tuple[UplinkSpec, ...]
     return schema
 
 
+def uplink_byte_breakdown(channel, schema: "tuple[UplinkSpec, ...]",
+                          params: Pytree) -> "dict[str, float]":
+    """Per-UplinkSpec wire bytes for one round of ``schema`` under ``channel``.
+
+    ``{tag: bytes}`` in round order — each spec charged its codec-exact
+    per-client uplink bytes at its kind's rate, exactly the terms
+    ``comm_bytes_per_round`` (core/algorithms.py) sums into its total. This
+    is the byte attribution the telemetry header row publishes (repro/obs):
+    host-side and static per run, so it costs the compiled round nothing.
+    """
+    validate_schema(schema)
+    return {spec.tag: float(channel.uplink_bytes(params, kind=spec.kind))
+            for spec in schema}
+
+
 def init_schema_state(channel, schema: "tuple[UplinkSpec, ...]",
                       params: Pytree, K: int) -> "Pytree | None":
     """Allocate the per-client comm buffers ``schema`` needs under ``channel``.
@@ -105,5 +120,6 @@ __all__ = [
     "UPLINK_KINDS",
     "UplinkSpec",
     "init_schema_state",
+    "uplink_byte_breakdown",
     "validate_schema",
 ]

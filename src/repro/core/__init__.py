@@ -9,6 +9,7 @@ from repro.core.anderson import (  # noqa: F401
     trajectory_to_sy,
 )
 from repro.core.engine import (  # noqa: F401
+    METRIC_FIELDS,
     RoundTrace,
     make_chunk_runner,
     run_rounds,

@@ -46,6 +46,7 @@ from repro.comm.schema import (
     GRAD_UPLINK,
     UplinkSpec,
     init_schema_state,
+    uplink_byte_breakdown,
     validate_schema,
 )
 from repro.core.anderson import (
@@ -167,8 +168,8 @@ def comm_bytes_per_round(algo: str, params: Pytree,
     counters exactly: bytes == 4 × comm_floats_per_round.
     """
     channel = make_channel(channel)
-    total = sum(channel.uplink_bytes(params, kind=spec.kind)
-                for spec in UPLINK_SCHEMAS[algo])
+    total = sum(
+        uplink_byte_breakdown(channel, UPLINK_SCHEMAS[algo], params).values())
     if line_search and algo in ("giant", "newton_gmres"):
         total += channel.downlink_bytes(params)
     return float(total)
@@ -242,6 +243,11 @@ class RoundMetrics(NamedTuple):
     grad_norm: jax.Array     # ‖∇f(w^t)‖ (or control-variate norm for scaffold)
     theta_mean: jax.Array    # mean AA optimization gain across clients (nan if n/a)
     gram_cond_max: jax.Array # worst AA Gram conditioning (nan if n/a)
+    gram_cond_mean: jax.Array  # mean AA Gram conditioning (nan if n/a)
+    aa_used_min: jax.Array   # fewest AA columns surviving filtering on any
+                             # client (nan if n/a; 0 = filtering collapse)
+    cohort_ess: jax.Array    # effective sample size 1/Σw² of the round's
+                             # aggregation weights (== C for a uniform cohort)
     comm_bytes: jax.Array    # bytes on the wire this round (codec-exact;
                              # == 4 × Table 1 float units on the fp32 channel)
 
@@ -392,7 +398,8 @@ def _local_trajectory(
             r_hist, r_L)
         return w_traj, r_traj
 
-    _, (w_traj, r_traj) = jax.lax.scan(step, w0, rngs)
+    with jax.named_scope("fl.local_trajectory"):
+        _, (w_traj, r_traj) = jax.lax.scan(step, w0, rngs)
     return w_traj, r_traj
 
 
@@ -434,9 +441,10 @@ def _fused_trajectory(
     u = tm.tree_zeros_like(w0) if corr is None else corr
     if anchor_scale:
         u = u - design.reg * w0
-    return fused_trajectory(
-        x, y, mask, w0, u, link=design.link, reg=design.reg, eta=hp.eta,
-        anchor_scale=anchor_scale, steps=steps)
+    with jax.named_scope("fl.local_trajectory"):
+        return fused_trajectory(
+            x, y, mask, w0, u, link=design.link, reg=design.reg, eta=hp.eta,
+            anchor_scale=anchor_scale, steps=steps)
 
 
 def _make_residual_fn(
@@ -715,7 +723,8 @@ def _plan_round(problem: FLProblem, csize: int | None, state: ServerState,
     if csize is None:
         return CohortPlan(None, C.x, C.y, C.mask, C.weight, C.weight, rngs_K,
                           store, store)
-    idx, cw = _sample_cohort(C.weight, csize, part_rng)
+    with jax.named_scope("fl.cohort_plan"):
+        idx, cw = _sample_cohort(C.weight, csize, part_rng)
     if csize >= C.num_clients:
         # identity cohort (C == K): gathers at arange are value-identical but
         # perturb XLA fusion by an ulp, which the ill-conditioned AA Gram
@@ -723,8 +732,9 @@ def _plan_round(problem: FLProblem, csize: int | None, state: ServerState,
         # scatter epilogue still runs (an exact write of the computed rows,
         # bit-safe), keeping the commit machinery under test.
         return CohortPlan(idx, C.x, C.y, C.mask, cw, cw, rngs_K, store, store)
-    return CohortPlan(idx, C.x[idx], C.y[idx], C.mask[idx], cw, cw,
-                      rngs_K[idx], store, store.gather(idx))
+    with jax.named_scope("fl.cohort_gather"):
+        return CohortPlan(idx, C.x[idx], C.y[idx], C.mask[idx], cw, cw,
+                          rngs_K[idx], store, store.gather(idx))
 
 
 def _commit_plan(plan: CohortPlan, **updates) -> dict:
@@ -739,7 +749,8 @@ def _commit_plan(plan: CohortPlan, **updates) -> dict:
     rows = ClientStateStore(
         c_k=updates.get("c_k"), hist_s=updates.get("hist_s"),
         hist_y=updates.get("hist_y"), comm=updates.get("comm"))
-    new = plan.store.scatter(plan.idx, rows)
+    with jax.named_scope("fl.scatter"):
+        new = plan.store.scatter(plan.idx, rows)
     return {k: getattr(new, k) for k in updates}
 
 
@@ -790,6 +801,15 @@ class CrossClientReduce:
         """Max of the non-nan entries of a per-client vector; nan if none."""
         return jnp.nanmax(x)
 
+    def nanmin(self, x: jax.Array) -> jax.Array:
+        """Min of the non-nan entries of a per-client vector; nan if none."""
+        return jnp.nanmin(x)
+
+    def ess(self, weights: jax.Array) -> jax.Array:
+        """Effective sample size 1/Σw² of the per-client reduction weights
+        (== C for a uniform C-client cohort; 1 when one client dominates)."""
+        return 1.0 / jnp.maximum(jnp.sum(weights * weights), 1e-30)
+
     # ---- the wire ----------------------------------------------------------
     def uplink(self, stacked: Pytree, rngs: jax.Array, spec: UplinkSpec,
                anchor: Pytree | None = None, state: Pytree | None = None):
@@ -839,7 +859,8 @@ class CrossClientReduce:
                 dec = tm.tree_add(dec, anchor)
             return dec, new_e, new_h
 
-        dec, new_e, new_h = jax.vmap(one)(stacked, rngs, ef, ref)
+        with jax.named_scope("fl.uplink"):
+            dec, new_e, new_h = jax.vmap(one)(stacked, rngs, ef, ref)
         if not sub:
             return dec, state
         new_sub = {}
@@ -877,6 +898,9 @@ class MetricParts(NamedTuple):
     grad_norm: jax.Array
     theta_mean: jax.Array
     gram_cond_max: jax.Array
+    gram_cond_mean: jax.Array
+    aa_used_min: jax.Array
+    cohort_ess: jax.Array
 
 
 def _stack_losses(problem: FLProblem, w: Pytree, x, y, mask) -> jax.Array:
@@ -898,13 +922,22 @@ def _nan_stats(k: int) -> AAStats:
     )
 
 
-def _metric_parts(problem, R, w, g, stats, x, y, mask, dweight) -> MetricParts:
-    """f(w), ‖g‖ and AA health stats, reduced across every client."""
+def _metric_parts(problem, R, w, g, stats, x, y, mask, dweight,
+                  pweight) -> MetricParts:
+    """f(w), ‖g‖ and AA/cohort health stats, reduced across every client."""
+    # used_columns is 0 (not nan) when a client ran no AA step; key the
+    # n/a-ness off theta's nan so non-AA algorithms report nan, and the
+    # column-collapse alarm (obs/alarms.py) only ever fires on a real AA run
+    used = jnp.where(jnp.isnan(stats.theta), jnp.nan,
+                     stats.used_columns.astype(jnp.float32))
     return MetricParts(
         loss=R.wsum(dweight, _stack_losses(problem, w, x, y, mask)),
         grad_norm=tm.tree_norm(g),
         theta_mean=R.nanmean(stats.theta),
         gram_cond_max=R.nanmax(stats.gram_cond),
+        gram_cond_mean=R.nanmean(stats.gram_cond),
+        aa_used_min=R.nanmin(used),
+        cohort_ess=R.ess(pweight),
     )
 
 
@@ -932,7 +965,7 @@ def _svrg_round_core(problem, hp, use_aa, R, w_t, x, y, mask, dweight, pweight,
         new_hs = new_hy = None
     w_k, comm = R.uplink(w_k, rngs, DELTA_UPLINK, anchor=w_t, state=comm)
     new_params = R.wsum(pweight, w_k, anchor=w_t)
-    parts = _metric_parts(problem, R, w_t, g_global, stats, x, y, mask, dweight)
+    parts = _metric_parts(problem, R, w_t, g_global, stats, x, y, mask, dweight, pweight)
     return new_params, parts, new_hs, new_hy, comm
 
 
@@ -953,7 +986,7 @@ def _scaffold_round_core(problem, hp, use_aa, R, w_t, c, x, y, mask, c_k,
     c_up, comm = R.uplink(new_c_k, rngs, CTRL_UPLINK, state=comm)
     new_params = R.wsum(pweight, w_k, anchor=w_t)
     new_c = R.wsum(dweight, c_up)
-    parts = _metric_parts(problem, R, w_t, new_c, stats, x, y, mask, dweight)
+    parts = _metric_parts(problem, R, w_t, new_c, stats, x, y, mask, dweight, pweight)
     return new_params, new_c, new_c_k, parts, comm
 
 
@@ -968,7 +1001,7 @@ def _avg_round_core(problem, hp, use_aa, R, w_t, x, y, mask, dweight, pweight,
     new_params = R.wsum(pweight, w_k, anchor=w_t)
     # diagnostics only — FedAvg ships no gradients, so no wire crossing here
     g = R.wsum(dweight, _stack_grads(problem, w_t, x, y, mask))
-    parts = _metric_parts(problem, R, w_t, g, stats, x, y, mask, dweight)
+    parts = _metric_parts(problem, R, w_t, g, stats, x, y, mask, dweight, pweight)
     return new_params, parts, comm
 
 
@@ -984,7 +1017,7 @@ def _lbfgs_round_core(problem, hp, R, w_t, x, y, mask, dweight, pweight, rngs,
     w_k, comm = R.uplink(w_k, rngs, DELTA_UPLINK, anchor=w_t, state=comm)
     new_params = R.wsum(pweight, w_k, anchor=w_t)
     parts = _metric_parts(problem, R, w_t, g_global, _nan_stats(x.shape[0]),
-                          x, y, mask, dweight)
+                          x, y, mask, dweight, pweight)
     return new_params, parts, comm
 
 
@@ -1022,7 +1055,7 @@ def _newton_round_core(problem, hp, client_fn, R, w_t, x, y, mask, dweight,
         a = jnp.asarray(1.0)
     new_params = tm.tree_axpy(-a, p, w_t)
     parts = _metric_parts(problem, R, w_t, g_global, _nan_stats(x.shape[0]),
-                          x, y, mask, dweight)
+                          x, y, mask, dweight, pweight)
     return new_params, parts, comm
 
 
@@ -1039,7 +1072,7 @@ def _dane_round_core(problem, hp, R, w_t, x, y, mask, dweight, pweight, rngs,
     # participation round with no active clients keeps w^t instead of zeroing
     new_params = R.wsum(pweight, w_k, anchor=w_t)
     parts = _metric_parts(problem, R, w_t, g_global, _nan_stats(x.shape[0]),
-                          x, y, mask, dweight)
+                          x, y, mask, dweight, pweight)
     return new_params, parts, comm
 
 
@@ -1049,6 +1082,9 @@ def finalize_metrics(parts: MetricParts, comm_bytes: float) -> RoundMetrics:
         grad_norm=parts.grad_norm,
         theta_mean=parts.theta_mean,
         gram_cond_max=parts.gram_cond_max,
+        gram_cond_mean=parts.gram_cond_mean,
+        aa_used_min=parts.aa_used_min,
+        cohort_ess=parts.cohort_ess,
         comm_bytes=jnp.asarray(comm_bytes, jnp.float32),
     )
 

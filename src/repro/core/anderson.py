@@ -141,28 +141,30 @@ def multisecant_update(
     Returns (w⁺, stats) with
       w⁺ = w − η g − damping · (S − ηY) Γ + ... ,  Γ = (YᵀY)⁻¹ Yᵀ g.
     """
-    if resolve_aa_impl(impl) == "pallas":
-        return _multisecant_update_pallas(w, g, s_stack, y_stack, eta, cfg)
-    gram = tm.tree_gram(y_stack, y_stack)          # [m, m] YᵀY
-    yg = tm.tree_vdot_stacked(y_stack, g)          # [m]    Yᵀg
-    gamma, cond, used = _solve_gram(gram, yg, cfg)
+    with jax.named_scope("fl.aa_step"):
+        if resolve_aa_impl(impl) == "pallas":
+            return _multisecant_update_pallas(w, g, s_stack, y_stack, eta, cfg)
+        gram = tm.tree_gram(y_stack, y_stack)          # [m, m] YᵀY
+        yg = tm.tree_vdot_stacked(y_stack, g)          # [m]    Yᵀg
+        gamma, cond, used = _solve_gram(gram, yg, cfg)
 
-    # optimization gain θ² = 1 − (Yᵀg·Γ)/‖g‖²   (Eq. 9, via Pythagoras)
-    g_norm2 = tm.tree_dot(g, g)
-    proj2 = jnp.dot(yg, gamma)
-    theta = jnp.sqrt(jnp.clip(1.0 - proj2 / jnp.maximum(g_norm2, 1e-30), 0.0, 1.0))
+        # optimization gain θ² = 1 − (Yᵀg·Γ)/‖g‖²   (Eq. 9, via Pythagoras)
+        g_norm2 = tm.tree_dot(g, g)
+        proj2 = jnp.dot(yg, gamma)
+        theta = jnp.sqrt(
+            jnp.clip(1.0 - proj2 / jnp.maximum(g_norm2, 1e-30), 0.0, 1.0))
 
-    s_gamma = tm.tree_combine_stacked(s_stack, gamma)   # S Γ
-    y_gamma = tm.tree_combine_stacked(y_stack, gamma)   # Y Γ
+        s_gamma = tm.tree_combine_stacked(s_stack, gamma)   # S Γ
+        y_gamma = tm.tree_combine_stacked(y_stack, gamma)   # Y Γ
 
-    beta = cfg.damping
-    new_w = jax.tree.map(
-        lambda wi, gi, sg, yg_: wi - eta * gi - beta * (sg - eta * yg_),
-        w, g, s_gamma, y_gamma,
-    )
-    stats = AAStats(theta=theta, gamma_norm=jnp.linalg.norm(gamma),
-                    gram_cond=cond, used_columns=used)
-    return new_w, stats
+        beta = cfg.damping
+        new_w = jax.tree.map(
+            lambda wi, gi, sg, yg_: wi - eta * gi - beta * (sg - eta * yg_),
+            w, g, s_gamma, y_gamma,
+        )
+        stats = AAStats(theta=theta, gamma_norm=jnp.linalg.norm(gamma),
+                        gram_cond=cond, used_columns=used)
+        return new_w, stats
 
 
 def _multisecant_update_pallas(

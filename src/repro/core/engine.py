@@ -70,6 +70,16 @@ from repro.utils import tree_math as tm
 Pytree = Any
 
 
+#: RoundMetrics fields mirrored into RoundTrace columns, in order — the
+#: engine reads them off the stacked metrics generically, so a new device-side
+#: metric becomes a trace column (and a telemetry row field) by being added to
+#: RoundMetrics and here.
+METRIC_FIELDS = (
+    "loss", "grad_norm", "theta_mean", "gram_cond_max", "gram_cond_mean",
+    "aa_used_min", "cohort_ess", "comm_bytes",
+)
+
+
 @dataclasses.dataclass
 class RoundTrace:
     """Per-round history of an engine run (host-side numpy, one row per
@@ -79,10 +89,15 @@ class RoundTrace:
     grad_norm: np.ndarray      # [T]
     theta_mean: np.ndarray     # [T]
     gram_cond_max: np.ndarray  # [T]
+    gram_cond_mean: np.ndarray # [T]
+    aa_used_min: np.ndarray    # [T]
+    cohort_ess: np.ndarray     # [T]
     comm_bytes: np.ndarray     # [T] per-round (NOT cumulative) wire bytes
     rel_error: np.ndarray      # [T] ‖w−w*‖/‖w*‖ (nan when w_star not given)
-    wall_time: np.ndarray      # [T] cumulative seconds; each chunk's measured
-                               # wall time is attributed equally to its rounds
+    round_wall: np.ndarray     # [T] seconds attributed to this round (each
+                               # chunk's measured wall time divided equally
+                               # over its executed rounds)
+    wall_time: np.ndarray      # [T] cumulative seconds
     stopped: bool              # a stop criterion fired (vs round budget spent)
 
     @property
@@ -98,6 +113,7 @@ def make_chunk_runner(
     stop_rel_error: float | None = None,
     stop_grad_norm: float | None = None,
     donate: bool = True,
+    tap: Callable | None = None,
 ):
     """Compile ``chunk`` rounds of ``round_fn`` into one donated jit.
 
@@ -115,6 +131,17 @@ def make_chunk_runner(
     ``n_live`` is a device scalar, so a short final chunk reuses the SAME
     executable (no recompile); slots with i >= n_live behave exactly like
     post-stop slots.
+
+    ``tap`` — optional live tap (obs/sinks.LiveTap or any host callable
+    ``(slot, metrics, rel, live)``) invoked via ``jax.debug.callback`` as
+    each scan slot executes, for sub-chunk visibility into a long chunk.
+    OFF by default: the callback re-enters the host mid-chunk, which is
+    exactly what the one-sync-per-chunk contract otherwise rules out. It
+    receives the compiled math's own values; note the inserted callback can
+    shift XLA's fusion choices by an ulp (the same sensitivity documented
+    above for lax.cond), so a tapped chunk matches the tapless one at the
+    documented rtol 1e-6, not bit-exactly (pinned in tests/test_obs.py) —
+    leave the tap off for runs that must be bit-reproducible.
     """
     if chunk < 1:
         raise ValueError(f"chunk must be >= 1, got {chunk}")
@@ -134,6 +161,8 @@ def make_chunk_runner(
                 rel = jnp.full((), jnp.nan, jnp.float32)
             live = jnp.logical_and(~done, i < n_live)
             new_s = tm.tree_where(live, new_s, s)
+            if tap is not None:
+                jax.debug.callback(tap, i, m, rel, live, ordered=False)
             # mirror the loop's break order: the row is emitted, THEN the
             # stop fires — so the stopping round's row is kept
             stop = ~jnp.isfinite(m.loss)
@@ -163,6 +192,11 @@ def run_rounds(
     stop_grad_norm: float | None = None,
     donate: bool = True,
     runner: Callable | None = None,
+    tap: Callable | None = None,
+    sinks=(),
+    run_info: "dict | None" = None,
+    trace_capture=None,
+    start_round: int = 0,
 ):
     """Run up to ``num_rounds`` rounds in chunks of ``chunk``; one host sync
     per chunk. Returns ``(final_state, RoundTrace)`` — the state stays
@@ -173,46 +207,99 @@ def run_rounds(
     compiled executable should be reused (e.g. pre-compiled via
     ``runner.lower(state, np.int32(n)).compile()`` so the trace excludes
     compile time). It MUST have been built from the same ``round_fn`` with
-    the same chunk/stop configuration; when omitted, one is built here.
+    the same chunk/stop configuration (incl. ``tap``); when omitted, one is
+    built here.
+
+    Telemetry (repro/obs — every hook is optional and None/() by default):
+      tap           — live in-chunk callback, compiled into the runner (see
+                      make_chunk_runner); ignored when ``runner`` is given.
+      sinks         — MetricsSinks. Opened with a header row (run_info merged
+                      in), fed one row per executed round from THIS chunk
+                      sync — attaching sinks adds no device→host transfer and
+                      leaves the chunk math untouched (pinned in
+                      tests/test_obs.py) — and closed with a footer. A sink
+                      whose ``stop_requested`` turns truthy (health alarms)
+                      stops the run at the next chunk boundary.
+      run_info      — extra header fields (algo/runtime/channel/uplink byte
+                      breakdown — see core/server.py).
+      trace_capture — obs/profiling.TraceCapture; notified at chunk
+                      boundaries to open/close jax.profiler windows.
+      start_round   — global index of the first round (resumed runs), offsets
+                      the "round" field of emitted rows.
     """
+    from repro.obs.sinks import ROW_FIELDS, SCHEMA_VERSION, build_round_row
+
     chunk = max(1, min(chunk, num_rounds))
     if runner is None:
         runner = make_chunk_runner(
             round_fn, chunk, w_star=w_star, stop_rel_error=stop_rel_error,
-            stop_grad_norm=stop_grad_norm, donate=donate,
+            stop_grad_norm=stop_grad_norm, donate=donate, tap=tap,
         )
-    cols: list[list] = [[] for _ in range(7)]
+    sinks = list(sinks)
+    for s in sinks:
+        s.open({
+            "v": SCHEMA_VERSION, "kind": "header", "fields": list(ROW_FIELDS),
+            "num_rounds": num_rounds, "chunk": chunk,
+            "start_round": start_round, **(run_info or {}),
+        })
+    cols: dict[str, list] = {f: [] for f in METRIC_FIELDS}
+    rel_col: list[float] = []
+    rw_col: list[float] = []
+    wall_col: list[float] = []
     t_total = 0.0
+    comm_total = 0.0
     executed = 0
     stopped = False
-    while executed < num_rounds and not stopped:
-        n_live = min(chunk, num_rounds - executed)
-        t0 = time.perf_counter()
-        state, done, ms, rels, lives = runner(state, np.int32(n_live))
-        # the ONE host sync of this chunk (device_get blocks on the results)
-        done, ms, rels, lives = jax.device_get((done, ms, rels, lives))
-        elapsed = time.perf_counter() - t0
-        idx = np.flatnonzero(lives)
-        per_round = elapsed / max(len(idx), 1)
-        for i in idx:
-            t_total += per_round
-            cols[0].append(float(np.asarray(ms.loss)[i]))
-            cols[1].append(float(np.asarray(ms.grad_norm)[i]))
-            cols[2].append(float(np.asarray(ms.theta_mean)[i]))
-            cols[3].append(float(np.asarray(ms.gram_cond_max)[i]))
-            cols[4].append(float(np.asarray(ms.comm_bytes)[i]))
-            cols[5].append(float(rels[i]))
-            cols[6].append(t_total)
-        executed += len(idx)
-        stopped = bool(done)
+    try:
+        while executed < num_rounds and not stopped:
+            n_live = min(chunk, num_rounds - executed)
+            if trace_capture is not None:
+                trace_capture.on_chunk_start(start_round + executed, n_live)
+            t0 = time.perf_counter()
+            state, done, ms, rels, lives = runner(state, np.int32(n_live))
+            # the ONE host sync of this chunk (device_get blocks on results)
+            done, ms, rels, lives = jax.device_get((done, ms, rels, lives))
+            elapsed = time.perf_counter() - t0
+            idx = np.flatnonzero(lives)
+            per_round = elapsed / max(len(idx), 1)
+            stacked = {f: np.asarray(getattr(ms, f)) for f in METRIC_FIELDS}
+            rows = []
+            for i in idx:
+                t_total += per_round
+                mrow = {f: float(stacked[f][i]) for f in METRIC_FIELDS}
+                comm_total += mrow["comm_bytes"]
+                for f in METRIC_FIELDS:
+                    cols[f].append(mrow[f])
+                rel_col.append(float(rels[i]))
+                rw_col.append(per_round)
+                wall_col.append(t_total)
+                if sinks:
+                    rows.append(build_round_row(
+                        start_round + executed + len(rows), mrow,
+                        float(rels[i]), comm_total, per_round, t_total))
+            executed += len(idx)
+            stopped = bool(done)
+            for s in sinks:
+                s.emit(rows)
+            if any(getattr(s, "stop_requested", False) for s in sinks):
+                stopped = True
+            if trace_capture is not None:
+                trace_capture.on_chunk_end(start_round + executed)
+    finally:
+        if trace_capture is not None:
+            trace_capture.close()
+        footer = {
+            "v": SCHEMA_VERSION, "kind": "footer", "rounds": executed,
+            "stopped": stopped,
+            "alarms": [e for s in sinks for e in getattr(s, "events", [])],
+        }
+        for s in sinks:
+            s.close(footer)
     trace = RoundTrace(
-        loss=np.asarray(cols[0]),
-        grad_norm=np.asarray(cols[1]),
-        theta_mean=np.asarray(cols[2]),
-        gram_cond_max=np.asarray(cols[3]),
-        comm_bytes=np.asarray(cols[4]),
-        rel_error=np.asarray(cols[5]),
-        wall_time=np.asarray(cols[6]),
+        **{f: np.asarray(cols[f]) for f in METRIC_FIELDS},
+        rel_error=np.asarray(rel_col),
+        round_wall=np.asarray(rw_col),
+        wall_time=np.asarray(wall_col),
         stopped=stopped,
     )
     return state, trace

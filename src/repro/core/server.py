@@ -34,6 +34,10 @@ class History:
     wall_time: np.ndarray         # cumulative seconds (per-round, measured)
     final_params: Pytree = None
     channel: str = "identity"     # repro/comm channel name
+    gram_cond_max: np.ndarray = None  # worst AA Gram conditioning per round
+                                  # (nan for non-AA algos) — the divergence
+                                  # predictor, kept in the history so plots
+                                  # and logs can correlate it with rel_error
 
     @property
     def comm_floats(self) -> np.ndarray:
@@ -44,11 +48,15 @@ class History:
 
     def summary(self) -> str:
         last = -1
+        gcond = (f"gcond={self.gram_cond_max[last]:.2e} "
+                 if self.gram_cond_max is not None
+                 and len(self.gram_cond_max) else "")
         return (
             f"{self.algo:18s} rounds={len(self.rounds):4d} "
             f"loss={self.loss[last]:.6e} |g|={self.grad_norm[last]:.3e} "
-            f"relerr={self.rel_error[last]:.3e} "
-            f"comm={self.comm_bytes[last]:.3e}B[{self.channel}]"
+            f"relerr={self.rel_error[last]:.3e} {gcond}"
+            f"comm={self.comm_bytes[last]:.3e}B[{self.channel}] "
+            f"wall={self.wall_time[last]:.2f}s"
         )
 
 
@@ -66,6 +74,9 @@ def run_federated(
     mesh=None,
     channel=None,
     chunk: int | None = None,
+    sinks=(),
+    trace_capture=None,
+    tap=None,
 ) -> History:
     """Iterate ``num_rounds`` of ``algo`` and collect the metric history.
 
@@ -87,8 +98,27 @@ def run_federated(
               (tests/test_engine.py, rtol 1e-6); only the wall_time
               attribution differs — the engine divides each chunk's measured
               time equally over its rounds.
+
+    Telemetry (repro/obs — all optional and off by default; sinks and
+    trace_capture are bit-neutral — attaching them leaves the computed
+    rounds bit-identical, pinned in tests/test_obs.py. The tap is the one
+    exception: it compiles a callback into the chunk and matches the tapless
+    run at rtol 1e-6, see make_chunk_runner):
+    sinks         — MetricsSinks (obs/sinks) opened with a run header
+                    (algo/runtime/channel/cohort/per-UplinkSpec byte
+                    breakdown), fed one versioned row per executed round —
+                    at chunk boundaries on the engine path, per round on the
+                    loop path — and closed with a footer. A sink exposing a
+                    truthy ``stop_requested`` (obs/alarms.AlarmMonitor) stops
+                    the run at the next boundary.
+    trace_capture — obs/profiling.TraceCapture: on-demand jax.profiler trace
+                    windows around chunk (or round) execution.
+    tap           — live in-chunk jax.debug.callback (obs/sinks.LiveTap);
+                    engine path only.
     """
     from repro.comm import make_channel
+    from repro.comm.schema import uplink_byte_breakdown
+    from repro.core.algorithms import UPLINK_SCHEMAS, resolve_cohort_size
 
     if runtime not in ("vmap", "sharded"):
         raise ValueError(f"unknown runtime {runtime!r}; choose 'vmap' or 'sharded'")
@@ -113,6 +143,18 @@ def run_federated(
     else:
         round_fn = make_round_fn(algo, problem, hp, channel)
 
+    sinks = list(sinks)
+    run_info = {
+        "algo": algo,
+        "runtime": runtime,
+        "channel": channel.name,
+        "backend": jax.default_backend(),
+        "num_clients": problem.clients.num_clients,
+        "cohort_size": resolve_cohort_size(hp, problem.clients.num_clients),
+        "uplink_bytes": uplink_byte_breakdown(
+            channel, UPLINK_SCHEMAS[algo], state.params),
+    }
+
     if chunk is not None:
         if chunk < 1:
             # the CLIs map their 0-means-loop knob to None before calling;
@@ -125,6 +167,8 @@ def run_federated(
         state, trace = engine.run_rounds(
             round_fn, state, num_rounds, chunk=chunk, w_star=w_star,
             stop_rel_error=stop_rel_error, stop_grad_norm=stop_grad_norm,
+            sinks=sinks, run_info=run_info, trace_capture=trace_capture,
+            tap=tap,
         )
         return History(
             algo=algo,
@@ -137,6 +181,7 @@ def run_federated(
             wall_time=trace.wall_time,
             final_params=jax.device_get(state.params),
             channel=channel.name,
+            gram_cond_max=trace.gram_cond_max,
         )
 
     round_fn = jax.jit(round_fn)
@@ -148,27 +193,63 @@ def run_federated(
         # eagerly dispatched O(n_leaves) kernels per round
         rel_fn = jax.jit(lambda p: tm.tree_norm(tm.tree_sub(p, w_star)))
 
+    from repro.obs.sinks import ROW_FIELDS, SCHEMA_VERSION, build_round_row
+
+    for s in sinks:
+        s.open({
+            "v": SCHEMA_VERSION, "kind": "header", "fields": list(ROW_FIELDS),
+            "num_rounds": num_rounds, "chunk": None, "start_round": 0,
+            **run_info,
+        })
     rows = []
     comm_total = 0.0
     t_total = 0.0
-    for t in range(num_rounds):
-        t0 = time.perf_counter()
-        state, m = round_fn(state)
-        m = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), m)
-        t_total += time.perf_counter() - t0
-        comm_total += float(m.comm_bytes)
-        if rel_fn is not None:
-            rel = float(rel_fn(state.params)) / max(w_star_norm, 1e-30)
-        else:
-            rel = float("nan")
-        rows.append((t, float(m.loss), float(m.grad_norm), rel,
-                     float(m.theta_mean), comm_total, t_total))
-        if not np.isfinite(m.loss):
-            break
-        if stop_rel_error is not None and rel < stop_rel_error:
-            break
-        if stop_grad_norm is not None and m.grad_norm < stop_grad_norm:
-            break
+    stopped = False
+    try:
+        for t in range(num_rounds):
+            if trace_capture is not None:
+                trace_capture.on_chunk_start(t, 1)
+            t0 = time.perf_counter()
+            state, m = round_fn(state)
+            m = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), m)
+            dt = time.perf_counter() - t0
+            t_total += dt
+            mdict = {f: float(getattr(m, f)) for f in m._fields}
+            comm_total += mdict["comm_bytes"]
+            if rel_fn is not None:
+                rel = float(rel_fn(state.params)) / max(w_star_norm, 1e-30)
+            else:
+                rel = float("nan")
+            rows.append((t, mdict["loss"], mdict["grad_norm"], rel,
+                         mdict["theta_mean"], mdict["gram_cond_max"],
+                         comm_total, t_total))
+            for s in sinks:
+                s.emit([build_round_row(t, mdict, rel, comm_total, dt,
+                                        t_total)])
+            if trace_capture is not None:
+                trace_capture.on_chunk_end(t + 1)
+            if not np.isfinite(m.loss):
+                stopped = True
+                break
+            if stop_rel_error is not None and rel < stop_rel_error:
+                stopped = True
+                break
+            if stop_grad_norm is not None and m.grad_norm < stop_grad_norm:
+                stopped = True
+                break
+            if any(getattr(s, "stop_requested", False) for s in sinks):
+                stopped = True
+                break
+    finally:
+        if trace_capture is not None:
+            trace_capture.close()
+        footer = {
+            "v": SCHEMA_VERSION, "kind": "footer", "rounds": len(rows),
+            "stopped": stopped,
+            "alarms": [e for s in sinks for e in getattr(s, "events", [])],
+        }
+        for s in sinks:
+            s.close(footer)
 
     arr = np.asarray(rows, dtype=np.float64)
     return History(
@@ -178,10 +259,11 @@ def run_federated(
         grad_norm=arr[:, 2],
         rel_error=arr[:, 3],
         theta_mean=arr[:, 4],
-        comm_bytes=arr[:, 5],
-        wall_time=arr[:, 6],
+        comm_bytes=arr[:, 6],
+        wall_time=arr[:, 7],
         final_params=jax.device_get(state.params),
         channel=channel.name,
+        gram_cond_max=arr[:, 5],
     )
 
 

@@ -83,17 +83,19 @@ class ShardReduce(CrossClientReduce):
         self.axes = axes
 
     def wsum(self, weights, stacked, anchor=None):
-        if anchor is None:
+        with jax.named_scope("fl.psum"):
+            if anchor is None:
+                return jax.tree.map(
+                    lambda s: jax.lax.psum(
+                        jnp.tensordot(weights, s, axes=1), self.axes),
+                    stacked,
+                )
             return jax.tree.map(
-                lambda s: jax.lax.psum(jnp.tensordot(weights, s, axes=1), self.axes),
-                stacked,
+                lambda a, s: a + jax.lax.psum(
+                    jnp.tensordot(weights, s - a[None], axes=1), self.axes
+                ),
+                anchor, stacked,
             )
-        return jax.tree.map(
-            lambda a, s: a + jax.lax.psum(
-                jnp.tensordot(weights, s - a[None], axes=1), self.axes
-            ),
-            anchor, stacked,
-        )
 
     def nanmean(self, x):
         finite = ~jnp.isnan(x)
@@ -104,6 +106,14 @@ class ShardReduce(CrossClientReduce):
     def nanmax(self, x):
         m = jax.lax.pmax(jnp.max(jnp.where(jnp.isnan(x), -jnp.inf, x)), self.axes)
         return jnp.where(jnp.isneginf(m), jnp.nan, m)
+
+    def nanmin(self, x):
+        m = jax.lax.pmin(jnp.min(jnp.where(jnp.isnan(x), jnp.inf, x)), self.axes)
+        return jnp.where(jnp.isposinf(m), jnp.nan, m)
+
+    def ess(self, weights):
+        w2 = jax.lax.psum(jnp.sum(weights * weights), self.axes)
+        return 1.0 / jnp.maximum(w2, 1e-30)
 
 
 def client_mesh_axes(mesh) -> tuple[str, ...]:

@@ -337,14 +337,16 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
                                   w_star=wstar, runner=runner)
         losses = [float(v) for v in trace.loss]
         rel_errors = [float(v) for v in trace.rel_error]
+        gram_conds = [float(v) for v in trace.gram_cond_max]
         comm_bytes = float(trace.comm_bytes[-1])
         run_s = (time.time() - t0) / max(trace.num_rounds, 1)
     else:
         t0 = time.time()
-        losses, rel_errors = [], []
+        losses, rel_errors, gram_conds = [], [], []
         for _ in range(rounds):
             state, metrics = round_fn(state)
             losses.append(float(metrics.loss))
+            gram_conds.append(float(metrics.gram_cond_max))
             rel_errors.append(
                 float(tm.tree_norm(tm.tree_sub(state.params, wstar)))
                 / max(wstar_norm, 1e-30))
@@ -371,6 +373,7 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
         "loss_curve": losses,
         "rel_error": rel_errors[-1],
         "rel_error_curve": rel_errors,
+        "gram_cond_curve": gram_conds,
         "comm_bytes": comm_bytes,
         "flops": float(cost.get("flops", 0.0)),
         "collectives": collective_bytes(compiled.as_text()),

@@ -83,6 +83,35 @@ def main() -> None:
                          "mesh instead of the single-pod 16x16 (requires "
                          "enough devices, e.g. the dryrun host-device env)")
     ap.add_argument("--out", default="")
+    # -- telemetry (repro/obs) -------------------------------------------
+    ap.add_argument("--metrics-out", default="",
+                    help="stream per-round telemetry rows to this JSONL file "
+                         "(versioned schema — obs/sinks.py; validate with "
+                         "scripts/check_metrics_jsonl.py). Drained at chunk "
+                         "boundaries under --round-chunk, per round "
+                         "otherwise; attaching it never changes the computed "
+                         "rounds")
+    ap.add_argument("--metrics-stdout", type=int, default=0, metavar="N",
+                    help="print every N-th telemetry row to stdout (0 = off)")
+    ap.add_argument("--no-alarms", action="store_true",
+                    help="disable the default health monitors (non-finite "
+                         "loss, AA Gram conditioning blowup, AA column "
+                         "collapse, rel-error plateau — obs/alarms.py); they "
+                         "are attached whenever any metrics sink is")
+    ap.add_argument("--trace-rounds", type=int, default=0, metavar="N",
+                    help="capture a jax.profiler trace window covering N "
+                         "rounds starting at --trace-start (aligned outward "
+                         "to chunk boundaries under --round-chunk); named "
+                         "scopes attribute time to the round phases")
+    ap.add_argument("--trace-start", type=int, default=0,
+                    help="first round of the --trace-rounds window")
+    ap.add_argument("--trace-dir", default="",
+                    help="profiler trace output dir (default "
+                         "<--out dir or .>/trace)")
+    ap.add_argument("--trace-trigger", default="",
+                    help="arm on-demand tracing: touching this file while "
+                         "the run is in flight traces the next chunk (the "
+                         "file is consumed per window)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -123,16 +152,45 @@ def main() -> None:
             )
         print(f"sharded runtime on mesh {dict(mesh.shape)}")
 
+    def build_sinks(algo: str):
+        """Per-algo telemetry sinks + trace capture (repro/obs); fresh per
+        run so each algo gets its own JSONL file and alarm state."""
+        from repro.obs import (AlarmMonitor, JsonlSink, StdoutSink,
+                               TraceCapture, TraceConfig)
+
+        sinks = []
+        if args.metrics_out:
+            base, ext = os.path.splitext(args.metrics_out)
+            path = (args.metrics_out if len(algos) == 1
+                    else f"{base}.{algo}{ext or '.jsonl'}")
+            sinks.append(JsonlSink(path))
+        if args.metrics_stdout:
+            sinks.append(StdoutSink(every=args.metrics_stdout))
+        if sinks and not args.no_alarms:
+            sinks.append(AlarmMonitor())
+        tc = None
+        if args.trace_rounds > 0 or args.trace_trigger:
+            trace_dir = args.trace_dir or os.path.join(
+                os.path.dirname(args.out) or ".", "trace")
+            tc = TraceCapture(TraceConfig(
+                trace_dir=trace_dir, start_round=args.trace_start,
+                num_rounds=args.trace_rounds,
+                trigger_file=args.trace_trigger or None))
+        return sinks, tc
+
     results = {}
     algos = [args.algo] + ([args.baseline] if args.baseline else [])
     for algo in algos:
+        sinks, trace_capture = build_sinks(algo)
         t0 = time.time()
         h = run_federated(problem, algo, hp, args.rounds,
                           runtime=args.runtime, mesh=mesh, channel=channel,
-                          chunk=chunk)
+                          chunk=chunk, sinks=sinks,
+                          trace_capture=trace_capture)
         results[algo] = {
             "loss_curve": [float(v) for v in h.loss],
             "grad_norm_curve": [float(v) for v in h.grad_norm],
+            "gram_cond_curve": [float(v) for v in h.gram_cond_max],
             "comm_bytes": float(h.comm_bytes[-1]),
             "channel": h.channel,
             "wall_s": time.time() - t0,

@@ -1,0 +1,144 @@
+"""Checkpointing the FULL round state (repro/checkpoint on ServerState).
+
+The npz pytree checkpoint was written for params; these tests pin that it
+round-trips the ENTIRE ServerState — params, per-client control variates,
+the carried comm-channel state (int8 EF residuals + diff-coding refs), the
+cross-round AA history columns, the PRNG key, and the round counter — and
+that a run interrupted at round T, checkpointed, restored, and continued is
+BIT-identical to the uninterrupted run. That is the property that makes
+long engine runs resumable at all: any leaf silently dropped or cast would
+show up here as a bit mismatch after resume.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.core import (
+    AAConfig,
+    AlgoHParams,
+    init_state,
+    make_round_fn,
+    run_rounds,
+    solve_reference,
+)
+from repro.data import make_binary_classification, partition
+from repro.models.logreg import make_logreg_problem
+from repro.obs import MemorySink
+
+
+@pytest.fixture(scope="module")
+def setup():
+    X, y = make_binary_classification("synthetic_small", n=400, seed=0)
+    clients = partition(X, y, num_clients=8, scheme="iid")
+    prob = make_logreg_problem(clients, gamma=1e-3)
+    wstar = solve_reference(prob, iters=50)
+    return prob, wstar
+
+
+# the adversarial state shape: int8 wire (per-client EF residual buffers in
+# ServerState.comm) AND cross-round AA history columns riding the carry
+HP = dict(eta=0.5, local_epochs=3, carry_history=2,
+          aa=AAConfig(tikhonov=1e-6, damping=0.7))
+
+
+def _mk(prob, channel="int8"):
+    hp = AlgoHParams(**HP)
+    rf = make_round_fn("fedosaa_svrg", prob, hp, channel)
+    mk_state = lambda: init_state(prob, jax.random.PRNGKey(0), hp, channel,
+                                  "fedosaa_svrg")
+    return rf, mk_state
+
+
+def _assert_state_bitexact(a, b, what=""):
+    la = jax.tree_util.tree_flatten_with_path(a)[0]
+    lb = jax.tree.leaves(b)
+    assert len(la) == len(lb), what
+    for (kp, x), y in zip(la, lb):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y),
+            err_msg=f"{what}: leaf {jax.tree_util.keystr(kp)}")
+        assert np.asarray(x).dtype == np.asarray(y).dtype, (
+            f"{what}: dtype of {jax.tree_util.keystr(kp)}")
+
+
+class TestFullStateRoundtrip:
+    def test_server_state_roundtrips_bit_exact(self, setup, tmp_path):
+        """Every ServerState leaf — comm buffers, AA history, rng, t —
+        survives save→restore bit-exactly, with dtypes preserved."""
+        prob, wstar = setup
+        rf, mk_state = _mk(prob)
+        state, _ = run_rounds(rf, mk_state(), 3, chunk=3, w_star=wstar)
+        # the interesting leaves actually exist in this config
+        assert state.comm is not None
+        assert state.hist_s is not None
+        path = str(tmp_path / "ckpt" / "state_3")
+        save_checkpoint(path, state, step=3)
+        restored = restore_checkpoint(path, like=mk_state())
+        _assert_state_bitexact(state, restored, what="roundtrip")
+        assert int(np.asarray(restored.t)) == int(np.asarray(state.t))
+        np.testing.assert_array_equal(np.asarray(restored.rng),
+                                      np.asarray(state.rng))
+
+    def test_fresh_template_restore(self, setup, tmp_path):
+        """Restore only needs a shape/dtype template, not the saved values:
+        a freshly-initialized state works as ``like``."""
+        prob, wstar = setup
+        rf, mk_state = _mk(prob, channel=None)
+        state, _ = run_rounds(rf, mk_state(), 2, chunk=2, w_star=wstar)
+        path = str(tmp_path / "state_2")
+        save_checkpoint(path, state, step=2)
+        template = mk_state()
+        restored = restore_checkpoint(path, like=template)
+        _assert_state_bitexact(state, restored, what="fresh-template")
+        # the template itself is untouched (t still 0)
+        assert int(np.asarray(template.t)) == 0
+
+
+class TestResumeMidRun:
+    def test_resume_bit_identical_to_uninterrupted(self, setup, tmp_path):
+        """Run 6 rounds straight vs run 3 → checkpoint → restore → run 3
+        more: final state AND the continued metric rows are bit-identical.
+        The restored rng/t make round 4 of the resumed run draw the exact
+        minibatches/cohorts round 4 of the straight run drew."""
+        prob, wstar = setup
+        rf, mk_state = _mk(prob)
+
+        straight, trace_straight = run_rounds(
+            rf, mk_state(), 6, chunk=3, w_star=wstar)
+
+        first, trace_first = run_rounds(rf, mk_state(), 3, chunk=3,
+                                        w_star=wstar)
+        np.testing.assert_array_equal(trace_first.loss,
+                                      trace_straight.loss[:3])
+        path = str(tmp_path / "mid_run")
+        save_checkpoint(path, first, step=3)
+        restored = restore_checkpoint(path, like=mk_state())
+        resumed, trace_resumed = run_rounds(rf, restored, 3, chunk=3,
+                                            w_star=wstar)
+
+        _assert_state_bitexact(straight, resumed, what="resume")
+        np.testing.assert_array_equal(trace_resumed.loss,
+                                      trace_straight.loss[3:])
+        np.testing.assert_array_equal(trace_resumed.grad_norm,
+                                      trace_straight.grad_norm[3:])
+        np.testing.assert_array_equal(trace_resumed.rel_error,
+                                      trace_straight.rel_error[3:])
+        np.testing.assert_array_equal(trace_resumed.gram_cond_max,
+                                      trace_straight.gram_cond_max[3:])
+
+    def test_resumed_telemetry_continues_round_numbering(self, setup,
+                                                         tmp_path):
+        """A resumed run's sink rows pick up the global round index via
+        ``start_round`` — the JSONL streams of the two segments concatenate
+        into one contiguous history."""
+        prob, wstar = setup
+        rf, mk_state = _mk(prob, channel=None)
+        first, _ = run_rounds(rf, mk_state(), 3, chunk=3, w_star=wstar)
+        path = str(tmp_path / "seg")
+        save_checkpoint(path, first, step=3)
+        restored = restore_checkpoint(path, like=mk_state())
+        sink = MemorySink()
+        run_rounds(rf, restored, 3, chunk=3, w_star=wstar, sinks=[sink],
+                   start_round=3)
+        assert [r["round"] for r in sink.rows] == [3, 4, 5]
