@@ -49,16 +49,17 @@ def logreg_setup(
 def bench_algo(
     prob, wstar, algo: str, hp: AlgoHParams, rounds: int, label: str,
     channel=None, stop_rel_error: float | None = None, runtime: str = "vmap",
-    chunk: int | None = None,
+    chunk: int | None = None, faults=None,
 ) -> dict:
     """``us_per_call`` is History.wall_time's own per-round timer — the same
     clock benchmarks/bench_round.py uses (device-side round + the driver's
     metric sync, excluding the w* solve and History assembly; compile time
     lands in round 0 either way). ``chunk`` routes the rounds through the
-    device-resident engine (core/engine.py)."""
+    device-resident engine (core/engine.py); ``faults`` a repro/robust
+    FaultPlan through the compiled round (benchmarks/ext_robustness.py)."""
     h = run_federated(prob, algo, hp, rounds, w_star=wstar, channel=channel,
                       stop_rel_error=stop_rel_error, runtime=runtime,
-                      chunk=chunk)
+                      chunk=chunk, faults=faults)
     n_rounds = len(h.rounds)
     return {
         "name": label,

@@ -19,8 +19,17 @@ def run(quick: bool = True) -> list[dict]:
     rounds = 25 if quick else 50
     prob, wstar = logreg_setup("covtype", n=n, k=k)
     rows = []
+    # the docstring pins the reference row at tik=1e-10 / no filter /
+    # damping=1 — construct it explicitly and assert it still matches the
+    # dataclass defaults so a future AAConfig default change can't silently
+    # move the ablation's baseline
+    vanilla = AAConfig(tikhonov=1e-10, filter_rtol=0.0, damping=1.0,
+                       residual_ema=0.0)
+    assert vanilla == AAConfig(), (
+        "AAConfig defaults moved away from the documented vanilla baseline "
+        f"(tik=1e-10, no filter, damping=1): {AAConfig()}")
     variants = [
-        ("vanilla", AAConfig()),
+        ("vanilla", vanilla),
         ("tikhonov", AAConfig(tikhonov=1e-6)),
         ("filter", AAConfig(filter_rtol=1e-6)),
         ("damped", AAConfig(damping=0.5)),

@@ -1,0 +1,83 @@
+"""Validate the committed robustness fault-matrix artifact
+(benchmarks/results/ext_robustness.json).
+
+Shared by scripts/ci.sh and .github/workflows/ci.yml so the gate cannot
+drift between the two.
+
+  python scripts/check_ext_robustness.py [path]
+
+Checks structure (the full fault x defense x codec grid plus the summary
+row) and the PR's acceptance invariants:
+
+  * the undefended byz-history run on the identity codec FAILED (never
+    reached rel-error 1e-4; its final loss is non-finite — the NaN-poison
+    attack landed),
+  * the clip_rtol-defended run reached the 1e-6 target within 1.5x the
+    clean run's rounds,
+  * clean-run parity: defense on vs off agree at rtol 1e-6 (measured
+    bit-exact, but the gate is the documented contract),
+  * repeated runs of the same FaultPlan were bit-identical.
+
+Failures raise (never bare `assert`, which python -O strips — this script
+is a CI gate).
+"""
+import json
+import math
+import sys
+
+args = [a for a in sys.argv[1:] if not a.startswith("--")]
+path = args[0] if args else "benchmarks/results/ext_robustness.json"
+
+
+def fail(msg: str):
+    raise SystemExit(f"check_ext_robustness: {path}: {msg}")
+
+
+with open(path) as f:
+    rows = json.load(f)
+by = {r["name"]: r for r in rows}
+
+expected = {
+    f"ext_robustness/{c}/{k}/{d}"
+    for c in ("identity", "int8")
+    for k in ("clean", "drop0.2", "stale0.2", "sign_flip", "noise",
+              "history", "dp1e-3")
+    for d in ("off", "on")
+} | {"ext_robustness/summary"}
+got = {r["name"] for r in rows}
+if got != expected:
+    fail(f"not the full fault matrix: missing {sorted(expected - got)}, "
+         f"unexpected {sorted(got - expected)}")
+
+for r in rows:
+    if r["name"].endswith("summary"):
+        continue
+    if r.get("rounds", 0) < 1:
+        fail(f"{r['name']}: no rounds executed")
+    if r.get("comm_bytes", 0) <= 0:
+        fail(f"{r['name']}: no bytes accounted")
+    # only the identity-codec byz-history undefended cell may go non-finite
+    if not r["name"].endswith("identity/history/off"):
+        if not math.isfinite(r["final_loss"]):
+            fail(f"{r['name']}: final loss is non-finite")
+
+s = by["ext_robustness/summary"]
+if not s.get("byz_history_undefended_failed"):
+    fail("undefended byz-history run reached 1e-4 — the attack no longer "
+         "lands (did the history-poison injection move?)")
+if s.get("undefended_final_finite"):
+    fail("undefended byz-history run stayed finite")
+if not s.get("byz_history_defended_reached_target"):
+    fail("clip_rtol-defended byz-history run did not reach the 1e-6 target")
+ratio = s.get("defended_rounds_vs_clean")
+if ratio is None or not ratio <= 1.5:
+    fail(f"defended run took {ratio}x the clean run's rounds (must be <= 1.5)")
+parity = s.get("clean_defense_parity_max_rel")
+if parity is None or not parity <= 1e-6:
+    fail(f"clean-run defense-on vs -off parity {parity} exceeds rtol 1e-6")
+if not s.get("fault_determinism_bit_identical"):
+    fail("repeated runs of the same FaultPlan were not bit-identical")
+
+print(f"ci: {path} well-formed (defended {s['defended_rounds_to_target']} "
+      f"vs clean {s['clean_rounds_to_target']} rounds-to-1e-6, "
+      f"parity {parity:.1e})")

@@ -51,6 +51,17 @@ python scripts/check_bench_round.py BENCH_round.json --require-full
 # benchmarks/results/ext_cohort.json.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.ext_cohort --smoke
 
+# Robustness smoke (repro/robust): every fault kind (dropout / stale /
+# byzantine uplink + history / DP noise) executes finitely on both defense
+# settings, the clean run is bit-identical defense-on vs -off, a repeated
+# FaultPlan is bit-deterministic, and the byz-history acceptance pair holds
+# (undefended non-finite, clip_rtol-defended finite). The checker then
+# validates the COMMITTED fault-matrix artifact's acceptance invariants
+# (smoke writes nothing — the committed matrix is regenerated only by
+# `python -m benchmarks.ext_robustness`).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.ext_robustness --smoke
+python scripts/check_ext_robustness.py benchmarks/results/ext_robustness.json
+
 # XLA:CPU thunk-runtime loop-body repro (ROADMAP item): records the
 # scan-body penalty of the default runtime vs the legacy one — the artifact
 # to attach upstream and to re-check on jaxlib upgrades. Not gated on a

@@ -246,6 +246,9 @@ class RoundMetrics(NamedTuple):
     gram_cond_mean: jax.Array  # mean AA Gram conditioning (nan if n/a)
     aa_used_min: jax.Array   # fewest AA columns surviving filtering on any
                              # client (nan if n/a; 0 = filtering collapse)
+    aa_clipped_max: jax.Array  # most history columns the clip_rtol byzantine
+                             # screen dropped on any client (nan if n/a;
+                             # 0 whenever the screen is off or inactive)
     cohort_ess: jax.Array    # effective sample size 1/Σw² of the round's
                              # aggregation weights (== C for a uniform cohort)
     comm_bytes: jax.Array    # bytes on the wire this round (codec-exact;
@@ -491,14 +494,25 @@ def _svrg_trajectory(problem, hp, w_t, g_global, batch, rng):
 
 
 def _client_svrg(problem, hp, use_aa, w_t, g_global, x, y, mask, rng,
-                 hist_s=None, hist_y=None):
+                 hist_s=None, hist_y=None, poison=None):
     batch = ClientBatch(x, y, mask)
     w_traj, r_traj = _svrg_trajectory(problem, hp, w_t, g_global, batch, rng)
-    nan_st = AAStats(jnp.nan, jnp.nan, jnp.nan, jnp.array(0))
+    nan_st = AAStats(jnp.nan, jnp.nan, jnp.nan, jnp.array(0), jnp.array(0))
     if not use_aa:
         w_k = jax.tree.map(lambda t: t[-1], w_traj)
         return (w_k, nan_st) if hist_s is None else (w_k, nan_st, hist_s, hist_y)
     s, y_stack = trajectory_to_sy(w_traj, r_traj, hp.aa.residual_ema)
+    if poison is not None:
+        # byzantine history fault (robust/faults.py, byz_mode="history"):
+        # the client's dynamics ran clean but the recorded last residual
+        # column is corrupted — injected AFTER the trajectory so exactly one
+        # column is poisoned, the regime the clip_rtol screen defends (a
+        # mid-flight corruption would propagate through the remaining local
+        # steps and poison a majority of columns, defeating any per-client
+        # median statistic)
+        from repro.robust.faults import poison_last_column
+        flag, fkey, scale = poison
+        y_stack = poison_last_column(y_stack, flag, fkey, scale)
     if hist_s is not None:
         # App. A option 1: prepend columns carried from previous rounds
         # (stale anchors — valid secant pairs of nearby Jacobians; the
@@ -531,7 +545,7 @@ def _client_scaffold(problem, hp, use_aa, w_t, c, x, y, mask, c_k, rng):
                                         impl=hp.aa_impl)
     else:
         w_k = jax.tree.map(lambda t: t[-1], w_traj)
-        stats = AAStats(jnp.nan, jnp.nan, jnp.nan, jnp.array(0))
+        stats = AAStats(jnp.nan, jnp.nan, jnp.nan, jnp.array(0), jnp.array(0))
     new_c_k = problem.grad(w_t, batch)     # c_k ← ∇f_k(w^t), full batch (Alg. 2)
     return w_k, new_c_k, stats
 
@@ -546,7 +560,7 @@ def _client_avg(problem, hp, use_aa, w_t, x, y, mask, rng):
         w_traj, r_traj = _local_trajectory(hp, w_t, residual_fn, rng)
     if not use_aa:
         w_k = jax.tree.map(lambda t: t[-1], w_traj)
-        return w_k, AAStats(jnp.nan, jnp.nan, jnp.nan, jnp.array(0))
+        return w_k, AAStats(jnp.nan, jnp.nan, jnp.nan, jnp.array(0), jnp.array(0))
     s, y_stack = trajectory_to_sy(w_traj, r_traj)
     # negative control: AA against the LOCAL gradient (no correction exists)
     g_local = jax.tree.map(lambda t: t[0], r_traj)
@@ -561,7 +575,7 @@ def _client_lbfgs(problem, hp, w_t, g_global, x, y, mask, rng):
     s, y_stack = trajectory_to_sy(w_traj, r_traj)
     direction = lbfgs_two_loop(g_global, s, y_stack, hp.eta)
     w_k = tm.tree_sub(w_t, direction)
-    return w_k, AAStats(jnp.nan, jnp.nan, jnp.nan, jnp.array(0))
+    return w_k, AAStats(jnp.nan, jnp.nan, jnp.nan, jnp.array(0), jnp.array(0))
 
 
 def _cg_solve(matvec, b, iters: int):
@@ -812,7 +826,8 @@ class CrossClientReduce:
 
     # ---- the wire ----------------------------------------------------------
     def uplink(self, stacked: Pytree, rngs: jax.Array, spec: UplinkSpec,
-               anchor: Pytree | None = None, state: Pytree | None = None):
+               anchor: Pytree | None = None, state: Pytree | None = None,
+               post_codec=None, post_rngs: jax.Array | None = None):
         """Channel roundtrip of every client's upload, declared by ``spec``.
 
         The wire quantity is ``stacked_k − anchor`` for anchored specs (model
@@ -829,13 +844,20 @@ class CrossClientReduce:
         tag selects its buffers, tags an algorithm's round never uplinks pass
         through untouched. Returns (reconstructed stacked — the server's
         view, the comm dict with this tag's buffers advanced).
+
+        ``post_codec(dec_k, post_rngs_k)`` — when given — transforms each
+        client's DECODED wire value after the codec roundtrip and BEFORE the
+        error-feedback residual is taken, so EF and difference-coding
+        references track the transformed wire (this is how the robustness
+        layer composes client-side DP noise with the codecs: the client adds
+        calibrated noise to its payload, so both ends see the noised stream).
         """
         if spec.anchored != (anchor is not None):
             raise ValueError(
                 f"uplink {spec.tag!r}: anchored={spec.anchored} but anchor "
                 f"{'missing' if anchor is None else 'given'}")
         codec = self.channel.up_codec(spec.kind)
-        if isinstance(codec, IdentityCodec):
+        if isinstance(codec, IdentityCodec) and post_codec is None:
             return stacked, state
         sub = state.get(spec.tag) if state is not None else None
         if not codec.deterministic:
@@ -843,13 +865,15 @@ class CrossClientReduce:
         ef = sub.get("ef") if sub else None
         ref = sub.get("ref") if sub else None
 
-        def one(w_k, rng, e, h):
+        def one(w_k, rng, e, h, pr):
             v = tm.tree_sub(w_k, anchor) if anchor is not None else w_k
             if h is not None:
                 v = tm.tree_sub(v, h)
             if e is not None:
                 v = tm.tree_add(v, e)
             dec = codec.tree_roundtrip(v, rng)
+            if post_codec is not None:
+                dec = post_codec(dec, pr)
             new_e = tm.tree_sub(v, dec) if e is not None else None
             if h is not None:
                 # h tracks the reconstructed stream on BOTH ends of the wire
@@ -860,7 +884,8 @@ class CrossClientReduce:
             return dec, new_e, new_h
 
         with jax.named_scope("fl.uplink"):
-            dec, new_e, new_h = jax.vmap(one)(stacked, rngs, ef, ref)
+            dec, new_e, new_h = jax.vmap(one)(stacked, rngs, ef, ref,
+                                              post_rngs)
         if not sub:
             return dec, state
         new_sub = {}
@@ -900,6 +925,7 @@ class MetricParts(NamedTuple):
     gram_cond_max: jax.Array
     gram_cond_mean: jax.Array
     aa_used_min: jax.Array
+    aa_clipped_max: jax.Array
     cohort_ess: jax.Array
 
 
@@ -919,6 +945,7 @@ def _nan_stats(k: int) -> AAStats:
     return AAStats(
         jnp.full((k,), jnp.nan), jnp.full((k,), jnp.nan),
         jnp.full((k,), jnp.nan), jnp.zeros((k,), jnp.int32),
+        jnp.zeros((k,), jnp.int32),
     )
 
 
@@ -930,6 +957,8 @@ def _metric_parts(problem, R, w, g, stats, x, y, mask, dweight,
     # column-collapse alarm (obs/alarms.py) only ever fires on a real AA run
     used = jnp.where(jnp.isnan(stats.theta), jnp.nan,
                      stats.used_columns.astype(jnp.float32))
+    clipped = jnp.where(jnp.isnan(stats.theta), jnp.nan,
+                        stats.clipped_columns.astype(jnp.float32))
     return MetricParts(
         loss=R.wsum(dweight, _stack_losses(problem, w, x, y, mask)),
         grad_norm=tm.tree_norm(g),
@@ -937,27 +966,49 @@ def _metric_parts(problem, R, w, g, stats, x, y, mask, dweight,
         gram_cond_max=R.nanmax(stats.gram_cond),
         gram_cond_mean=R.nanmean(stats.gram_cond),
         aa_used_min=R.nanmin(used),
+        aa_clipped_max=R.nanmax(clipped),
         cohort_ess=R.ess(pweight),
     )
 
 
 def _svrg_round_core(problem, hp, use_aa, R, w_t, x, y, mask, dweight, pweight,
-                     rngs, hist_s=None, hist_y=None, comm=None):
+                     rngs, hist_s=None, hist_y=None, comm=None, poison=None,
+                     poison_scale=0.0):
     """SVRG family: corrected local steps (+ optional AA), delta aggregation.
 
     Two wire crossings: the local full-batch gradients travel up (round trip
     1), then w^t and ∇f travel down and the model deltas travel up (round
     trip 2, with error feedback). The carried AA history is client-local
     state — it never touches the wire.
+
+    ``poison`` — when the robustness layer injects byz_mode="history" faults
+    — is ``(flags [C] bool, keys [C] prng)``: flagged clients' last recorded
+    AA history column is corrupted at magnitude ``poison_scale`` before the
+    multisecant solve (see _client_svrg).
     """
     w_t = R.broadcast(w_t)
     g_k, comm = R.uplink(_stack_grads(problem, w_t, x, y, mask), rngs,
                          GRAD_UPLINK, state=comm)
     g_global = R.broadcast(R.wsum(dweight, g_k))
-    if hist_s is not None:
+    if hist_s is not None and poison is not None:
+        flags, fkeys = poison
+        w_k, stats, new_hs, new_hy = jax.vmap(
+            lambda xx, yy, mm, rr, hs, hy, fl, fk: _client_svrg(
+                problem, hp, use_aa, w_t, g_global, xx, yy, mm, rr, hs, hy,
+                poison=(fl, fk, poison_scale))
+        )(x, y, mask, rngs, hist_s, hist_y, flags, fkeys)
+    elif hist_s is not None:
         w_k, stats, new_hs, new_hy = jax.vmap(
             partial(_client_svrg, problem, hp, use_aa, w_t, g_global)
         )(x, y, mask, rngs, hist_s, hist_y)
+    elif poison is not None:
+        flags, fkeys = poison
+        w_k, stats = jax.vmap(
+            lambda xx, yy, mm, rr, fl, fk: _client_svrg(
+                problem, hp, use_aa, w_t, g_global, xx, yy, mm, rr,
+                poison=(fl, fk, poison_scale))
+        )(x, y, mask, rngs, flags, fkeys)
+        new_hs = new_hy = None
     else:
         w_k, stats = jax.vmap(
             partial(_client_svrg, problem, hp, use_aa, w_t, g_global)
@@ -1084,6 +1135,7 @@ def finalize_metrics(parts: MetricParts, comm_bytes: float) -> RoundMetrics:
         gram_cond_max=parts.gram_cond_max,
         gram_cond_mean=parts.gram_cond_mean,
         aa_used_min=parts.aa_used_min,
+        aa_clipped_max=parts.aa_clipped_max,
         cohort_ess=parts.cohort_ess,
         comm_bytes=jnp.asarray(comm_bytes, jnp.float32),
     )
@@ -1094,13 +1146,16 @@ def finalize_metrics(parts: MetricParts, comm_bytes: float) -> RoundMetrics:
 # --------------------------------------------------------------------------
 
 def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
-                  channel: "CommChannel | str | None" = None):
+                  channel: "CommChannel | str | None" = None,
+                  faults: "FaultPlan | None" = None):
     """Return a jittable round(state) -> (state, RoundMetrics).
 
     Single-process runtime: the K stacked clients are vmapped. The distributed
     runtime with identical numerics is core/sharded.py::make_sharded_round_fn.
     ``channel`` (repro/comm) compresses every wire crossing; None keeps the
-    historical lossless fp32 wire.
+    historical lossless fp32 wire. ``faults`` (repro/robust) injects the
+    plan's dropout/stale/byzantine/DP perturbations inside the compiled
+    body; None (or an inactive plan) compiles the exact fault-free graph.
     """
     if algo not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algo!r}; choose from {ALGORITHMS}")
@@ -1126,24 +1181,74 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         rngs_K = jax.random.split(cl_rng, C.num_clients)
         return rng, _plan_round(problem, csize, state, part_rng, rngs_K)
 
+    # ---------------- fault injection (repro/robust) ----------------
+    # python-gated: an absent/inactive plan leaves every closure below
+    # compiling the identical fault-free graph
+    faults = faults if (faults is not None and faults.active) else None
+    if faults is not None:
+        from repro.robust.faults import (FAULT_ANCHOR_KEY, FaultyReduce,
+                                         advance_anchor, drop_weights,
+                                         freeze_dropped, realize)
+
+    def fault_ctx(plan: CohortPlan, t):
+        """(reduce, dweight, pweight, realization) for this round: realize
+        the plan's per-client draws (keyed by global client id — identical
+        across runtimes and runs), zero + renormalize dropped clients'
+        aggregation weights, and wrap the reduce so uplinks see the
+        byzantine/stale/DP perturbations."""
+        if faults is None:
+            return R, plan.dweight, plan.pweight, None
+        fr = realize(faults, t, C.num_clients, plan.idx)
+        dw, pw = plan.dweight, plan.pweight
+        if faults.drop_rate > 0.0:
+            pw = drop_weights(fr.drop, pw)
+            if algo in ("scaffold", "fedosaa_scaffold"):
+                # scaffold's single exchange: the control variates ride the
+                # lost uplink, so the dweight aggregation drops too; the
+                # two-round-trip families' gradient collection landed before
+                # the mid-round drop, so their dweight keeps every client
+                dw = drop_weights(fr.drop, dw)
+        anchors = None
+        if faults.stale_rate > 0.0:
+            anchors = plan.cohort.comm[FAULT_ANCHOR_KEY]
+        return FaultyReduce(R, faults, fr, anchors), dw, pw, fr
+
+    def fault_epilogue(plan: CohortPlan, fr, w_t, upd: dict) -> dict:
+        """Post-core state landing: stale-anchor refresh first, then the
+        dropped-row bit-freeze (order matters — a dropped client's refreshed
+        anchor must freeze back to its pre-round value too)."""
+        if faults is None:
+            return upd
+        if faults.stale_rate > 0.0 and upd.get("comm") is not None:
+            upd = {**upd, "comm": advance_anchor(upd["comm"], fr.stale, w_t)}
+        if faults.drop_rate > 0.0:
+            upd = freeze_dropped(fr.drop, plan.cohort, upd)
+        return upd
+
     # ---------------- SVRG family ----------------
     if algo in ("fedsvrg", "fedosaa_svrg"):
         use_aa = algo == "fedosaa_svrg"
 
         def round_fn(state: ServerState):
             rng, plan = prologue(state)
+            Rr, dw, pw, fr = fault_ctx(plan, state.t)
             carry = hp.carry_history > 0 and state.hist_s is not None
+            core_kw = {}
+            if faults is not None and faults.poisons_history and use_aa:
+                core_kw = dict(poison=(fr.byz, fr.keys),
+                               poison_scale=faults.byz_scale)
             new_params, parts, new_hs, new_hy, new_comm = _svrg_round_core(
-                problem, hp, use_aa, R, state.params, plan.x, plan.y,
-                plan.mask, plan.dweight, plan.pweight, plan.rngs,
+                problem, hp, use_aa, Rr, state.params, plan.x, plan.y,
+                plan.mask, dw, pw, plan.rngs,
                 plan.cohort.hist_s if carry else None,
                 plan.cohort.hist_y if carry else None,
-                plan.cohort.comm,
+                plan.cohort.comm, **core_kw,
             )
             metrics = finalize_metrics(parts, comm_bytes)
             upd = dict(comm=new_comm)
             if carry:
                 upd.update(hist_s=new_hs, hist_y=new_hy)
+            upd = fault_epilogue(plan, fr, state.params, upd)
             upd = _commit_plan(plan, **upd)
             return state._replace(params=new_params, t=state.t + 1, rng=rng,
                                   **upd), metrics
@@ -1156,13 +1261,16 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
 
         def round_fn(state: ServerState):
             rng, plan = prologue(state)
+            Rr, dw, pw, fr = fault_ctx(plan, state.t)
             new_params, new_c, new_c_k, parts, new_comm = _scaffold_round_core(
-                problem, hp, use_aa, R, state.params, state.c,
+                problem, hp, use_aa, Rr, state.params, state.c,
                 plan.x, plan.y, plan.mask, plan.cohort.c_k,
-                plan.dweight, plan.pweight, plan.rngs, plan.cohort.comm,
+                dw, pw, plan.rngs, plan.cohort.comm,
             )
             metrics = finalize_metrics(parts, comm_bytes)
-            upd = _commit_plan(plan, c_k=new_c_k, comm=new_comm)
+            upd = fault_epilogue(plan, fr, state.params,
+                                 dict(c_k=new_c_k, comm=new_comm))
+            upd = _commit_plan(plan, **upd)
             return (
                 state._replace(params=new_params, c=new_c, t=state.t + 1,
                                rng=rng, **upd),
@@ -1177,13 +1285,15 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
 
         def round_fn(state: ServerState):
             rng, plan = prologue(state)
+            Rr, dw, pw, fr = fault_ctx(plan, state.t)
             new_params, parts, new_comm = _avg_round_core(
-                problem, hp, use_aa, R, state.params, plan.x, plan.y,
-                plan.mask, plan.dweight, plan.pweight, plan.rngs,
+                problem, hp, use_aa, Rr, state.params, plan.x, plan.y,
+                plan.mask, dw, pw, plan.rngs,
                 plan.cohort.comm,
             )
             metrics = finalize_metrics(parts, comm_bytes)
-            upd = _commit_plan(plan, comm=new_comm)
+            upd = fault_epilogue(plan, fr, state.params, dict(comm=new_comm))
+            upd = _commit_plan(plan, **upd)
             return state._replace(params=new_params, t=state.t + 1, rng=rng,
                                   **upd), metrics
 
@@ -1194,12 +1304,14 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
 
         def round_fn(state: ServerState):
             rng, plan = prologue(state)
+            Rr, dw, pw, fr = fault_ctx(plan, state.t)
             new_params, parts, new_comm = _lbfgs_round_core(
-                problem, hp, R, state.params, plan.x, plan.y, plan.mask,
-                plan.dweight, plan.pweight, plan.rngs, plan.cohort.comm,
+                problem, hp, Rr, state.params, plan.x, plan.y, plan.mask,
+                dw, pw, plan.rngs, plan.cohort.comm,
             )
             metrics = finalize_metrics(parts, comm_bytes)
-            upd = _commit_plan(plan, comm=new_comm)
+            upd = fault_epilogue(plan, fr, state.params, dict(comm=new_comm))
+            upd = _commit_plan(plan, **upd)
             return state._replace(params=new_params, t=state.t + 1, rng=rng,
                                   **upd), metrics
 
@@ -1211,13 +1323,15 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
 
         def round_fn(state: ServerState):
             rng, plan = prologue(state)
+            Rr, dw, pw, fr = fault_ctx(plan, state.t)
             new_params, parts, new_comm = _newton_round_core(
-                problem, hp, client_fn, R, state.params, plan.x, plan.y,
-                plan.mask, plan.dweight, plan.pweight, plan.rngs,
+                problem, hp, client_fn, Rr, state.params, plan.x, plan.y,
+                plan.mask, dw, pw, plan.rngs,
                 plan.cohort.comm,
             )
             metrics = finalize_metrics(parts, comm_bytes)
-            upd = _commit_plan(plan, comm=new_comm)
+            upd = fault_epilogue(plan, fr, state.params, dict(comm=new_comm))
+            upd = _commit_plan(plan, **upd)
             return state._replace(params=new_params, t=state.t + 1, rng=rng,
                                   **upd), metrics
 
@@ -1228,12 +1342,14 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
 
     def round_fn(state: ServerState):
         rng, plan = prologue(state)
+        Rr, dw, pw, fr = fault_ctx(plan, state.t)
         new_params, parts, new_comm = _dane_round_core(
-            problem, hp, R, state.params, plan.x, plan.y, plan.mask,
-            plan.dweight, plan.pweight, plan.rngs, plan.cohort.comm,
+            problem, hp, Rr, state.params, plan.x, plan.y, plan.mask,
+            dw, pw, plan.rngs, plan.cohort.comm,
         )
         metrics = finalize_metrics(parts, comm_bytes)
-        upd = _commit_plan(plan, comm=new_comm)
+        upd = fault_epilogue(plan, fr, state.params, dict(comm=new_comm))
+        upd = _commit_plan(plan, **upd)
         return state._replace(params=new_params, t=state.t + 1, rng=rng,
                               **upd), metrics
 

@@ -48,6 +48,16 @@ class AAConfig:
       damping: scale on the quasi-Newton correction term (S−ηY)Γ. 1.0 = paper.
       min_history: below this many valid columns the AA step falls back to the
         plain damped-gradient step (returned unchanged).
+      clip_rtol: byzantine-column screen — drop history columns whose residual
+        norm ‖y_i‖ exceeds median(‖y‖)/clip_rtol before the Gram solve (a
+        column is kept iff clip_rtol·‖y_i‖ ≤ median). The median is the robust
+        scale: with ≤ half the columns poisoned it sits at the clean scale, so
+        one stale/byzantine column (which can otherwise steer the extrapolation
+        arbitrarily through (YᵀY)Γ = Yᵀg) is screened out and the step degrades
+        toward the plain damped-gradient step instead of diverging. Values in
+        (0, 1] keep at least half the columns (0.1 ≈ "drop columns 10× the
+        median"). 0 disables — and is an exact no-op: the default path's
+        compiled graph is unchanged.
     """
 
     tikhonov: float = 1e-10
@@ -58,6 +68,7 @@ class AAConfig:
                                 # (Pasini et al. [28]; App. A option 3) —
                                 # smooths stochastic-gradient noise that
                                 # otherwise stalls AA at the noise floor
+    clip_rtol: float = 0.0
 
 
 class AAStats(NamedTuple):
@@ -67,18 +78,42 @@ class AAStats(NamedTuple):
     gamma_norm: jax.Array     # ‖Γ‖ of the LS solution
     gram_cond: jax.Array      # rough condition estimate of the Gram matrix
     used_columns: jax.Array   # how many eigen-directions survived filtering
+    clipped_columns: jax.Array  # history columns dropped by the clip_rtol
+                                # residual screen (0 when the screen is off)
 
 
-def _solve_gram(gram: jax.Array, rhs: jax.Array, cfg: AAConfig):
+def _solve_gram(gram: jax.Array, rhs: jax.Array, cfg: AAConfig,
+                col_mask: jax.Array | None = None):
     """Solve (YᵀY) Γ = Yᵀg robustly; returns (Γ, stats pieces).
 
     Uses a symmetric eigendecomposition so filtering and conditioning fall out
     for free. m is tiny (≤ local epochs L), so this is negligible work.
+
+    col_mask (bool [m], optional) zeroes the masked columns out of the system
+    entirely — their Gram rows/cols, their rhs entries, AND their Tikhonov
+    diagonal — so a screened column contributes exactly nothing to Γ and does
+    not count toward used_columns (its eigenvalue is exactly 0 and falls to
+    the near-zero guard).
+
+    Degenerate systems are well-defined, never NaN: if filtering plus the
+    near-zero guard drop every direction (all-filtered, or a rank-0 Gram from
+    identical history columns) then Γ is exactly 0 — the caller's update
+    degrades bit-exactly to the plain damped-gradient step — and cond reports
+    1.0 (a zero system is not ill-conditioned, it is empty).
     """
     m = gram.shape[0]
+    tik_diag = jnp.eye(m, dtype=gram.dtype)
+    if col_mask is not None:
+        # select, don't multiply: a byzantine column can carry inf/nan Gram
+        # entries and 0·inf = nan would leak the poison back into the masked
+        # system; jnp.where zeroes the row/column unconditionally
+        cm2 = jnp.logical_and(col_mask[:, None], col_mask[None, :])
+        gram = jnp.where(cm2, gram, 0.0)
+        rhs = jnp.where(col_mask, rhs, 0.0)
+        tik_diag = jnp.where(col_mask[:, None], tik_diag, 0.0)
     trace = jnp.trace(gram)
     lam = cfg.tikhonov * trace / m
-    evals, evecs = jnp.linalg.eigh(gram + lam * jnp.eye(m, dtype=gram.dtype))
+    evals, evecs = jnp.linalg.eigh(gram + lam * tik_diag)
     evals = jnp.maximum(evals, 0.0)
     emax = jnp.max(evals)
     keep = evals > cfg.filter_rtol * emax
@@ -87,9 +122,56 @@ def _solve_gram(gram: jax.Array, rhs: jax.Array, cfg: AAConfig):
     keep = jnp.logical_and(keep, safe)
     inv = jnp.where(keep, 1.0 / jnp.where(keep, evals, 1.0), 0.0)
     gamma = evecs @ (inv * (evecs.T @ rhs))
+    used = jnp.sum(keep)
     emin_kept = jnp.min(jnp.where(keep, evals, emax))
-    cond = emax / jnp.maximum(emin_kept, 1e-30)
-    return gamma, cond, jnp.sum(keep)
+    cond = jnp.where(used > 0, emax / jnp.maximum(emin_kept, 1e-30), 1.0)
+    return gamma, cond, used
+
+
+def _residual_clip_mask(gram: jax.Array, cfg: AAConfig) -> jax.Array:
+    """Bool [m] keep-mask for the clip_rtol byzantine-column screen.
+
+    The per-column residual norms ‖y_i‖ are read off the Gram diagonal (so the
+    screen is identical for the tree and pallas paths, which both have the
+    accumulated Gram in hand), and compared against the jit-friendly robust
+    scale median(‖y‖): keep iff clip_rtol·‖y_i‖ ≤ median. Non-finite columns
+    (an overflowed byzantine column drives ‖y‖² past f32 max) are always
+    dropped and excluded from the median so they cannot poison the scale
+    estimate itself.
+    """
+    norms = jnp.sqrt(jnp.maximum(jnp.diagonal(gram), 0.0))
+    finite = jnp.isfinite(norms)
+    med = jnp.nanmedian(jnp.where(finite, norms, jnp.nan))
+    return jnp.logical_and(finite, cfg.clip_rtol * norms <= med)
+
+
+def _screened_solve(gram: jax.Array, rhs: jax.Array, cfg: AAConfig):
+    """clip_rtol screen (python-gated: off → graph unchanged) + Gram solve.
+
+    Returns (Γ, cond, used_columns, clipped_columns, keep_cols). keep_cols is
+    None when the screen is off; when it is a mask, callers MUST also zero the
+    screened columns out of their own downstream contractions (YΓ, Yᵀg·Γ):
+    Γ's masked entries are exactly 0, but the contraction kernels run in f32
+    where an overflowed byzantine column is ±inf and 0·inf = nan — the poison
+    must never reach a matmul at all.
+    """
+    if cfg.clip_rtol > 0.0:
+        keep_cols = _residual_clip_mask(gram, cfg)
+        clipped = (gram.shape[0] - jnp.sum(keep_cols)).astype(jnp.int32)
+        gamma, cond, used = _solve_gram(gram, rhs, cfg, keep_cols)
+        return gamma, cond, used, clipped, keep_cols
+    clipped = jnp.zeros((), jnp.int32)
+    gamma, cond, used = _solve_gram(gram, rhs, cfg)
+    return gamma, cond, used, clipped, None
+
+
+def _mask_stack_columns(stack: Pytree, keep: jax.Array) -> Pytree:
+    """Zero the non-kept history columns of a stacked pytree ([m, ...] leaves)."""
+    return jax.tree.map(
+        lambda l: jnp.where(
+            keep.reshape((-1,) + (1,) * (l.ndim - 1)), l,
+            jnp.zeros((), l.dtype)),
+        stack)
 
 
 #: legal values of the AA-step implementation knob (AlgoHParams.aa_impl)
@@ -146,7 +228,11 @@ def multisecant_update(
             return _multisecant_update_pallas(w, g, s_stack, y_stack, eta, cfg)
         gram = tm.tree_gram(y_stack, y_stack)          # [m, m] YᵀY
         yg = tm.tree_vdot_stacked(y_stack, g)          # [m]    Yᵀg
-        gamma, cond, used = _solve_gram(gram, yg, cfg)
+        gamma, cond, used, clipped, keep = _screened_solve(gram, yg, cfg)
+        if keep is not None:
+            y_stack = _mask_stack_columns(y_stack, keep)
+            s_stack = _mask_stack_columns(s_stack, keep)
+            yg = jnp.where(keep, yg, 0.0)
 
         # optimization gain θ² = 1 − (Yᵀg·Γ)/‖g‖²   (Eq. 9, via Pythagoras)
         g_norm2 = tm.tree_dot(g, g)
@@ -163,7 +249,8 @@ def multisecant_update(
             w, g, s_gamma, y_gamma,
         )
         stats = AAStats(theta=theta, gamma_norm=jnp.linalg.norm(gamma),
-                        gram_cond=cond, used_columns=used)
+                        gram_cond=cond, used_columns=used,
+                        clipped_columns=clipped)
         return new_w, stats
 
 
@@ -206,17 +293,25 @@ def _multisecant_update_pallas(
         g_norm2 += jnp.dot(gf32, gf32)
         flats.append((idxs, wf, gf, sf, yf))
 
-    gamma, cond, used = _solve_gram(gram, yg, cfg)
+    gamma, cond, used, clipped, keep = _screened_solve(gram, yg, cfg)
+    if keep is not None:
+        yg = jnp.where(keep, yg, 0.0)
     proj2 = jnp.dot(yg, gamma)
     theta = jnp.sqrt(jnp.clip(1.0 - proj2 / jnp.maximum(g_norm2, 1e-30), 0.0, 1.0))
 
     out_leaves = list(w_leaves)
     for idxs, wf, gf, sf, yf in flats:
+        if keep is not None:
+            # see _screened_solve: a screened column must not reach the f32
+            # update matmul (0·inf = nan)
+            sf = jnp.where(keep[:, None], sf, jnp.zeros((), sf.dtype))
+            yf = jnp.where(keep[:, None], yf, jnp.zeros((), yf.dtype))
         of = ops.flat_update(wf, gf, sf, yf, gamma, eta, cfg.damping)
         ops.unravel_group_into(of, w_leaves, idxs, out_leaves)
     new_w = jax.tree.unflatten(treedef, out_leaves)
     stats = AAStats(theta=theta, gamma_norm=jnp.linalg.norm(gamma),
-                    gram_cond=cond, used_columns=used)
+                    gram_cond=cond, used_columns=used,
+                    clipped_columns=clipped)
     return new_w, stats
 
 

@@ -76,7 +76,7 @@ Pytree = Any
 #: RoundMetrics and here.
 METRIC_FIELDS = (
     "loss", "grad_norm", "theta_mean", "gram_cond_max", "gram_cond_mean",
-    "aa_used_min", "cohort_ess", "comm_bytes",
+    "aa_used_min", "aa_clipped_max", "cohort_ess", "comm_bytes",
 )
 
 
@@ -91,6 +91,7 @@ class RoundTrace:
     gram_cond_max: np.ndarray  # [T]
     gram_cond_mean: np.ndarray # [T]
     aa_used_min: np.ndarray    # [T]
+    aa_clipped_max: np.ndarray # [T] clip_rtol screen activity (nan if n/a)
     cohort_ess: np.ndarray     # [T]
     comm_bytes: np.ndarray     # [T] per-round (NOT cumulative) wire bytes
     rel_error: np.ndarray      # [T] ‖w−w*‖/‖w*‖ (nan when w_star not given)

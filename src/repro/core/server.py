@@ -77,6 +77,7 @@ def run_federated(
     sinks=(),
     trace_capture=None,
     tap=None,
+    faults=None,
 ) -> History:
     """Iterate ``num_rounds`` of ``algo`` and collect the metric history.
 
@@ -115,6 +116,13 @@ def run_federated(
                     windows around chunk (or round) execution.
     tap           — live in-chunk jax.debug.callback (obs/sinks.LiveTap);
                     engine path only.
+    faults        — repro/robust.FaultPlan: inject the plan's dropout/stale/
+                    byzantine/DP perturbations inside the compiled round on
+                    either runtime (None or an inactive plan compiles the
+                    exact fault-free graph). Stale-update plans attach the
+                    per-client lagged-anchor rows to the comm state here, so
+                    they ride the cohort gather/scatter and checkpoints like
+                    any other per-client buffer.
     """
     from repro.comm import make_channel
     from repro.comm.schema import uplink_byte_breakdown
@@ -131,6 +139,12 @@ def run_federated(
         # are never consumed (the loop path aliases them harmlessly)
         state = state._replace(
             params=jax.tree.map(jnp.array, w0) if chunk is not None else w0)
+    if faults is not None and faults.active and faults.stale_rate > 0.0:
+        # every client's lagged anchor starts at the actual starting point
+        from repro.robust.faults import init_fault_comm
+
+        state = state._replace(comm=init_fault_comm(
+            state.comm, state.params, problem.clients.num_clients))
     if runtime == "sharded":
         from repro.core.sharded import make_sharded_round_fn
 
@@ -139,9 +153,9 @@ def run_federated(
 
             mesh = make_host_mesh()
         round_fn = make_sharded_round_fn(algo, problem, hp, mesh,
-                                         channel=channel)
+                                         channel=channel, faults=faults)
     else:
-        round_fn = make_round_fn(algo, problem, hp, channel)
+        round_fn = make_round_fn(algo, problem, hp, channel, faults=faults)
 
     sinks = list(sinks)
     run_info = {

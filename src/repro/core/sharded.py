@@ -146,7 +146,8 @@ def num_client_shards(mesh, axes: tuple[str, ...] | None = None) -> int:
 
 def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
                           mesh, client_axes: tuple[str, ...] | None = None,
-                          channel: "CommChannel | str | None" = None):
+                          channel: "CommChannel | str | None" = None,
+                          faults: "FaultPlan | None" = None):
     """Return a jittable round(state) -> (state, RoundMetrics) whose client
     fan-out is shard_mapped over ``mesh``'s ("pod","data") axes.
 
@@ -157,6 +158,15 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
     runtime: each shard encode/decodes its local clients' uploads, so the
     dequantized representation is what the client-axis psum reduces; the
     error-feedback residuals stay sharded with their clients.
+
+    ``faults`` (repro/robust) injects the plan's perturbations exactly as
+    the vmap runtime does: the per-round realization is drawn at jit level
+    (keyed by global client id, so both runtimes inject identical rounds)
+    and enters the shard_map body as extra [C] client-sharded arrays; every
+    fault op inside the body is per-client row-local, so no new collectives
+    appear. The weight adjustment, dropped-row freeze and stale-anchor
+    refresh run at jit level outside the shard_map, shared with the vmap
+    builder's logic verbatim.
     """
     if algo not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algo!r}; choose from {ALGORITHMS}")
@@ -213,6 +223,55 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         return shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs,
                          check_vma=False)
 
+    # ---------------- fault injection (repro/robust) ----------------
+    # python-gated exactly like the vmap builder: an absent/inactive plan
+    # compiles the identical fault-free graph (no extra smap args)
+    faults = faults if (faults is not None and faults.active) else None
+    if faults is not None:
+        from repro.robust.faults import (FAULT_ANCHOR_KEY, FaultRealization,
+                                         FaultyReduce, advance_anchor,
+                                         drop_weights, freeze_dropped,
+                                         realize)
+
+    def fault_ctx(plan, t):
+        """jit-level (OUTSIDE shard_map) realization + weight adjustment.
+        Returns (dweight, pweight, realization, extra-smap-args): the [C]
+        fault arrays ride into the body client-sharded like every other
+        per-client row."""
+        if faults is None:
+            return plan.dweight, plan.pweight, None, ()
+        fr = realize(faults, t, K, plan.idx)
+        dw, pw = plan.dweight, plan.pweight
+        if faults.drop_rate > 0.0:
+            pw = drop_weights(fr.drop, pw)
+            if algo in ("scaffold", "fedosaa_scaffold"):
+                # single exchange: the control variates ride the lost uplink
+                dw = drop_weights(fr.drop, dw)
+        return dw, pw, fr, tuple(fr)
+
+    def fault_reduce(e, fxa):
+        """Inside the body: rebuild the shard-local realization and wrap the
+        reduce. Returns (reduce, realization-or-None)."""
+        if not fxa:
+            return R, None
+        frl = FaultRealization(*fxa)
+        anchors = e[FAULT_ANCHOR_KEY] if faults.stale_rate > 0.0 else None
+        return FaultyReduce(R, faults, frl, anchors), frl
+
+    def fault_epilogue(plan, fr, w_t, upd):
+        """jit-level post-core landing: stale-anchor refresh, then the
+        dropped-row bit-freeze (a dropped client's refreshed anchor must
+        freeze back too) — same order as the vmap builder."""
+        if faults is None:
+            return upd
+        if faults.stale_rate > 0.0 and upd.get("comm") is not None:
+            upd = {**upd, "comm": advance_anchor(upd["comm"], fr.stale, w_t)}
+        if faults.drop_rate > 0.0:
+            upd = freeze_dropped(fr.drop, plan.cohort, upd)
+        return upd
+
+    fsp = () if faults is None else (csh,) * 4
+
     # NOTE: optional per-client state (carried AA history, error-feedback
     # residuals) passes through shard_map as None when absent — None is an
     # empty pytree, so the csh spec sharding it has no leaves to act on and
@@ -224,25 +283,32 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
 
         def round_fn(state: ServerState):
             rng, plan = prologue(state)
+            dw, pw, fr, fx = fault_ctx(plan, state.t)
             carry = hp.carry_history > 0 and state.hist_s is not None
 
-            def body(w_t, x, y, mask, dw, pw, r, hs, hy, e):
+            def body(w_t, x, y, mask, dw_, pw_, r, hs, hy, e, *fxa):
+                Rb, frl = fault_reduce(e, fxa)
+                kw = {}
+                if frl is not None and faults.poisons_history and use_aa:
+                    kw = dict(poison=(frl.byz, frl.keys),
+                              poison_scale=faults.byz_scale)
                 return _svrg_round_core(
-                    problem, hp, use_aa, R, w_t, x, y, mask, dw, pw, r,
-                    hs, hy, e)
+                    problem, hp, use_aa, Rb, w_t, x, y, mask, dw_, pw_, r,
+                    hs, hy, e, **kw)
 
             new_params, parts, new_hs, new_hy, new_comm = smap(
                 body,
-                in_specs=(rep, csh, csh, csh, csh, csh, csh, csh, csh, csh),
+                in_specs=(rep, csh, csh, csh, csh, csh, csh, csh, csh, csh)
+                + fsp,
                 out_specs=(rep, rep, csh, csh, csh),
-            )(state.params, plan.x, plan.y, plan.mask, plan.dweight,
-              plan.pweight, plan.rngs,
+            )(state.params, plan.x, plan.y, plan.mask, dw, pw, plan.rngs,
               plan.cohort.hist_s if carry else None,
               plan.cohort.hist_y if carry else None,
-              plan.cohort.comm)
+              plan.cohort.comm, *fx)
             upd = dict(comm=new_comm)
             if carry:
                 upd.update(hist_s=new_hs, hist_y=new_hy)
+            upd = fault_epilogue(plan, fr, state.params, upd)
             upd = _commit_plan(plan, **upd)
             return state._replace(params=new_params, t=state.t + 1, rng=rng,
                                   **upd), finalize_metrics(parts, comm_bytes)
@@ -255,20 +321,24 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
 
         def round_fn(state: ServerState):
             rng, plan = prologue(state)
+            dw, pw, fr, fx = fault_ctx(plan, state.t)
 
-            def body(w_t, c, x, y, mask, c_k, dw, pw, r, e):
+            def body(w_t, c, x, y, mask, c_k, dw_, pw_, r, e, *fxa):
+                Rb, _ = fault_reduce(e, fxa)
                 return _scaffold_round_core(
-                    problem, hp, use_aa, R, w_t, c, x, y, mask, c_k, dw, pw,
-                    r, e)
+                    problem, hp, use_aa, Rb, w_t, c, x, y, mask, c_k, dw_,
+                    pw_, r, e)
 
             new_params, new_c, new_c_k, parts, new_comm = smap(
                 body,
-                in_specs=(rep, rep, csh, csh, csh, csh, csh, csh, csh, csh),
+                in_specs=(rep, rep, csh, csh, csh, csh, csh, csh, csh, csh)
+                + fsp,
                 out_specs=(rep, rep, csh, rep, csh),
             )(state.params, state.c, plan.x, plan.y, plan.mask,
-              plan.cohort.c_k, plan.dweight, plan.pweight, plan.rngs,
-              plan.cohort.comm)
-            upd = _commit_plan(plan, c_k=new_c_k, comm=new_comm)
+              plan.cohort.c_k, dw, pw, plan.rngs, plan.cohort.comm, *fx)
+            upd = fault_epilogue(plan, fr, state.params,
+                                 dict(c_k=new_c_k, comm=new_comm))
+            upd = _commit_plan(plan, **upd)
             return (
                 state._replace(params=new_params, c=new_c, t=state.t + 1,
                                rng=rng, **upd),
@@ -283,18 +353,21 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
 
         def round_fn(state: ServerState):
             rng, plan = prologue(state)
+            dw, pw, fr, fx = fault_ctx(plan, state.t)
 
-            def body(w_t, x, y, mask, dw, pw, r, e):
+            def body(w_t, x, y, mask, dw_, pw_, r, e, *fxa):
+                Rb, _ = fault_reduce(e, fxa)
                 return _avg_round_core(
-                    problem, hp, use_aa, R, w_t, x, y, mask, dw, pw, r, e)
+                    problem, hp, use_aa, Rb, w_t, x, y, mask, dw_, pw_, r, e)
 
             new_params, parts, new_comm = smap(
                 body,
-                in_specs=(rep, csh, csh, csh, csh, csh, csh, csh),
+                in_specs=(rep, csh, csh, csh, csh, csh, csh, csh) + fsp,
                 out_specs=(rep, rep, csh),
-            )(state.params, plan.x, plan.y, plan.mask, plan.dweight,
-              plan.pweight, plan.rngs, plan.cohort.comm)
-            upd = _commit_plan(plan, comm=new_comm)
+            )(state.params, plan.x, plan.y, plan.mask, dw, pw, plan.rngs,
+              plan.cohort.comm, *fx)
+            upd = fault_epilogue(plan, fr, state.params, dict(comm=new_comm))
+            upd = _commit_plan(plan, **upd)
             return state._replace(params=new_params, t=state.t + 1,
                                   rng=rng, **upd), finalize_metrics(parts, comm_bytes)
 
@@ -305,18 +378,21 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
 
         def round_fn(state: ServerState):
             rng, plan = prologue(state)
+            dw, pw, fr, fx = fault_ctx(plan, state.t)
 
-            def body(w_t, x, y, mask, dw, pw, r, e):
+            def body(w_t, x, y, mask, dw_, pw_, r, e, *fxa):
+                Rb, _ = fault_reduce(e, fxa)
                 return _lbfgs_round_core(
-                    problem, hp, R, w_t, x, y, mask, dw, pw, r, e)
+                    problem, hp, Rb, w_t, x, y, mask, dw_, pw_, r, e)
 
             new_params, parts, new_comm = smap(
                 body,
-                in_specs=(rep, csh, csh, csh, csh, csh, csh, csh),
+                in_specs=(rep, csh, csh, csh, csh, csh, csh, csh) + fsp,
                 out_specs=(rep, rep, csh),
-            )(state.params, plan.x, plan.y, plan.mask, plan.dweight,
-              plan.pweight, plan.rngs, plan.cohort.comm)
-            upd = _commit_plan(plan, comm=new_comm)
+            )(state.params, plan.x, plan.y, plan.mask, dw, pw, plan.rngs,
+              plan.cohort.comm, *fx)
+            upd = fault_epilogue(plan, fr, state.params, dict(comm=new_comm))
+            upd = _commit_plan(plan, **upd)
             return state._replace(params=new_params, t=state.t + 1,
                                   rng=rng, **upd), finalize_metrics(parts, comm_bytes)
 
@@ -328,18 +404,22 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
 
         def round_fn(state: ServerState):
             rng, plan = prologue(state)
+            dw, pw, fr, fx = fault_ctx(plan, state.t)
 
-            def body(w_t, x, y, mask, dw, pw, r, e):
+            def body(w_t, x, y, mask, dw_, pw_, r, e, *fxa):
+                Rb, _ = fault_reduce(e, fxa)
                 return _newton_round_core(
-                    problem, hp, client_fn, R, w_t, x, y, mask, dw, pw, r, e)
+                    problem, hp, client_fn, Rb, w_t, x, y, mask, dw_, pw_,
+                    r, e)
 
             new_params, parts, new_comm = smap(
                 body,
-                in_specs=(rep, csh, csh, csh, csh, csh, csh, csh),
+                in_specs=(rep, csh, csh, csh, csh, csh, csh, csh) + fsp,
                 out_specs=(rep, rep, csh),
-            )(state.params, plan.x, plan.y, plan.mask, plan.dweight,
-              plan.pweight, plan.rngs, plan.cohort.comm)
-            upd = _commit_plan(plan, comm=new_comm)
+            )(state.params, plan.x, plan.y, plan.mask, dw, pw, plan.rngs,
+              plan.cohort.comm, *fx)
+            upd = fault_epilogue(plan, fr, state.params, dict(comm=new_comm))
+            upd = _commit_plan(plan, **upd)
             return state._replace(params=new_params, t=state.t + 1,
                                   rng=rng, **upd), finalize_metrics(parts, comm_bytes)
 
@@ -350,18 +430,21 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
 
     def round_fn(state: ServerState):
         rng, plan = prologue(state)
+        dw, pw, fr, fx = fault_ctx(plan, state.t)
 
-        def body(w_t, x, y, mask, dw, pw, r, e):
-            return _dane_round_core(problem, hp, R, w_t, x, y, mask, dw, pw,
-                                    r, e)
+        def body(w_t, x, y, mask, dw_, pw_, r, e, *fxa):
+            Rb, _ = fault_reduce(e, fxa)
+            return _dane_round_core(problem, hp, Rb, w_t, x, y, mask, dw_,
+                                    pw_, r, e)
 
         new_params, parts, new_comm = smap(
             body,
-            in_specs=(rep, csh, csh, csh, csh, csh, csh, csh),
+            in_specs=(rep, csh, csh, csh, csh, csh, csh, csh) + fsp,
             out_specs=(rep, rep, csh),
-        )(state.params, plan.x, plan.y, plan.mask, plan.dweight, plan.pweight,
-          plan.rngs, plan.cohort.comm)
-        upd = _commit_plan(plan, comm=new_comm)
+        )(state.params, plan.x, plan.y, plan.mask, dw, pw,
+          plan.rngs, plan.cohort.comm, *fx)
+        upd = fault_epilogue(plan, fr, state.params, dict(comm=new_comm))
+        upd = _commit_plan(plan, **upd)
         return state._replace(params=new_params, t=state.t + 1,
                               rng=rng, **upd), finalize_metrics(parts, comm_bytes)
 

@@ -34,11 +34,28 @@ def partition(
 
     elif scheme == "imbalance":
         # geometric interpolation from 50% down to 0.2% (paper §4), normalized
+        if n < 2 * num_clients:
+            raise ValueError(
+                f"imbalance partition needs >= 2 samples per client: "
+                f"n={n} < 2*num_clients={2 * num_clients}")
         fracs = np.geomspace(0.5, 0.002, num_clients)
         fracs = fracs / fracs.sum()
         counts = np.maximum((fracs * n).astype(int), 2)
+        # the 2-sample floor can push the total past n; trim the excess from
+        # the largest clients (never below 2) so every client keeps >= 2
+        # samples instead of trailing clients getting empty slices
+        excess = int(counts.sum()) - n
+        while excess > 0:
+            k = int(np.argmax(counts))
+            take = min(excess, int(counts[k]) - 2)
+            counts[k] -= take
+            excess -= take
+        if excess < 0:
+            # floor-rounding undershoot: give the remainder to the largest
+            # client (keeps the power-law head) instead of silently dropping
+            # the samples
+            counts[int(np.argmax(counts))] -= excess
         edges = np.concatenate([[0], np.cumsum(counts)])
-        edges = np.minimum(edges, n)
         xs = [X[edges[k]:edges[k + 1]] for k in range(num_clients)]
         ys = [y[edges[k]:edges[k + 1]] for k in range(num_clients)]
 

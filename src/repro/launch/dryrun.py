@@ -238,7 +238,8 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
                     comm_codec: str = "identity", rounds: int = 1,
                     round_chunk: int = 1, aa_impl: str = "auto",
                     local_impl: str = "auto",
-                    cohort_size: int | None = None) -> dict:
+                    cohort_size: int | None = None,
+                    clip_rtol: float = 0.0) -> dict:
     """Compile + execute shard_mapped FL round(s) on the production mesh.
 
     Uses a synthetic logistic-regression problem (the paper's workload) with
@@ -262,6 +263,11 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
     AlgoHParams.aa_impl and .local_impl (the sharded runtime resolves both
     to "tree" — this dry-run exercises the automatic fallback).
 
+    ``clip_rtol`` threads AAConfig.clip_rtol — the residual-clipped AA
+    byzantine screen (repro/robust) — through the sharded round, so the
+    defended step's compile/collective profile is measurable on the
+    production mesh (0 = screen off, the bit-identical vanilla step).
+
     ``cohort_size`` samples a C-client cohort each round (AlgoHParams
     .cohort_size): the compiled round computes on [C, ...] tensors gathered
     from the K-sized client store — the scale demonstration is
@@ -274,6 +280,7 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
     """
     from repro.comm import make_channel
     from repro.core import AlgoHParams, init_state, run_rounds, solve_reference
+    from repro.core.anderson import AAConfig
     from repro.core.sharded import make_sharded_round_fn, num_client_shards
     from repro.data import make_binary_classification, partition
     from repro.models.logreg import make_logreg_problem
@@ -288,13 +295,14 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
                              if rounds <= 1 else ""))
     round_chunk = max(1, min(round_chunk, rounds))
     mesh = make_production_mesh(multi_pod=multi_pod)
+    aa = AAConfig(clip_rtol=clip_rtol)
     if algo in _NEWTON_ALGOS:
         n = 8192 if n is None else n
-        hp = AlgoHParams(eta=1.0, local_epochs=10, aa_impl=aa_impl,
+        hp = AlgoHParams(eta=1.0, local_epochs=10, aa=aa, aa_impl=aa_impl,
                          local_impl=local_impl, cohort_size=cohort_size)
     else:
         n = max(2048, 8 * num_clients) if n is None else n
-        hp = AlgoHParams(eta=0.5, local_epochs=3, aa_impl=aa_impl,
+        hp = AlgoHParams(eta=0.5, local_epochs=3, aa=aa, aa_impl=aa_impl,
                          local_impl=local_impl, cohort_size=cohort_size)
     X, y = make_binary_classification("synthetic_small", n=n, seed=0)
     clients = partition(X, y, num_clients=num_clients, scheme="iid")
@@ -364,6 +372,7 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
         "cohort_size": cohort_size,
         "channel": channel.name,
         "round_chunk": round_chunk,
+        "clip_rtol": clip_rtol,
         "aa_impl": aa_impl,
         "local_impl": local_impl,
         "compile_s": round(compile_s, 1),
@@ -410,6 +419,10 @@ def main() -> None:
                          "O(K·d) client store (core/client_store.py). The "
                          "scale demo: --fl-clients 4096 --cohort-size 16. "
                          "0 = dense full-K rounds")
+    ap.add_argument("--clip-rtol", type=float, default=0.0,
+                    help="with --fl-round: AAConfig.clip_rtol, the residual-"
+                         "clipped AA byzantine screen (repro/robust). "
+                         "0 = screen off")
     ap.add_argument("--aa-impl", choices=("auto", "tree", "pallas"),
                     default="auto",
                     help="with --fl-round: AlgoHParams.aa_impl (the sharded "
@@ -438,6 +451,8 @@ def main() -> None:
             engine_tag += f"cohort{args.cohort_size}-of-{args.fl_clients}"
         elif eff_chunk > 1:
             engine_tag += f"chunk{eff_chunk}"
+        if args.clip_rtol:
+            engine_tag += ("+" if engine_tag else "") + f"clip{args.clip_rtol:g}"
         if args.aa_impl != "auto":
             engine_tag += ("+" if engine_tag else "") + args.aa_impl
         if args.local_impl != "auto":
@@ -454,7 +469,8 @@ def main() -> None:
                                       round_chunk=args.round_chunk,
                                       aa_impl=args.aa_impl,
                                       local_impl=args.local_impl,
-                                      cohort_size=args.cohort_size or None)
+                                      cohort_size=args.cohort_size or None,
+                                      clip_rtol=args.clip_rtol)
                 with open(os.path.join(RESULTS_DIR, tag + ".json"), "w") as f:
                     json.dump(res, f, indent=1)
                 print(f"OK   {tag}: compile={res['compile_s']}s "

@@ -38,6 +38,13 @@ def main() -> None:
     ap.add_argument("--eta", type=float, default=0.3)
     ap.add_argument("--local-epochs", type=int, default=5)
     ap.add_argument("--damping", type=float, default=1.0)
+    ap.add_argument("--clip-rtol", type=float, default=0.0,
+                    help="residual-clipped AA (AAConfig.clip_rtol): drop any "
+                         "history column whose residual norm exceeds the "
+                         "client's median by more than 1/clip_rtol before the "
+                         "Gram solve — the byzantine-history defense "
+                         "(repro/robust). 0 = screen off (bit-identical to "
+                         "the unscreened step)")
     ap.add_argument("--participation", type=float, default=1.0,
                     help="fraction of clients active per round: <1.0 samples "
                          "a ⌈pK⌉-client cohort each round (weighted, without "
@@ -130,7 +137,8 @@ def main() -> None:
     hp = AlgoHParams(eta=args.eta, local_epochs=args.local_epochs,
                      participation=args.participation,
                      cohort_size=args.cohort_size or None,
-                     aa=AAConfig(damping=args.damping, tikhonov=1e-8),
+                     aa=AAConfig(damping=args.damping, tikhonov=1e-8,
+                                 clip_rtol=args.clip_rtol),
                      aa_impl=args.aa_impl, local_impl=args.local_impl)
     channel = make_channel(args.comm_codec)
     chunk = args.round_chunk if args.round_chunk > 0 else None

@@ -21,7 +21,12 @@ Rule operators:
 loss (stop — the run is already garbage), AA Gram conditioning blowing past
 1e12 (the divergence predictor), AA column filtering collapsing to zero used
 directions (the extrapolation silently became vanilla FedAvg), and a
-rel-error plateau (the run stopped making progress toward w*).
+rel-error plateau (the run stopped making progress toward w*). PR 8 adds
+aa_clipping_active: the clip_rtol byzantine screen (core/anderson.py) dropped
+history columns this round — the monitor's per-rule cooldown turns a
+persistently-active screen into a periodic warning (a one-off clip stays a
+single log line) telling the operator some client's history is being
+rejected as poisoned.
 """
 from __future__ import annotations
 
@@ -63,6 +68,7 @@ DEFAULT_RULES = (
     AlarmRule("aa_columns_collapsed", "aa_used_min", "lt", threshold=1.0),
     AlarmRule("rel_error_plateau", "rel_error", "no_improve",
               window=50, min_improve=1e-3),
+    AlarmRule("aa_clipping_active", "aa_clipped_max", "gt", threshold=0.0),
 )
 
 

@@ -6,14 +6,15 @@ the driver already fetched, so attaching any number of sinks adds zero
 device→host transfers (tests/test_obs.py counts them). The legacy per-round
 loop (core/server.py) feeds the same rows at round granularity.
 
-Row schema (versioned — bump SCHEMA_VERSION on any incompatible change):
+Row schema (versioned — bump SCHEMA_VERSION on any incompatible change;
+v2 added aa_clipped_max, the robustness layer's clip-screen activity):
 
-  header row  {"v": 1, "kind": "header", "fields": [...], ...run metadata:
+  header row  {"v": 2, "kind": "header", "fields": [...], ...run metadata:
                algo / runtime / channel / num_clients / cohort_size / chunk /
                num_rounds / uplink_bytes (per-UplinkSpec byte breakdown from
                the comm schema) / backend}
-  round row   {"v": 1, "kind": "round", "round": t, <ROW_FIELDS>}
-  footer row  {"v": 1, "kind": "footer", "rounds": T, "stopped": bool,
+  round row   {"v": 2, "kind": "round", "round": t, <ROW_FIELDS>}
+  footer row  {"v": 2, "kind": "footer", "rounds": T, "stopped": bool,
                "alarms": [...]}
 
 Round-row fields (ROW_FIELDS):
@@ -25,6 +26,10 @@ Round-row fields (ROW_FIELDS):
                          diagnostic that predicts FedOSAA divergence)
   aa_used_min          — fewest Gram eigen-directions surviving filtering on
                          any client (0 = column-filtering collapse)
+  aa_clipped_max       — most history columns the clip_rtol byzantine screen
+                         dropped on any client (0 = screen off or inactive;
+                         persistent non-zero trips the aa_clipping_active
+                         alarm)
   cohort_ess           — effective sample size 1/Σw² of the round's
                          aggregation weights (cohort draw concentration)
   comm_bytes           — this round's wire bytes (codec-exact)
@@ -46,7 +51,7 @@ from typing import Any, Protocol, runtime_checkable
 
 import numpy as np
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 #: canonical per-round row fields, in emission order (after "round")
 ROW_FIELDS = (
@@ -57,6 +62,7 @@ ROW_FIELDS = (
     "gram_cond_max",
     "gram_cond_mean",
     "aa_used_min",
+    "aa_clipped_max",
     "cohort_ess",
     "comm_bytes",
     "comm_bytes_total",
@@ -85,6 +91,7 @@ def build_round_row(round_idx: int, metrics: "dict[str, float]", rel: float,
         "gram_cond_max": metrics["gram_cond_max"],
         "gram_cond_mean": metrics["gram_cond_mean"],
         "aa_used_min": metrics["aa_used_min"],
+        "aa_clipped_max": metrics["aa_clipped_max"],
         "cohort_ess": metrics["cohort_ess"],
         "comm_bytes": metrics["comm_bytes"],
         "comm_bytes_total": comm_total,

@@ -1,0 +1,16 @@
+"""Robustness layer: fault injection (faults.py) + the clip_rtol defense
+(core/anderson.py) + the fault-matrix acceptance benchmark
+(benchmarks/ext_robustness.py)."""
+from repro.robust.faults import (  # noqa: F401
+    BYZ_MODES,
+    FAULT_ANCHOR_KEY,
+    FaultPlan,
+    FaultRealization,
+    FaultyReduce,
+    advance_anchor,
+    drop_weights,
+    freeze_dropped,
+    init_fault_comm,
+    poison_last_column,
+    realize,
+)

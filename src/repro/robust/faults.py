@@ -1,0 +1,301 @@
+"""Fault injection for the federated round (the robustness layer's attack half).
+
+A ``FaultPlan`` declares, per run, which adversarial conditions the compiled
+round body must inject; ``realize`` draws the plan's per-round, per-client
+realization from a counter-keyed PRNG stream inside jit, so the same plan
+seed reproduces bit-identical injected rounds across runs AND across the
+vmap/sharded runtimes (the draws are keyed by GLOBAL client id and round
+index only — never by cohort position or shard layout).
+
+Fault kinds
+-----------
+* **dropout** (``drop_rate``) — the client computes its full round but the
+  uplink never lands: its aggregation weight is zeroed (survivors renormalize)
+  and every per-client state row it would have written (AA history, control
+  variates, codec EF/ref buffers, the stale anchor below) is bit-frozen at its
+  pre-round value. Distinct from a never-sampled cohort row: the dropped
+  client burns the compute and its rng draws advance; only the landing is
+  suppressed.
+* **staleness** (``stale_rate``) — the client uploads a delta computed against
+  an aged anchor ``w^{t-s}`` instead of the round's ``w^t``. Each client
+  carries a cached anchor row (under :data:`FAULT_ANCHOR_KEY` in the comm
+  state, so it rides the cohort gather/scatter and checkpoints for free);
+  a stale draw keeps the cache aged — consecutive draws compound s — and a
+  fresh draw refreshes it to the current ``w^t``.
+* **byzantine** (``byz_clients`` lowest-id clients, ``byz_mode``):
+  ``"sign_flip"`` uploads ``−byz_scale·v``; ``"noise"`` replaces the upload
+  with a random direction scaled to ``byz_scale·‖v‖``; ``"history"`` corrupts
+  the client's recorded last AA history column post-trajectory (the
+  poisoned-Gram-column attack the ``AAConfig.clip_rtol`` screen defends —
+  uplink modes poison the *aggregate*, which no per-client defense can undo).
+* **DP noise** (``dp_sigma``) — client-side Gaussian noise composed AFTER the
+  codec's encode (via ``CrossClientReduce.uplink(post_codec=...)``), so
+  error-feedback residuals and difference-coding references track the noised
+  wire rather than silently eating the noise.
+
+``FaultyReduce`` wraps a runtime's ``CrossClientReduce``/``ShardReduce`` and
+applies the uplink-level faults; the weight/freeze/anchor plumbing lives in
+the round builders (core/algorithms.py, core/sharded.py) at jit level outside
+any shard_map so both runtimes share it verbatim.
+
+Scope note: the history-poison fault targets the AA mechanism and is threaded
+through the SVRG family (the paper's headline algorithms); every other fault
+kind applies to all algorithm families.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_math as tm
+
+Pytree = Any
+
+BYZ_MODES = ("sign_flip", "noise", "history")
+
+#: reserved tag for the per-client [K, ...] lagged-anchor rows in the comm
+#: state dict (codec tags are short names like "grad"/"delta" and
+#: comm/schema.py rejects duplicates, so the dunder name cannot collide)
+FAULT_ANCHOR_KEY = "__fault_anchor__"
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Declarative, jit-compatible fault schedule for a federated run.
+
+    seed keys the entire injection stream: two runs with equal plans produce
+    bit-identical injected rounds. Rates are per-round independent Bernoulli
+    draws per client; byzantine clients are the fixed ``byz_clients``
+    lowest-id clients (persistent attackers, the standard threat model).
+    """
+
+    seed: int = 0
+    drop_rate: float = 0.0
+    stale_rate: float = 0.0
+    byz_clients: int = 0
+    byz_mode: str = "sign_flip"
+    byz_scale: float = 10.0
+    dp_sigma: float = 0.0
+
+    def __post_init__(self):
+        if self.byz_mode not in BYZ_MODES:
+            raise ValueError(
+                f"unknown byz_mode {self.byz_mode!r}; choose from {BYZ_MODES}")
+        for name in ("drop_rate", "stale_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if self.byz_clients < 0:
+            raise ValueError(f"byz_clients must be >= 0, got {self.byz_clients}")
+        if self.dp_sigma < 0.0:
+            raise ValueError(f"dp_sigma must be >= 0, got {self.dp_sigma}")
+
+    @property
+    def active(self) -> bool:
+        """False = the plan is a no-op and the builders compile the exact
+        fault-free graph (python-gated: no dead fault code in the jit)."""
+        return (self.drop_rate > 0.0 or self.stale_rate > 0.0
+                or self.byz_clients > 0 or self.dp_sigma > 0.0)
+
+    @property
+    def poisons_history(self) -> bool:
+        return self.byz_clients > 0 and self.byz_mode == "history"
+
+    @property
+    def perturbs_uplink(self) -> bool:
+        return self.byz_clients > 0 and self.byz_mode != "history"
+
+
+class FaultRealization(NamedTuple):
+    """One round's realized faults for the C cohort clients (all [C])."""
+
+    drop: jax.Array   # bool — uplink never lands
+    stale: jax.Array  # bool — delta re-based on the aged anchor
+    byz: jax.Array    # bool — client is byzantine this round
+    keys: jax.Array   # per-client fault PRNG keys (noise draws)
+
+
+def realize(plan: FaultPlan, t: jax.Array, num_clients: int,
+            idx: jax.Array | None = None) -> FaultRealization:
+    """Draw round ``t``'s [C] fault realization inside jit.
+
+    All draws are taken over the full K-client population keyed by
+    ``fold_in(PRNGKey(plan.seed), t)`` and then gathered by the cohort's
+    global client ids (``idx``; None = dense identity cohort), so a client's
+    fault fate this round is independent of whether/where it was sampled —
+    the property that makes the vmap and sharded runtimes (and repeated runs)
+    inject identical rounds.
+    """
+    round_key = jax.random.fold_in(jax.random.PRNGKey(plan.seed), t)
+    ids = jnp.arange(num_clients) if idx is None else idx
+    drop_k = jax.random.uniform(
+        jax.random.fold_in(round_key, 1), (num_clients,)) < plan.drop_rate
+    stale_k = jax.random.uniform(
+        jax.random.fold_in(round_key, 2), (num_clients,)) < plan.stale_rate
+    per_client = jax.vmap(
+        lambda i: jax.random.fold_in(jax.random.fold_in(round_key, 3), i))
+    return FaultRealization(
+        drop=drop_k[ids],
+        stale=stale_k[ids],
+        byz=ids < plan.byz_clients,
+        keys=per_client(ids),
+    )
+
+
+def _bc(flags: jax.Array, like: jax.Array) -> jax.Array:
+    """Broadcast a [C] flag vector against a [C, ...] leaf."""
+    return flags.reshape(flags.shape + (1,) * (like.ndim - 1))
+
+
+# -- dropout ----------------------------------------------------------------
+
+def drop_weights(drop: jax.Array, weights: jax.Array) -> jax.Array:
+    """Zero dropped clients' aggregation weights and renormalize over the
+    survivors. An all-dropped round yields all-zero weights — the delta-form
+    aggregation then keeps w^t exactly (no update lands)."""
+    w = jnp.where(drop, 0.0, weights)
+    return w / jnp.maximum(jnp.sum(w), 1e-30)
+
+
+def freeze_dropped(drop: jax.Array, cohort, updates: dict) -> dict:
+    """Bit-freeze dropped clients' per-client state rows.
+
+    ``updates`` maps ClientStateStore field names (c_k / hist_s / hist_y /
+    comm) to this round's new [C, ...] rows; every leaf row of a dropped
+    client reverts to its pre-round value from ``cohort`` — the client
+    computed, but nothing it produced (AA history, control variate, codec
+    buffers, stale anchor) lands anywhere. Conservative whole-row semantics:
+    this is exactly the frozen-row contract tests/test_cohort.py pins for
+    never-sampled clients, applied to sampled-but-dropped ones.
+    """
+    frozen = {}
+    for name, new in updates.items():
+        if new is None:
+            frozen[name] = None
+            continue
+        old = getattr(cohort, name)
+        frozen[name] = jax.tree.map(
+            lambda o, n: jnp.where(_bc(drop, n), o, n), old, new)
+    return frozen
+
+
+# -- staleness --------------------------------------------------------------
+
+def init_fault_comm(comm: dict | None, params: Pytree,
+                    num_clients: int) -> dict:
+    """Attach the per-client lagged-anchor rows (all clients start at w0)."""
+    anchor = jax.tree.map(
+        lambda p: jnp.broadcast_to(p, (num_clients,) + p.shape), params)
+    return {**(comm or {}), FAULT_ANCHOR_KEY: anchor}
+
+
+def advance_anchor(comm: dict, stale: jax.Array, w_t: Pytree) -> dict:
+    """Post-round anchor refresh: fresh clients re-anchor on this round's
+    w^t; clients drawn stale keep their aged copy, so staleness s compounds
+    across consecutive stale draws (s = the run length of the draw)."""
+    anchor = comm[FAULT_ANCHOR_KEY]
+    new = jax.tree.map(
+        lambda a, w: jnp.where(_bc(stale, a), a, jnp.broadcast_to(w, a.shape)),
+        anchor, w_t)
+    return {**comm, FAULT_ANCHOR_KEY: new}
+
+
+# -- byzantine --------------------------------------------------------------
+
+def poison_last_column(y_stack: Pytree, flag: jax.Array, key: jax.Array,
+                       scale: float) -> Pytree:
+    """byz_mode="history": corrupt ONE client's last recorded AA residual
+    column, scaled to ``scale·‖y_0‖`` (relative to the client's own first
+    column so the attack is magnitude-calibrated per client). flag=False adds
+    exactly 0.0 — honest clients' history is numerically untouched."""
+    y_last = jax.tree.map(lambda c: c[-1], y_stack)
+    noise = tm.tree_random_like(key, y_last)
+    nn = jnp.maximum(tm.tree_norm(noise), 1e-30)
+    ref = jnp.maximum(tm.tree_norm(jax.tree.map(lambda c: c[0], y_stack)),
+                      1e-30)
+    mag = jnp.where(flag, scale * ref / nn, 0.0)
+    return jax.tree.map(
+        lambda c, n: c.at[-1].add(mag * n.astype(c.dtype)), y_stack, noise)
+
+
+# -- the faulty wire --------------------------------------------------------
+
+class FaultyReduce:
+    """A ``CrossClientReduce`` view with the round's uplink faults applied.
+
+    Wraps the runtime's reduce (vmap or sharded — every op it injects is
+    per-client row-local, so it composes with shard_map bodies) and perturbs
+    ``uplink`` only; reductions, broadcast and wire accounting delegate to
+    the wrapped instance. Fault order on the wire: byzantine perturbation →
+    stale re-basing → codec encode/decode → DP noise (post-codec, so EF sees
+    the noised stream).
+    """
+
+    def __init__(self, inner, plan: FaultPlan, fr: FaultRealization,
+                 anchor_rows: Pytree | None = None):
+        self.inner = inner
+        self.plan = plan
+        self.fr = fr
+        self.anchor_rows = anchor_rows  # [C, ...] lagged anchors (stale mode)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def uplink(self, stacked, rngs, spec, anchor=None, state=None, **kw):
+        plan, fr = self.plan, self.fr
+        fkeys = jax.vmap(
+            lambda k: jax.random.fold_in(k, spec.fold))(fr.keys)
+        if plan.perturbs_uplink:
+            stacked = _byz_uplink(plan, fr.byz, fkeys, stacked, anchor)
+        if plan.stale_rate > 0.0 and anchor is not None \
+                and self.anchor_rows is not None:
+            # the stale client computed its delta against its aged anchor;
+            # the server re-bases every delta on the current w^t, so the
+            # landed value picks up the anchor drift (w^t − w^{t-s})
+            stacked = jax.tree.map(
+                lambda s, a, w: jnp.where(
+                    _bc(fr.stale, s), s + (w - a), s),
+                stacked, self.anchor_rows, anchor)
+        post = None
+        post_rngs = None
+        if plan.dp_sigma > 0.0:
+            sigma = plan.dp_sigma
+
+            def post(dec, pr):
+                return tm.tree_add(dec, tm.tree_random_like(pr, dec,
+                                                            scale=sigma))
+            post_rngs = jax.vmap(
+                lambda k: jax.random.fold_in(k, 7))(fkeys)
+        return self.inner.uplink(stacked, rngs, spec, anchor=anchor,
+                                 state=state, post_codec=post,
+                                 post_rngs=post_rngs, **kw)
+
+
+def _byz_uplink(plan: FaultPlan, byz: jax.Array, keys: jax.Array,
+                stacked: Pytree, anchor: Pytree | None) -> Pytree:
+    """Uplink-value byzantine perturbation (sign_flip / noise), applied to
+    the wire quantity (the delta for anchored specs). Honest clients' rows
+    are selected through bit-untouched."""
+    if anchor is None:
+        v = stacked
+    else:
+        v = jax.tree.map(lambda s, w: s - w, stacked, anchor)
+    if plan.byz_mode == "sign_flip":
+        pert = jax.tree.map(lambda x: -plan.byz_scale * x, v)
+    else:  # "noise"
+
+        def one(key, row):
+            n = tm.tree_random_like(key, row)
+            nn = jnp.maximum(tm.tree_norm(n), 1e-30)
+            vn = tm.tree_norm(row)
+            return jax.tree.map(
+                lambda e: (plan.byz_scale * vn / nn) * e, n)
+
+        pert = jax.vmap(one)(keys, v)
+    if anchor is not None:
+        pert = jax.tree.map(lambda p, w: p + w, pert, anchor)
+    return jax.tree.map(
+        lambda s, p: jnp.where(_bc(byz, s), p, s), stacked, pert)

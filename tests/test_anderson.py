@@ -163,6 +163,113 @@ class TestMultisecant:
         assert np.isfinite(np.asarray(w_new)).all()
 
 
+class TestDegenerateGram:
+    """_solve_gram's degenerate systems: Γ=0 and the plain damped-gradient
+    step, bit-exactly, never NaN — on BOTH implementations."""
+
+    @pytest.mark.parametrize("impl", ["tree", "pallas"])
+    def test_rank0_identical_columns_degrades_to_gradient_step(self, impl):
+        d, L = 8, 4
+        A, b, eta, w_traj, r_traj = rand_traj_setup(d=d, L=L)
+        s, y = trajectory_to_sy(w_traj, r_traj)
+        # a rank-0 Gram: every history column identical AND zero
+        y = jnp.zeros_like(y)
+        w_new, st = multisecant_update(
+            w_traj[0], r_traj[0], s, y, eta, AAConfig(), impl=impl)
+        expect = np.asarray(w_traj[0] - eta * r_traj[0])
+        if impl == "tree":
+            # Γ=0 makes the tree path's update expression literally
+            # w − ηg − β·0: bit-exact
+            np.testing.assert_array_equal(np.asarray(w_new), expect)
+        else:
+            # the fused kernel's arithmetic ordering differs from the plain
+            # expression by an ulp even at Γ=0
+            np.testing.assert_allclose(np.asarray(w_new), expect,
+                                       rtol=1e-6, atol=1e-7)
+        assert int(st.used_columns) == 0
+        assert float(st.gram_cond) == 1.0
+        assert np.isfinite(float(st.theta))
+
+    @pytest.mark.parametrize("impl", ["tree", "pallas"])
+    def test_all_clipped_degrades_to_gradient_step(self, impl):
+        """clip_rtol screening every column (all non-finite) must fall to the
+        same Γ=0 damped-gradient step, not NaN."""
+        d, L = 8, 4
+        A, b, eta, w_traj, r_traj = rand_traj_setup(d=d, L=L)
+        s, y = trajectory_to_sy(w_traj, r_traj)
+        y = jnp.full_like(y, jnp.inf)
+        w_new, st = multisecant_update(
+            w_traj[0], r_traj[0], s, y, eta, AAConfig(clip_rtol=1e-3),
+            impl=impl)
+        expect = np.asarray(w_traj[0] - eta * r_traj[0])
+        if impl == "tree":
+            np.testing.assert_array_equal(np.asarray(w_new), expect)
+        else:
+            np.testing.assert_allclose(np.asarray(w_new), expect,
+                                       rtol=1e-6, atol=1e-7)
+        assert int(st.clipped_columns) == L
+        assert int(st.used_columns) == 0
+
+
+class TestClipScreen:
+    """The clip_rtol byzantine-column screen (repro/robust defense)."""
+
+    def _setup(self):
+        A, b, eta, w_traj, r_traj = rand_traj_setup(d=8, L=5)
+        s, y = trajectory_to_sy(w_traj, r_traj)
+        return s, y, w_traj[0], r_traj[0], eta
+
+    @pytest.mark.parametrize("impl", ["tree", "pallas"])
+    def test_clean_history_is_bit_identical(self, impl):
+        """Acceptance: on a fault-free history, screen on == screen off,
+        bit-exactly (the one-sided screen keeps every honest column)."""
+        s, y, w0, g0, eta = self._setup()
+        a, _ = multisecant_update(w0, g0, s, y, eta, AAConfig(), impl=impl)
+        b_, st = multisecant_update(w0, g0, s, y, eta,
+                                    AAConfig(clip_rtol=1e-3), impl=impl)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+        assert int(st.clipped_columns) == 0
+
+    @pytest.mark.parametrize("impl", ["tree", "pallas"])
+    @pytest.mark.parametrize("scale", [1e6, 1e24, np.inf])
+    def test_poisoned_column_dropped_and_step_finite(self, impl, scale):
+        """One byzantine column — huge or overflowed-to-inf — is screened and
+        the defended step equals the step computed on the honest columns."""
+        s, y, w0, g0, eta = self._setup()
+        cfg = AAConfig(clip_rtol=1e-3)
+        ypois = y.at[-1].set(y[-1] * scale)
+        w_def, st = multisecant_update(w0, g0, s, ypois, eta, cfg, impl=impl)
+        assert int(st.clipped_columns) == 1
+        assert np.isfinite(np.asarray(w_def)).all()
+        assert np.isfinite(float(st.theta))
+        # reference: solve on the honest columns only (poisoned zeroed,
+        # exactly what the masked system computes)
+        yref = ypois.at[-1].set(0.0)
+        sref = s.at[-1].set(0.0)
+        w_ref, _ = multisecant_update(w0, g0, sref, yref, eta, cfg, impl=impl)
+        np.testing.assert_allclose(np.asarray(w_def), np.asarray(w_ref),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_undefended_overflow_goes_nonfinite(self):
+        """The control: without the screen the f32 Gram overflow poisons the
+        step — documents WHY the defense exists (and keeps the acceptance
+        benchmark's failure mode pinned)."""
+        s, y, w0, g0, eta = self._setup()
+        ypois = y.at[-1].set(y[-1] * 1e24)
+        w_und, _ = multisecant_update(w0, g0, s, ypois, eta, AAConfig())
+        assert not np.isfinite(np.asarray(w_und)).all()
+
+    def test_tiny_columns_are_kept(self):
+        """The screen is ONE-sided: late-trajectory columns with tiny
+        residual norms are honest (convergence!) and must never be dropped —
+        a two-sided screen would break clean-run parity."""
+        s, y, w0, g0, eta = self._setup()
+        ysmall = y.at[-1].set(y[-1] * 1e-8)
+        _, st = multisecant_update(w0, g0, s, ysmall, eta,
+                                   AAConfig(clip_rtol=1e-3))
+        assert int(st.clipped_columns) == 0
+
+
 class TestMixingEquivalence:
     def test_mixing_equals_multisecant(self):
         """Eq. 2–3 (mixing form) == Eq. 4–5 (multisecant form) on the same

@@ -1,0 +1,430 @@
+"""Robustness subsystem (repro/robust): fault injection + the clip defense.
+
+Contracts, matching the subsystem's acceptance criteria:
+
+  1. An inactive FaultPlan (or faults=None) is BYTE-IDENTICAL to the
+     fault-free round — the fault machinery is python-gated out of the
+     compiled graph (TestInactivePlan).
+  2. Fault realization is deterministic and keyed by (seed, round, GLOBAL
+     client id) — never by cohort position or shard layout — so injected
+     rounds are bit-identical across repeated runs and across runtimes
+     (TestRealize, TestDeterminism).
+  3. Mid-round dropout: the dropped client computed but its uplink never
+     landed — aggregation weights renormalize over the survivors and every
+     per-client state row of a dropped client keeps its exact bits
+     (TestDropout — distinct from never-sampled cohort rows, which
+     tests/test_cohort.py pins).
+  4. Every fault kind produces the same faulted round on the vmap and
+     sharded runtimes at the runtimes' documented rtol 1e-6, per-round from
+     a shared state (TestRuntimeEquivalence — the roundwise mold of
+     tests/test_sharded_runtime.py; across many rounds the runtimes drift
+     for fault-free reasons, see core/sharded.py).
+  5. The clip_rtol screen survives the history-poison attack the undefended
+     step dies on, and its activity reaches the telemetry sinks and alarms
+     (TestDefenseEndToEnd).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import make_channel
+from repro.core import AlgoHParams, init_state, make_round_fn, run_federated
+from repro.core.anderson import AAConfig
+from repro.core.sharded import make_sharded_round_fn
+from repro.data import make_binary_classification, partition
+from repro.launch.mesh import make_host_mesh
+from repro.models.logreg import make_logreg_problem
+from repro.robust import (
+    FAULT_ANCHOR_KEY,
+    FaultPlan,
+    init_fault_comm,
+    realize,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    X, y = make_binary_classification("synthetic_small", n=800, seed=0)
+    clients = partition(X, y, num_clients=8, scheme="iid")
+    prob = make_logreg_problem(clients, gamma=1e-3)
+    return prob, make_host_mesh()
+
+
+@pytest.fixture
+def setup64():
+    """f64 problem for the cross-runtime sweep: byzantine perturbations
+    amplify the shard-boundary ulp past f32's rtol-1e-6 headroom; in f64
+    the same graphs agree with orders of magnitude to spare."""
+    was = jax.config.read("jax_enable_x64")
+    jax.config.update("jax_enable_x64", True)
+    try:
+        X, y = make_binary_classification("synthetic_small", n=800, seed=0)
+        clients = partition(X, y, num_clients=8, scheme="iid")
+        prob = make_logreg_problem(clients, gamma=1e-3, dtype=jnp.float64)
+        yield prob, make_host_mesh()
+    finally:
+        jax.config.update("jax_enable_x64", was)
+
+
+def _init(prob, hp, algo="fedosaa_svrg", channel=None, faults=None):
+    state = init_state(prob, jax.random.PRNGKey(0), hp, make_channel(channel),
+                       algo)
+    if faults is not None and faults.active and faults.stale_rate > 0.0:
+        state = state._replace(comm=init_fault_comm(
+            state.comm, state.params, prob.clients.num_clients))
+    return state
+
+
+def assert_state_allclose(sa, sb, rtol=1e-6, atol=1e-7, what=""):
+    for field in sa._fields:
+        a, b = getattr(sa, field), getattr(sb, field)
+        assert (a is None) == (b is None), f"{what} {field}"
+        if a is None or field == "rng":
+            continue
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_allclose(
+                np.asarray(x, np.float64), np.asarray(y, np.float64),
+                rtol=rtol, atol=atol, err_msg=f"{what} {field}")
+
+
+def assert_state_bitwise(sa, sb, what=""):
+    for field in sa._fields:
+        a, b = getattr(sa, field), getattr(sb, field)
+        assert (a is None) == (b is None), f"{what} {field}"
+        if a is None:
+            continue
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), \
+                f"{what} {field}"
+
+
+#: one plan per fault kind — the matrix the multi-kind tests sweep. The
+#: history scale sits well past the clip_rtol=1e-3 screen's keep threshold
+#: (so both runtimes make the same drop decision) but well below the f32
+#: Gram-overflow scale (~2e19), keeping the faulted round finite.
+FAULT_KINDS = [
+    ("drop", FaultPlan(seed=11, drop_rate=0.4)),
+    ("stale", FaultPlan(seed=11, stale_rate=0.4)),
+    ("byz_sign_flip", FaultPlan(byz_clients=2, byz_mode="sign_flip",
+                                byz_scale=3.0)),
+    ("byz_noise", FaultPlan(byz_clients=2, byz_mode="noise", byz_scale=3.0)),
+    ("byz_history", FaultPlan(byz_clients=2, byz_mode="history",
+                              byz_scale=1e6)),
+    ("dp", FaultPlan(dp_sigma=1e-3)),
+]
+
+
+class TestFaultPlan:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            FaultPlan(drop_rate=1.5)
+        with pytest.raises(ValueError):
+            FaultPlan(stale_rate=-0.1)
+        with pytest.raises(ValueError):
+            FaultPlan(byz_clients=-1)
+        with pytest.raises(ValueError):
+            FaultPlan(byz_clients=1, byz_mode="nonsense")
+        with pytest.raises(ValueError):
+            FaultPlan(dp_sigma=-1.0)
+
+    def test_active_property(self):
+        assert not FaultPlan().active
+        assert FaultPlan(drop_rate=0.1).active
+        assert FaultPlan(stale_rate=0.1).active
+        assert FaultPlan(byz_clients=1).active
+        assert FaultPlan(dp_sigma=0.1).active
+
+    def test_byz_routing_properties(self):
+        hist = FaultPlan(byz_clients=1, byz_mode="history")
+        wire = FaultPlan(byz_clients=1, byz_mode="sign_flip")
+        assert hist.poisons_history and not hist.perturbs_uplink
+        assert wire.perturbs_uplink and not wire.poisons_history
+        assert not FaultPlan().poisons_history
+        assert not FaultPlan().perturbs_uplink
+
+
+class TestRealize:
+    PLAN = FaultPlan(seed=3, drop_rate=0.4, stale_rate=0.4, byz_clients=3)
+
+    def test_deterministic(self):
+        a = realize(self.PLAN, jnp.int32(5), 8)
+        b = realize(self.PLAN, jnp.int32(5), 8)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_rounds_differ(self):
+        a = realize(self.PLAN, jnp.int32(5), 64)
+        b = realize(self.PLAN, jnp.int32(6), 64)
+        assert not np.array_equal(np.asarray(a.drop), np.asarray(b.drop))
+
+    def test_keyed_by_global_id_not_cohort_position(self):
+        """Gathering the realization through a permuted cohort must permute
+        the flags — a client's fate this round is its own, wherever it sits
+        in the cohort (the property that makes runtimes agree)."""
+        full = realize(self.PLAN, jnp.int32(2), 8)
+        perm = jnp.array([5, 2, 7, 0], jnp.int32)
+        part = realize(self.PLAN, jnp.int32(2), 8, idx=perm)
+        rows = np.asarray(perm)
+        for name in ("drop", "stale", "byz", "keys"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(full, name))[rows],
+                np.asarray(getattr(part, name)), err_msg=name)
+
+    def test_byz_set_is_fixed_not_resampled(self):
+        """byz_clients marks the lowest ids every round — a byzantine client
+        is byzantine for the whole run (persistent-attacker threat model)."""
+        a = realize(self.PLAN, jnp.int32(1), 8)
+        b = realize(self.PLAN, jnp.int32(9), 8)
+        np.testing.assert_array_equal(np.asarray(a.byz), np.asarray(b.byz))
+        np.testing.assert_array_equal(np.asarray(a.byz),
+                                      np.arange(8) < self.PLAN.byz_clients)
+
+
+class TestInactivePlan:
+    """faults=None and an all-zero FaultPlan compile the same round."""
+
+    @pytest.mark.parametrize("runtime", ["vmap", "sharded"])
+    def test_inactive_plan_bit_identical(self, setup, runtime):
+        prob, mesh = setup
+        hp = AlgoHParams(eta=0.5, local_epochs=3)
+        if runtime == "sharded":
+            f0 = make_sharded_round_fn("fedosaa_svrg", prob, hp, mesh)
+            f1 = make_sharded_round_fn("fedosaa_svrg", prob, hp, mesh,
+                                       faults=FaultPlan())
+        else:
+            f0 = make_round_fn("fedosaa_svrg", prob, hp)
+            f1 = make_round_fn("fedosaa_svrg", prob, hp, faults=FaultPlan())
+        state = _init(prob, hp)
+        s0, m0 = jax.jit(f0)(state)
+        s1, m1 = jax.jit(f1)(state)
+        assert_state_bitwise(s0, s1, what=runtime)
+        np.testing.assert_array_equal(np.asarray(m0.loss), np.asarray(m1.loss))
+
+
+class TestDropout:
+    """Mid-round dropout: the uplink never lands, the client's rows freeze."""
+
+    PLAN = FaultPlan(seed=1, drop_rate=0.5)
+
+    def _run(self, setup, rounds=3):
+        prob, _ = setup
+        # carry_history makes hist_s/hist_y live so the freeze covers the
+        # carried AA columns too; int8 gives the comm dict EF/ref buffers
+        hp = AlgoHParams(eta=0.5, local_epochs=3, carry_history=2)
+        rf = jax.jit(make_round_fn("fedosaa_svrg", prob, hp, "int8",
+                                   faults=self.PLAN))
+        states = [_init(prob, hp, "fedosaa_svrg", "int8", self.PLAN)]
+        drops = []
+        for t in range(rounds):
+            drops.append(np.asarray(realize(self.PLAN, jnp.int32(t), 8).drop))
+            s, _ = rf(states[-1])
+            states.append(s)
+        return states, drops
+
+    @staticmethod
+    def _rows(tree, rows):
+        return [np.asarray(l)[rows] for l in jax.tree.leaves(tree)]
+
+    def test_dropped_rows_bit_frozen(self, setup):
+        """A client that dropped in round t carries its pre-round bits
+        through round t's output — comm buffers (EF residuals, diff refs)
+        AND carried AA history. Distinct from the never-sampled cohort
+        contract: these clients DID compute; only the landing was lost."""
+        states, drops = self._run(setup)
+        checked = 0
+        for t, drop in enumerate(drops):
+            rows = np.nonzero(drop)[0]
+            if len(rows) == 0:
+                continue
+            checked += 1
+            for field in ("comm", "hist_s", "hist_y", "c_k"):
+                before = getattr(states[t], field)
+                after = getattr(states[t + 1], field)
+                assert (before is None) == (after is None)
+                if before is None:
+                    continue
+                for a, b in zip(self._rows(before, rows),
+                                self._rows(after, rows)):
+                    np.testing.assert_array_equal(
+                        a, b, err_msg=f"round {t} {field} rows {rows}")
+        assert checked >= 2  # drop_rate=0.5 over 3 rounds of K=8
+
+    def test_surviving_rows_advance(self, setup):
+        states, drops = self._run(setup, rounds=1)
+        rows = np.nonzero(~drops[0])[0]
+        assert len(rows) > 0
+        moved = any(
+            not np.array_equal(a, b)
+            for a, b in zip(self._rows(states[0].hist_y, rows),
+                            self._rows(states[1].hist_y, rows)))
+        assert moved
+
+    def test_all_dropped_round_keeps_params(self, setup):
+        """Every uplink lost => the survivor renormalization guard yields an
+        empty aggregate and w^t stays put exactly (no NaN from 0/0)."""
+        prob, _ = setup
+        plan = FaultPlan(drop_rate=1.0)
+        hp = AlgoHParams(eta=0.5, local_epochs=3)
+        state = _init(prob, hp, faults=plan)
+        rf = jax.jit(make_round_fn("fedosaa_svrg", prob, hp, faults=plan))
+        s, m = rf(state)
+        for a, b in zip(jax.tree.leaves(state.params),
+                        jax.tree.leaves(s.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.isfinite(float(m.loss))
+
+
+class TestStaleAnchor:
+    PLAN = FaultPlan(seed=2, stale_rate=0.5)
+
+    def test_anchor_attached_and_refreshed(self, setup):
+        """Two rounds, so the refresh branches are distinguishable: after
+        round 2, round-2-fresh clients carry round 2's STARTING params
+        (s1.params — the model they trained from) while round-2-stale
+        clients keep their aged w^0 copy (staleness compounds)."""
+        prob, _ = setup
+        hp = AlgoHParams(eta=0.5, local_epochs=3)
+        state = _init(prob, hp, faults=self.PLAN)
+        assert FAULT_ANCHOR_KEY in state.comm
+        rf = jax.jit(make_round_fn("fedosaa_svrg", prob, hp,
+                                   faults=self.PLAN))
+        s1, _ = rf(state)
+        s2, _ = rf(s1)
+        stale = np.asarray(realize(self.PLAN, jnp.int32(1), 8).stale)
+        assert stale.any() and not stale.all()  # seed=2 draws a mixed round
+        a1 = [np.asarray(l) for l in
+              jax.tree.leaves(s1.comm[FAULT_ANCHOR_KEY])]
+        a2 = [np.asarray(l) for l in
+              jax.tree.leaves(s2.comm[FAULT_ANCHOR_KEY])]
+        w1 = [np.asarray(l) for l in jax.tree.leaves(s1.params)]
+        for old, new, w in zip(a1, a2, w1):
+            np.testing.assert_array_equal(new[stale], old[stale])
+            np.testing.assert_array_equal(
+                new[~stale], np.broadcast_to(w, new.shape)[~stale])
+            # the two branches actually differ (w^1 != w^0 = the aged copy)
+            assert not np.array_equal(new[stale][0], new[~stale][0])
+
+    def test_stale_round_differs_from_clean(self, setup):
+        prob, _ = setup
+        hp = AlgoHParams(eta=0.5, local_epochs=3)
+        clean = run_federated(prob, "fedosaa_svrg", hp, 5, rng=0)
+        stale = run_federated(prob, "fedosaa_svrg", hp, 5, rng=0,
+                              faults=self.PLAN)
+        # round 0 every anchor IS w^0 — the re-basing shift is zero and the
+        # rounds coincide; from round 1 the aged anchors bite
+        np.testing.assert_allclose(clean.loss[0], stale.loss[0], rtol=1e-6)
+        assert abs(clean.loss[-1] - stale.loss[-1]) > 1e-9
+
+
+class TestDeterminism:
+    """Same FaultPlan => bit-identical injected runs, on both runtimes."""
+
+    MIXED = FaultPlan(seed=7, drop_rate=0.3, stale_rate=0.3, byz_clients=1,
+                      byz_mode="history", byz_scale=1e6, dp_sigma=1e-3)
+
+    @pytest.mark.parametrize("runtime", ["vmap", "sharded"])
+    def test_repeated_runs_bit_identical(self, setup, runtime):
+        prob, _ = setup
+        hp = AlgoHParams(eta=0.5, local_epochs=3,
+                         aa=AAConfig(clip_rtol=1e-3))
+        runs = [run_federated(prob, "fedosaa_svrg", hp, 3, rng=0,
+                              runtime=runtime, channel="int8",
+                              faults=self.MIXED) for _ in range(2)]
+        np.testing.assert_array_equal(runs[0].loss, runs[1].loss)
+        for a, b in zip(jax.tree.leaves(runs[0].final_params),
+                        jax.tree.leaves(runs[1].final_params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_seed_moves_the_faults(self, setup):
+        prob, _ = setup
+        hp = AlgoHParams(eta=0.5, local_epochs=3)
+        a = run_federated(prob, "fedosaa_svrg", hp, 3, rng=0,
+                          faults=FaultPlan(seed=0, drop_rate=0.4))
+        b = run_federated(prob, "fedosaa_svrg", hp, 3, rng=0,
+                          faults=FaultPlan(seed=1, drop_rate=0.4))
+        assert not np.array_equal(a.loss, b.loss)
+
+
+class TestRuntimeEquivalence:
+    """Each fault kind: vmap and sharded produce the same faulted round at
+    the runtimes' documented rtol 1e-6, per-round from a shared state."""
+
+    @pytest.mark.parametrize("kind,plan", FAULT_KINDS)
+    def test_roundwise(self, setup64, kind, plan):
+        prob, mesh = setup64
+        hp = AlgoHParams(eta=0.5, local_epochs=3,
+                         aa=AAConfig(clip_rtol=1e-3))
+        fv = jax.jit(make_round_fn("fedosaa_svrg", prob, hp, faults=plan))
+        fs = jax.jit(make_sharded_round_fn("fedosaa_svrg", prob, hp, mesh,
+                                           faults=plan))
+        state = _init(prob, hp, faults=plan)
+        for t in range(3):
+            sv, mv = fv(state)
+            ss, ms = fs(state)
+            assert_state_allclose(sv, ss, what=f"{kind} round {t}")
+            np.testing.assert_allclose(
+                float(mv.loss), float(ms.loss), rtol=1e-6,
+                err_msg=f"{kind} round {t}")
+            state = sv
+
+    def test_scaffold_dropout_equivalence(self, setup64):
+        """Dropout composes with the control-variate family too (the c_k
+        freeze rides the same plumbing) — pin it cross-runtime."""
+        prob, mesh = setup64
+        plan = FaultPlan(seed=4, drop_rate=0.4)
+        hp = AlgoHParams(eta=0.5, local_epochs=3)
+        fv = jax.jit(make_round_fn("scaffold", prob, hp, faults=plan))
+        fs = jax.jit(make_sharded_round_fn("scaffold", prob, hp, mesh,
+                                           faults=plan))
+        state = _init(prob, hp, algo="scaffold", faults=plan)
+        for t in range(2):
+            sv, _ = fv(state)
+            ss, _ = fs(state)
+            assert_state_allclose(sv, ss, what=f"scaffold drop round {t}")
+            state = sv
+
+
+class TestDefenseEndToEnd:
+    def test_clip_defends_history_poison(self, setup):
+        """The acceptance pair at test scale: one byzantine history client
+        past the f32 Gram-overflow scale drives the undefended run
+        non-finite while the defended run keeps converging."""
+        prob, _ = setup
+        plan = FaultPlan(byz_clients=1, byz_mode="history", byz_scale=1e24)
+        und = run_federated(prob, "fedosaa_svrg",
+                            AlgoHParams(eta=0.5, local_epochs=5), 5, rng=0,
+                            faults=plan)
+        dfd = run_federated(
+            prob, "fedosaa_svrg",
+            AlgoHParams(eta=0.5, local_epochs=5,
+                        aa=AAConfig(clip_rtol=1e-3)), 5, rng=0, faults=plan)
+        assert not np.isfinite(und.loss[-1])
+        assert np.isfinite(dfd.loss).all()
+        assert dfd.loss[-1] < dfd.loss[0]
+
+    def test_clipped_metric_reaches_sinks(self, setup):
+        """aa_clipped_max flows AAStats -> RoundMetrics -> sink rows."""
+        from repro.obs.sinks import MemorySink
+
+        prob, _ = setup
+        plan = FaultPlan(byz_clients=1, byz_mode="history", byz_scale=1e6)
+        hp = AlgoHParams(eta=0.5, local_epochs=5,
+                         aa=AAConfig(clip_rtol=1e-3))
+        sink = MemorySink()
+        run_federated(prob, "fedosaa_svrg", hp, 3, rng=0, faults=plan,
+                      sinks=[sink])
+        assert "aa_clipped_max" in sink.rows[0]
+        assert max(r["aa_clipped_max"] for r in sink.rows) >= 1.0
+
+    def test_clipping_alarm_fires(self, setup):
+        from repro.obs.alarms import AlarmMonitor
+
+        prob, _ = setup
+        plan = FaultPlan(byz_clients=1, byz_mode="history", byz_scale=1e6)
+        hp = AlgoHParams(eta=0.5, local_epochs=5,
+                         aa=AAConfig(clip_rtol=1e-3))
+        mon = AlarmMonitor()
+        run_federated(prob, "fedosaa_svrg", hp, 3, rng=0, faults=plan,
+                      sinks=[mon])
+        assert any(e["rule"] == "aa_clipping_active" for e in mon.events)

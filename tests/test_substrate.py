@@ -130,6 +130,23 @@ class TestData:
         w = np.asarray(clients.weight)
         assert w.max() / w.min() > 20
 
+    def test_imbalance_adversarial_counts(self):
+        """Regression: the geometric tail used to round trailing clients to
+        EMPTY slices at adversarial n/num_clients (the 2-sample floor then
+        overdrew the total and the last clients got nothing). Every client
+        must keep >= 2 samples and the counts must exactly cover n."""
+        for n, k in ((60, 20), (101, 17), (2000, 30)):
+            X, y = make_binary_classification("synthetic_small", n=n, seed=0)
+            clients = partition(X, y, num_clients=k, scheme="imbalance")
+            counts = np.asarray(clients.mask.sum(axis=1)).astype(int)
+            assert counts.min() >= 2, (n, k, counts)
+            assert counts.sum() == n, (n, k, counts)
+        # below the documented floor the partitioner must refuse, not emit
+        # empty clients
+        X, y = make_binary_classification("synthetic_small", n=30, seed=0)
+        with pytest.raises(ValueError, match="2 samples per client"):
+            partition(X, y, num_clients=16, scheme="imbalance")
+
 
 class TestLMBridge:
     def test_fl_lm_round_decreases_loss(self):
