@@ -49,19 +49,29 @@ def logreg_setup(
 def bench_algo(
     prob, wstar, algo: str, hp: AlgoHParams, rounds: int, label: str,
     channel=None, stop_rel_error: float | None = None, runtime: str = "vmap",
-    chunk: int | None = None, faults=None,
+    chunk: int | None = None, faults=None, async_cfg=None,
 ) -> dict:
     """``us_per_call`` is History.wall_time's own per-round timer — the same
     clock benchmarks/bench_round.py uses (device-side round + the driver's
     metric sync, excluding the w* solve and History assembly; compile time
     lands in round 0 either way). ``chunk`` routes the rounds through the
     device-resident engine (core/engine.py); ``faults`` a repro/robust
-    FaultPlan through the compiled round (benchmarks/ext_robustness.py)."""
+    FaultPlan through the compiled round (benchmarks/ext_robustness.py);
+    ``async_cfg`` an AsyncConfig deadline gate over the plan's simulated
+    latencies (benchmarks/ext_async.py) — async rows additionally record
+    arrivals/staleness curves."""
     h = run_federated(prob, algo, hp, rounds, w_star=wstar, channel=channel,
                       stop_rel_error=stop_rel_error, runtime=runtime,
-                      chunk=chunk, faults=faults)
+                      chunk=chunk, faults=faults, async_cfg=async_cfg)
     n_rounds = len(h.rounds)
+    extra = {}
+    if async_cfg is not None and h.arrivals is not None:
+        extra = {
+            "arrivals_curve": [float(v) for v in h.arrivals],
+            "staleness_max_curve": [float(v) for v in h.staleness_max],
+        }
     return {
+        **extra,
         "name": label,
         "us_per_call": 1e6 * float(h.wall_time[-1]) / max(n_rounds, 1),
         "derived": float(h.rel_error[-1]),

@@ -1,0 +1,92 @@
+"""Validate the committed straggler/deadline-gate artifact
+(benchmarks/results/ext_async.json).
+
+Shared by scripts/ci.sh and .github/workflows/ci.yml so the gate cannot
+drift between the two.
+
+  python scripts/check_ext_async.py [path]
+
+Checks structure (the sync/gated rows plus the summary) and the PR's
+acceptance invariants:
+
+  * the deadline-gated FedOSAA-SVRG run reached rel-error 1e-6 within 2x
+    the barriered baseline's rounds,
+  * while its SIMULATED wall-clock-to-target (sum of effective deadlines,
+    replayed exactly from the keyed latency stream) is strictly below the
+    barriered run's (sum of per-round max latencies — the tail the barrier
+    pays for),
+  * an inactive AsyncConfig was bitwise identical to no AsyncConfig on
+    BOTH runtimes (off compiles the byte-identical synchronous graph),
+  * mixed latency+dropout gated runs were bit-deterministic across repeats
+    and their vmap/sharded arrival schedules bit-identical.
+
+Failures raise (never bare `assert`, which python -O strips — this script
+is a CI gate).
+"""
+import json
+import math
+import sys
+
+args = [a for a in sys.argv[1:] if not a.startswith("--")]
+path = args[0] if args else "benchmarks/results/ext_async.json"
+
+
+def fail(msg: str):
+    raise SystemExit(f"check_ext_async: {path}: {msg}")
+
+
+with open(path) as f:
+    rows = json.load(f)
+by = {r["name"]: r for r in rows}
+
+expected = {
+    "ext_async/sync/clean",
+    "ext_async/sync/latency",
+    "ext_async/gated/guard",
+    "ext_async/gated/noguard",
+    "ext_async/summary",
+}
+got = {r["name"] for r in rows}
+if got != expected:
+    fail(f"not the full row set: missing {sorted(expected - got)}, "
+         f"unexpected {sorted(got - expected)}")
+
+for r in rows:
+    if r["name"].endswith("summary"):
+        continue
+    if r.get("rounds", 0) < 1:
+        fail(f"{r['name']}: no rounds executed")
+    if r.get("comm_bytes", 0) <= 0:
+        fail(f"{r['name']}: no bytes accounted")
+    if not math.isfinite(r["final_loss"]):
+        fail(f"{r['name']}: final loss is non-finite")
+    if r.get("rounds_to_target") is None:
+        fail(f"{r['name']}: never reached the rel-error target")
+    if r["name"].startswith("ext_async/gated"):
+        arr = r.get("arrivals_curve")
+        if not arr or max(arr) <= 0:
+            fail(f"{r['name']}: no round recorded any arrivals")
+
+s = by["ext_async/summary"]
+budget = s.get("round_multiple_budget", 2.0)
+ratio = s.get("gated_rounds_vs_barriered")
+if ratio is None or not ratio <= budget:
+    fail(f"gated run took {ratio}x the barriered run's rounds "
+         f"(must be <= {budget})")
+if not s.get("gated_wall_below_barriered"):
+    fail(f"gated simulated wall {s.get('gated_sim_wall_to_target')} is not "
+         f"below the barriered {s.get('barriered_sim_wall_to_target')} — "
+         "the deadline gate stopped paying for itself")
+if not s.get("inactive_parity_vmap_bit_identical"):
+    fail("inactive AsyncConfig is not bitwise-off on the vmap runtime")
+if not s.get("inactive_parity_sharded_bit_identical"):
+    fail("inactive AsyncConfig is not bitwise-off on the sharded runtime")
+if not s.get("repeat_bit_identical"):
+    fail("repeated mixed latency+dropout gated runs were not bit-identical")
+if not s.get("runtime_schedule_bit_identical"):
+    fail("vmap/sharded arrival/staleness schedules differ")
+
+print(f"ci: {path} well-formed (gated {s['gated_rounds_to_target']} vs "
+      f"barriered {s['barriered_rounds_to_target']} rounds-to-1e-6, "
+      f"sim wall {s['gated_sim_wall_to_target']:.1f} vs "
+      f"{s['barriered_sim_wall_to_target']:.1f})")

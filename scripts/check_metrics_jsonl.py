@@ -13,7 +13,12 @@ Checks the versioned row contract the sink promises:
   * every row in between is kind="round" with all ROW_FIELDS present
     (numeric or null), matching schema version, and strictly increasing
     contiguous "round" indices from the header's start_round;
-  * cumulative columns (comm_bytes_total, wall_time_s) are non-decreasing.
+  * cumulative columns (comm_bytes_total, wall_time_s) are non-decreasing;
+  * the v3 async triple (arrivals / staleness_mean / staleness_max) is
+    internally consistent: arrivals is null exactly when the deadline gate
+    is off (the whole run — the gate is a compile-time config, not a
+    per-round toggle), a present arrivals is a non-negative count, and
+    staleness_mean never exceeds staleness_max when both landed.
 
 Exit 0 and a one-line summary on success; exit 1 with the first violation
 otherwise.
@@ -67,6 +72,7 @@ def check_file(path: str) -> dict:
 
     expected_round = int(header.get("start_round", 0))
     prev = {"comm_bytes_total": float("-inf"), "wall_time_s": float("-inf")}
+    async_on = None  # per-run constant, learned from the first round row
     for off, row in enumerate(body):
         lineno = off + 2
         if row.get("kind") != "round":
@@ -90,6 +96,19 @@ def check_file(path: str) -> dict:
                 if v < prev[field]:
                     fail(lineno, f"{field} decreased: {v} < {prev[field]}")
                 prev[field] = v
+        # v3 async triple: the deadline gate is a compile-time config, so
+        # arrivals is null on every row or a count on every row
+        arrivals = row["arrivals"]
+        if async_on is None:
+            async_on = arrivals is not None
+        elif (arrivals is not None) != async_on:
+            fail(lineno, "arrivals flipped between null and numeric "
+                 "mid-run (the deadline gate cannot toggle per round)")
+        if arrivals is not None and arrivals < 0:
+            fail(lineno, f"arrivals={arrivals} is negative")
+        s_mean, s_max = row["staleness_mean"], row["staleness_max"]
+        if s_mean is not None and s_max is not None and s_mean > s_max:
+            fail(lineno, f"staleness_mean {s_mean} > staleness_max {s_max}")
 
     if footer.get("rounds") != len(body):
         fail(len(lines), f"footer rounds={footer.get('rounds')} but file "

@@ -253,6 +253,15 @@ class RoundMetrics(NamedTuple):
                              # aggregation weights (== C for a uniform cohort)
     comm_bytes: jax.Array    # bytes on the wire this round (codec-exact;
                              # == 4 × Table 1 float units on the fp32 channel)
+    arrivals: jax.Array      # deadline-gated rounds: clients whose update
+                             # landed this round, fresh or buffered (nan when
+                             # AsyncConfig is off — the barriered round)
+    staleness_mean: jax.Array  # mean buffer age over this round's landed
+                             # contributions, fresh counting as 0 (nan when
+                             # async is off or nothing landed)
+    staleness_max: jax.Array   # oldest landed contribution's buffer age (nan
+                             # when async is off or nothing landed); feeds the
+                             # staleness_runaway alarm
 
 
 def init_state(problem: FLProblem, rng: jax.Array,
@@ -1127,7 +1136,18 @@ def _dane_round_core(problem, hp, R, w_t, x, y, mask, dweight, pweight, rngs,
     return new_params, parts, comm
 
 
-def finalize_metrics(parts: MetricParts, comm_bytes: float) -> RoundMetrics:
+def finalize_metrics(parts: MetricParts, comm_bytes: float,
+                     async_stats=None) -> RoundMetrics:
+    """Assemble the round's metrics row. ``async_stats`` is the deadline
+    gate's (arrivals, staleness_mean, staleness_max) triple
+    (repro.robust.async_agg.async_round_stats); None — the barriered round —
+    reports NaN for all three (the theta_mean n/a convention)."""
+    if async_stats is None:
+        nan = jnp.asarray(jnp.nan, jnp.float32)
+        arrivals = s_mean = s_max = nan
+    else:
+        arrivals, s_mean, s_max = (
+            jnp.asarray(v, jnp.float32) for v in async_stats)
     return RoundMetrics(
         loss=parts.loss,
         grad_norm=parts.grad_norm,
@@ -1138,6 +1158,9 @@ def finalize_metrics(parts: MetricParts, comm_bytes: float) -> RoundMetrics:
         aa_clipped_max=parts.aa_clipped_max,
         cohort_ess=parts.cohort_ess,
         comm_bytes=jnp.asarray(comm_bytes, jnp.float32),
+        arrivals=arrivals,
+        staleness_mean=s_mean,
+        staleness_max=s_max,
     )
 
 
@@ -1147,15 +1170,21 @@ def finalize_metrics(parts: MetricParts, comm_bytes: float) -> RoundMetrics:
 
 def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
                   channel: "CommChannel | str | None" = None,
-                  faults: "FaultPlan | None" = None):
+                  faults: "FaultPlan | None" = None,
+                  async_cfg: "AsyncConfig | None" = None):
     """Return a jittable round(state) -> (state, RoundMetrics).
 
     Single-process runtime: the K stacked clients are vmapped. The distributed
     runtime with identical numerics is core/sharded.py::make_sharded_round_fn.
     ``channel`` (repro/comm) compresses every wire crossing; None keeps the
     historical lossless fp32 wire. ``faults`` (repro/robust) injects the
-    plan's dropout/stale/byzantine/DP perturbations inside the compiled
-    body; None (or an inactive plan) compiles the exact fault-free graph.
+    plan's dropout/stale/byzantine/DP/latency perturbations inside the
+    compiled body; None (or an inactive plan) compiles the exact fault-free
+    graph. ``async_cfg`` (repro.robust.async_agg) replaces the barriered
+    round close with the deadline gate — only clients whose realized latency
+    beats the deadline land, late updates buffer and fold in later with
+    staleness-discounted weight; None (or ``deadline == 0``) compiles the
+    byte-identical synchronous graph.
     """
     if algo not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algo!r}; choose from {ALGORITHMS}")
@@ -1225,6 +1254,76 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
             upd = freeze_dropped(fr.drop, plan.cohort, upd)
         return upd
 
+    # ---------------- deadline gate (repro/robust/async_agg) ----------------
+    # python-gated exactly like the fault plan: an absent/inactive config
+    # compiles the byte-identical synchronous (barriered) round
+    async_cfg = async_cfg if (async_cfg is not None and async_cfg.active) \
+        else None
+    if async_cfg is not None:
+        if algo in ("giant", "newton_gmres"):
+            raise ValueError(
+                f"AsyncConfig requires a delta-form model aggregation; "
+                f"{algo!r} aggregates Newton directions and cannot buffer "
+                "client deltas")
+        from repro.robust.async_agg import (ASYNC_AGE_KEY, ASYNC_BUF_KEY,
+                                            CaptureReduce, advance_buffer,
+                                            async_round_stats, fold_buffered,
+                                            guard_history_rows, plan_async)
+        from repro.robust.faults import _bc
+
+    def async_ctx(plan: CohortPlan, Rr, fr, dw, pw):
+        """Deadline-gate this round: partition the cohort by realized latency
+        vs the (possibly extended) deadline, hand the core only the fresh
+        contributors' discounted weights, and wrap the reduce so the anchored
+        model uplink's post-codec rows are captured for the buffer write. A
+        run without a latency plan gates on all-zero latencies (everyone on
+        time — the gate still exercises the buffer machinery under drops)."""
+        if async_cfg is None:
+            return Rr, dw, pw, None
+        latency = fr.latency if fr is not None else jnp.zeros_like(pw)
+        drop = fr.drop if (faults is not None and faults.drop_rate > 0.0) \
+            else None
+        ar = plan_async(async_cfg, latency,
+                        plan.cohort.comm[ASYNC_AGE_KEY], pw, drop=drop)
+        if algo in ("scaffold", "fedosaa_scaffold"):
+            # the control variates ride the model uplink, so only fresh
+            # arrivals contribute to the c aggregation (the buffer carries
+            # model deltas only — a fold's c_up is lost on the floor); the
+            # two-round-trip families' gradient collection is a cheap sync
+            # that lands before the deadline applies to the local-update leg
+            dwz = jnp.where(ar.fresh, dw, jnp.zeros_like(dw))
+            dw = dwz / jnp.maximum(jnp.sum(dwz), 1e-30)
+        return CaptureReduce(Rr), dw, ar.fresh_weights, ar
+
+    def async_epilogue(plan: CohortPlan, ar, Rc, w_t, new_params, upd):
+        """Jit-level buffer fold + transition, run AFTER fault_epilogue so
+        the dropped-row freeze cannot clobber this round's buffer/age writes
+        (drop-awareness lives in the plan_async masks instead). Returns the
+        folded params, the patched updates, and the round's async stats."""
+        if async_cfg is None:
+            return new_params, upd, None
+        comm_in = plan.cohort.comm
+        new_params = fold_buffered(new_params, ar.fold_weights,
+                                   comm_in[ASYNC_BUF_KEY])
+        # encode-at-send: the deferred client's buffered row is its post-codec
+        # delta against this round's anchor, captured off the model uplink
+        delta = jax.tree.map(lambda c, w: c - w, Rc.captured, w_t)
+        new_buf, new_age = advance_buffer(ar, delta, comm_in[ASYNC_BUF_KEY],
+                                          comm_in[ASYNC_AGE_KEY])
+        comm = dict(upd["comm"] if upd.get("comm") is not None else comm_in)
+        comm[ASYNC_BUF_KEY] = new_buf
+        comm[ASYNC_AGE_KEY] = new_age
+        upd = {**upd, "comm": comm}
+        if upd.get("c_k") is not None:
+            # a non-fresh client's control-variate update never arrived
+            old_ck = plan.cohort.c_k
+            upd["c_k"] = jax.tree.map(
+                lambda o, n: jnp.where(_bc(~ar.fresh, n), o, n),
+                old_ck, upd["c_k"])
+        if async_cfg.guard_history:
+            upd = guard_history_rows(ar.fold | ar.retain, plan.cohort, upd)
+        return new_params, upd, async_round_stats(ar)
+
     # ---------------- SVRG family ----------------
     if algo in ("fedsvrg", "fedosaa_svrg"):
         use_aa = algo == "fedosaa_svrg"
@@ -1232,6 +1331,7 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         def round_fn(state: ServerState):
             rng, plan = prologue(state)
             Rr, dw, pw, fr = fault_ctx(plan, state.t)
+            Rr, dw, pw, ar = async_ctx(plan, Rr, fr, dw, pw)
             carry = hp.carry_history > 0 and state.hist_s is not None
             core_kw = {}
             if faults is not None and faults.poisons_history and use_aa:
@@ -1244,11 +1344,13 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
                 plan.cohort.hist_y if carry else None,
                 plan.cohort.comm, **core_kw,
             )
-            metrics = finalize_metrics(parts, comm_bytes)
             upd = dict(comm=new_comm)
             if carry:
                 upd.update(hist_s=new_hs, hist_y=new_hy)
             upd = fault_epilogue(plan, fr, state.params, upd)
+            new_params, upd, astats = async_epilogue(
+                plan, ar, Rr, state.params, new_params, upd)
+            metrics = finalize_metrics(parts, comm_bytes, astats)
             upd = _commit_plan(plan, **upd)
             return state._replace(params=new_params, t=state.t + 1, rng=rng,
                                   **upd), metrics
@@ -1262,14 +1364,23 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         def round_fn(state: ServerState):
             rng, plan = prologue(state)
             Rr, dw, pw, fr = fault_ctx(plan, state.t)
+            Rr, dw, pw, ar = async_ctx(plan, Rr, fr, dw, pw)
             new_params, new_c, new_c_k, parts, new_comm = _scaffold_round_core(
                 problem, hp, use_aa, Rr, state.params, state.c,
                 plan.x, plan.y, plan.mask, plan.cohort.c_k,
                 dw, pw, plan.rngs, plan.cohort.comm,
             )
-            metrics = finalize_metrics(parts, comm_bytes)
             upd = fault_epilogue(plan, fr, state.params,
                                  dict(c_k=new_c_k, comm=new_comm))
+            new_params, upd, astats = async_epilogue(
+                plan, ar, Rr, state.params, new_params, upd)
+            if ar is not None:
+                # c's aggregation is not delta-form: a zero-fresh round would
+                # zero the server control variate, so keep the old c instead
+                any_fresh = jnp.any(ar.fresh)
+                new_c = jax.tree.map(
+                    lambda n, o: jnp.where(any_fresh, n, o), new_c, state.c)
+            metrics = finalize_metrics(parts, comm_bytes, astats)
             upd = _commit_plan(plan, **upd)
             return (
                 state._replace(params=new_params, c=new_c, t=state.t + 1,
@@ -1286,13 +1397,16 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         def round_fn(state: ServerState):
             rng, plan = prologue(state)
             Rr, dw, pw, fr = fault_ctx(plan, state.t)
+            Rr, dw, pw, ar = async_ctx(plan, Rr, fr, dw, pw)
             new_params, parts, new_comm = _avg_round_core(
                 problem, hp, use_aa, Rr, state.params, plan.x, plan.y,
                 plan.mask, dw, pw, plan.rngs,
                 plan.cohort.comm,
             )
-            metrics = finalize_metrics(parts, comm_bytes)
             upd = fault_epilogue(plan, fr, state.params, dict(comm=new_comm))
+            new_params, upd, astats = async_epilogue(
+                plan, ar, Rr, state.params, new_params, upd)
+            metrics = finalize_metrics(parts, comm_bytes, astats)
             upd = _commit_plan(plan, **upd)
             return state._replace(params=new_params, t=state.t + 1, rng=rng,
                                   **upd), metrics
@@ -1305,12 +1419,15 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         def round_fn(state: ServerState):
             rng, plan = prologue(state)
             Rr, dw, pw, fr = fault_ctx(plan, state.t)
+            Rr, dw, pw, ar = async_ctx(plan, Rr, fr, dw, pw)
             new_params, parts, new_comm = _lbfgs_round_core(
                 problem, hp, Rr, state.params, plan.x, plan.y, plan.mask,
                 dw, pw, plan.rngs, plan.cohort.comm,
             )
-            metrics = finalize_metrics(parts, comm_bytes)
             upd = fault_epilogue(plan, fr, state.params, dict(comm=new_comm))
+            new_params, upd, astats = async_epilogue(
+                plan, ar, Rr, state.params, new_params, upd)
+            metrics = finalize_metrics(parts, comm_bytes, astats)
             upd = _commit_plan(plan, **upd)
             return state._replace(params=new_params, t=state.t + 1, rng=rng,
                                   **upd), metrics
@@ -1343,12 +1460,15 @@ def make_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
     def round_fn(state: ServerState):
         rng, plan = prologue(state)
         Rr, dw, pw, fr = fault_ctx(plan, state.t)
+        Rr, dw, pw, ar = async_ctx(plan, Rr, fr, dw, pw)
         new_params, parts, new_comm = _dane_round_core(
             problem, hp, Rr, state.params, plan.x, plan.y, plan.mask,
             dw, pw, plan.rngs, plan.cohort.comm,
         )
-        metrics = finalize_metrics(parts, comm_bytes)
         upd = fault_epilogue(plan, fr, state.params, dict(comm=new_comm))
+        new_params, upd, astats = async_epilogue(
+            plan, ar, Rr, state.params, new_params, upd)
+        metrics = finalize_metrics(parts, comm_bytes, astats)
         upd = _commit_plan(plan, **upd)
         return state._replace(params=new_params, t=state.t + 1, rng=rng,
                               **upd), metrics

@@ -57,7 +57,13 @@ class AAConfig:
         toward the plain damped-gradient step instead of diverging. Values in
         (0, 1] keep at least half the columns (0.1 ≈ "drop columns 10× the
         median"). 0 disables — and is an exact no-op: the default path's
-        compiled graph is unchanged.
+        compiled graph is unchanged. The same screen doubles as an AGE
+        screen under the deadline gate (repro.robust.async_agg): a
+        stale-folded client's residual columns drift off the cohort median
+        and get clipped the same way — the measured alternative to
+        ``AsyncConfig.guard_history``, which instead bit-freezes the
+        folded rows' history writes (benchmarks/ext_async.py records both;
+        at the committed scale they converge in the same round count).
     """
 
     tikhonov: float = 1e-10

@@ -26,6 +26,14 @@ field that is None in the ``scatter`` update is left untouched — no scatter
 op is even emitted, so e.g. a FedOSAA-SVRG round without carried history
 never materializes a [K, d] operation (the jaxpr assertion in
 tests/test_cohort.py).
+
+The ``comm`` slot additionally carries the robustness layer's RESERVED
+dunder keys — ``__fault_anchor__`` (repro.robust.faults: per-client lagged
+anchors for stale-update injection), ``__async_buf__`` and ``__async_age__``
+(repro.robust.async_agg: the deadline gate's carried straggler deltas and
+their integer ages). They are ordinary [K, ...] comm entries on purpose:
+riding the comm slot is what makes them survive cohort gather/scatter and
+checkpoints with zero extra plumbing.
 """
 from __future__ import annotations
 

@@ -77,6 +77,7 @@ Pytree = Any
 METRIC_FIELDS = (
     "loss", "grad_norm", "theta_mean", "gram_cond_max", "gram_cond_mean",
     "aa_used_min", "aa_clipped_max", "cohort_ess", "comm_bytes",
+    "arrivals", "staleness_mean", "staleness_max",
 )
 
 
@@ -94,6 +95,9 @@ class RoundTrace:
     aa_clipped_max: np.ndarray # [T] clip_rtol screen activity (nan if n/a)
     cohort_ess: np.ndarray     # [T]
     comm_bytes: np.ndarray     # [T] per-round (NOT cumulative) wire bytes
+    arrivals: np.ndarray       # [T] deadline-gated landings (nan: async off)
+    staleness_mean: np.ndarray # [T] mean landed buffer age (nan if n/a)
+    staleness_max: np.ndarray  # [T] oldest landed buffer age (nan if n/a)
     rel_error: np.ndarray      # [T] ‖w−w*‖/‖w*‖ (nan when w_star not given)
     round_wall: np.ndarray     # [T] seconds attributed to this round (each
                                # chunk's measured wall time divided equally

@@ -38,6 +38,10 @@ class History:
                                   # (nan for non-AA algos) — the divergence
                                   # predictor, kept in the history so plots
                                   # and logs can correlate it with rel_error
+    arrivals: np.ndarray = None   # deadline-gated landings per round (nan
+                                  # everywhere when async_cfg is off)
+    staleness_mean: np.ndarray = None  # mean landed buffer age (nan if n/a)
+    staleness_max: np.ndarray = None   # oldest landed buffer age (nan if n/a)
 
     @property
     def comm_floats(self) -> np.ndarray:
@@ -78,6 +82,7 @@ def run_federated(
     trace_capture=None,
     tap=None,
     faults=None,
+    async_cfg=None,
 ) -> History:
     """Iterate ``num_rounds`` of ``algo`` and collect the metric history.
 
@@ -123,6 +128,16 @@ def run_federated(
                     per-client lagged-anchor rows to the comm state here, so
                     they ride the cohort gather/scatter and checkpoints like
                     any other per-client buffer.
+    async_cfg     — repro.robust.async_agg.AsyncConfig: replace the barriered
+                    round close with the deadline gate — only clients whose
+                    realized latency (``faults.latency_*``) beats the
+                    deadline land each round; late updates park in per-client
+                    buffer rows (attached to the comm state here, riding
+                    gather/scatter and checkpoints) and fold in later with
+                    staleness-discounted weight. None or ``deadline == 0``
+                    compiles the byte-identical synchronous graph on either
+                    runtime. ``History.arrivals``/``staleness_*`` surface the
+                    gate's per-round activity.
     """
     from repro.comm import make_channel
     from repro.comm.schema import uplink_byte_breakdown
@@ -145,6 +160,12 @@ def run_federated(
 
         state = state._replace(comm=init_fault_comm(
             state.comm, state.params, problem.clients.num_clients))
+    if async_cfg is not None and async_cfg.active:
+        # every client starts with an empty buffer (age 0)
+        from repro.robust.async_agg import init_async_comm
+
+        state = state._replace(comm=init_async_comm(
+            state.comm, state.params, problem.clients.num_clients))
     if runtime == "sharded":
         from repro.core.sharded import make_sharded_round_fn
 
@@ -153,9 +174,11 @@ def run_federated(
 
             mesh = make_host_mesh()
         round_fn = make_sharded_round_fn(algo, problem, hp, mesh,
-                                         channel=channel, faults=faults)
+                                         channel=channel, faults=faults,
+                                         async_cfg=async_cfg)
     else:
-        round_fn = make_round_fn(algo, problem, hp, channel, faults=faults)
+        round_fn = make_round_fn(algo, problem, hp, channel, faults=faults,
+                                 async_cfg=async_cfg)
 
     sinks = list(sinks)
     run_info = {
@@ -196,6 +219,9 @@ def run_federated(
             final_params=jax.device_get(state.params),
             channel=channel.name,
             gram_cond_max=trace.gram_cond_max,
+            arrivals=trace.arrivals,
+            staleness_mean=trace.staleness_mean,
+            staleness_max=trace.staleness_max,
         )
 
     round_fn = jax.jit(round_fn)
@@ -236,7 +262,8 @@ def run_federated(
                 rel = float("nan")
             rows.append((t, mdict["loss"], mdict["grad_norm"], rel,
                          mdict["theta_mean"], mdict["gram_cond_max"],
-                         comm_total, t_total))
+                         comm_total, t_total, mdict["arrivals"],
+                         mdict["staleness_mean"], mdict["staleness_max"]))
             for s in sinks:
                 s.emit([build_round_row(t, mdict, rel, comm_total, dt,
                                         t_total)])
@@ -278,6 +305,9 @@ def run_federated(
         final_params=jax.device_get(state.params),
         channel=channel.name,
         gram_cond_max=arr[:, 5],
+        arrivals=arr[:, 8],
+        staleness_mean=arr[:, 9],
+        staleness_max=arr[:, 10],
     )
 
 

@@ -147,7 +147,8 @@ def num_client_shards(mesh, axes: tuple[str, ...] | None = None) -> int:
 def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
                           mesh, client_axes: tuple[str, ...] | None = None,
                           channel: "CommChannel | str | None" = None,
-                          faults: "FaultPlan | None" = None):
+                          faults: "FaultPlan | None" = None,
+                          async_cfg: "AsyncConfig | None" = None):
     """Return a jittable round(state) -> (state, RoundMetrics) whose client
     fan-out is shard_mapped over ``mesh``'s ("pod","data") axes.
 
@@ -167,6 +168,14 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
     appear. The weight adjustment, dropped-row freeze and stale-anchor
     refresh run at jit level outside the shard_map, shared with the vmap
     builder's logic verbatim.
+
+    ``async_cfg`` (repro.robust.async_agg) deadline-gates the round close the
+    same way: the gate's partition and discounted weights are computed at jit
+    level from the realized latencies (identical to the vmap builder), the
+    body's only change is capturing the anchored model uplink's post-codec
+    rows as one extra client-sharded output, and the buffer fold/transition
+    runs at jit level. None (or ``deadline == 0``) compiles the byte-identical
+    barriered graph.
     """
     if algo not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algo!r}; choose from {ALGORITHMS}")
@@ -270,7 +279,78 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
             upd = freeze_dropped(fr.drop, plan.cohort, upd)
         return upd
 
-    fsp = () if faults is None else (csh,) * 4
+    fsp = () if faults is None else (csh,) * len(FaultRealization._fields)
+
+    # ---------------- deadline gate (repro/robust/async_agg) ----------------
+    # python-gated exactly like the fault plan: an absent/inactive config
+    # compiles the byte-identical barriered round (no extra smap outputs)
+    async_cfg = async_cfg if (async_cfg is not None and async_cfg.active) \
+        else None
+    if async_cfg is not None:
+        if algo in ("giant", "newton_gmres"):
+            raise ValueError(
+                f"AsyncConfig requires a delta-form model aggregation; "
+                f"{algo!r} aggregates Newton directions and cannot buffer "
+                "client deltas")
+        from repro.robust.async_agg import (ASYNC_AGE_KEY, ASYNC_BUF_KEY,
+                                            CaptureReduce, advance_buffer,
+                                            async_round_stats, fold_buffered,
+                                            guard_history_rows, plan_async)
+        from repro.robust.faults import _bc
+
+    asp = () if async_cfg is None else (csh,)
+
+    def async_ctx(plan, fr, dw, pw):
+        """jit-level (OUTSIDE shard_map) deadline-gate partition + discounted
+        weights — the same plan_async call the vmap builder makes, so both
+        runtimes gate identical rounds."""
+        if async_cfg is None:
+            return dw, pw, None
+        latency = fr.latency if fr is not None else jnp.zeros_like(pw)
+        drop = fr.drop if (faults is not None and faults.drop_rate > 0.0) \
+            else None
+        ar = plan_async(async_cfg, latency,
+                        plan.cohort.comm[ASYNC_AGE_KEY], pw, drop=drop)
+        if algo in ("scaffold", "fedosaa_scaffold"):
+            # control variates ride the model uplink: only fresh arrivals
+            # contribute to the c aggregation (the buffer holds model deltas
+            # only — a fold's c_up is lost on the floor)
+            dwz = jnp.where(ar.fresh, dw, jnp.zeros_like(dw))
+            dw = dwz / jnp.maximum(jnp.sum(dwz), 1e-30)
+        return dw, ar.fresh_weights, ar
+
+    def async_reduce(Rb):
+        """Inside the body: wrap the (possibly faulty) reduce so the anchored
+        model uplink's post-codec rows can leave as an extra sharded output."""
+        return CaptureReduce(Rb) if async_cfg is not None else Rb
+
+    def async_out(Rb):
+        return (Rb.captured,) if async_cfg is not None else ()
+
+    def async_epilogue(plan, ar, captured, w_t, new_params, upd):
+        """jit-level buffer fold + transition, run AFTER fault_epilogue —
+        identical logic to the vmap builder (see make_round_fn)."""
+        if async_cfg is None:
+            return new_params, upd, None
+        comm_in = plan.cohort.comm
+        new_params = fold_buffered(new_params, ar.fold_weights,
+                                   comm_in[ASYNC_BUF_KEY])
+        delta = jax.tree.map(lambda cap, w: cap - w, captured, w_t)
+        new_buf, new_age = advance_buffer(ar, delta, comm_in[ASYNC_BUF_KEY],
+                                          comm_in[ASYNC_AGE_KEY])
+        comm = dict(upd["comm"] if upd.get("comm") is not None else comm_in)
+        comm[ASYNC_BUF_KEY] = new_buf
+        comm[ASYNC_AGE_KEY] = new_age
+        upd = {**upd, "comm": comm}
+        if upd.get("c_k") is not None:
+            # a non-fresh client's control-variate update never arrived
+            old_ck = plan.cohort.c_k
+            upd["c_k"] = jax.tree.map(
+                lambda o, n: jnp.where(_bc(~ar.fresh, n), o, n),
+                old_ck, upd["c_k"])
+        if async_cfg.guard_history:
+            upd = guard_history_rows(ar.fold | ar.retain, plan.cohort, upd)
+        return new_params, upd, async_round_stats(ar)
 
     # NOTE: optional per-client state (carried AA history, error-feedback
     # residuals) passes through shard_map as None when absent — None is an
@@ -284,34 +364,44 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         def round_fn(state: ServerState):
             rng, plan = prologue(state)
             dw, pw, fr, fx = fault_ctx(plan, state.t)
+            dw, pw, ar = async_ctx(plan, fr, dw, pw)
             carry = hp.carry_history > 0 and state.hist_s is not None
 
             def body(w_t, x, y, mask, dw_, pw_, r, hs, hy, e, *fxa):
                 Rb, frl = fault_reduce(e, fxa)
+                Rb = async_reduce(Rb)
                 kw = {}
                 if frl is not None and faults.poisons_history and use_aa:
                     kw = dict(poison=(frl.byz, frl.keys),
                               poison_scale=faults.byz_scale)
-                return _svrg_round_core(
+                out = _svrg_round_core(
                     problem, hp, use_aa, Rb, w_t, x, y, mask, dw_, pw_, r,
                     hs, hy, e, **kw)
+                return out + async_out(Rb)
 
-            new_params, parts, new_hs, new_hy, new_comm = smap(
+            outs = smap(
                 body,
                 in_specs=(rep, csh, csh, csh, csh, csh, csh, csh, csh, csh)
                 + fsp,
-                out_specs=(rep, rep, csh, csh, csh),
+                out_specs=(rep, rep, csh, csh, csh) + asp,
             )(state.params, plan.x, plan.y, plan.mask, dw, pw, plan.rngs,
               plan.cohort.hist_s if carry else None,
               plan.cohort.hist_y if carry else None,
               plan.cohort.comm, *fx)
+            captured = None
+            if async_cfg is not None:
+                *outs, captured = outs
+            new_params, parts, new_hs, new_hy, new_comm = outs
             upd = dict(comm=new_comm)
             if carry:
                 upd.update(hist_s=new_hs, hist_y=new_hy)
             upd = fault_epilogue(plan, fr, state.params, upd)
+            new_params, upd, astats = async_epilogue(
+                plan, ar, captured, state.params, new_params, upd)
             upd = _commit_plan(plan, **upd)
             return state._replace(params=new_params, t=state.t + 1, rng=rng,
-                                  **upd), finalize_metrics(parts, comm_bytes)
+                                  **upd), finalize_metrics(parts, comm_bytes,
+                                                           astats)
 
         return round_fn
 
@@ -322,27 +412,42 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         def round_fn(state: ServerState):
             rng, plan = prologue(state)
             dw, pw, fr, fx = fault_ctx(plan, state.t)
+            dw, pw, ar = async_ctx(plan, fr, dw, pw)
 
             def body(w_t, c, x, y, mask, c_k, dw_, pw_, r, e, *fxa):
                 Rb, _ = fault_reduce(e, fxa)
-                return _scaffold_round_core(
+                Rb = async_reduce(Rb)
+                out = _scaffold_round_core(
                     problem, hp, use_aa, Rb, w_t, c, x, y, mask, c_k, dw_,
                     pw_, r, e)
+                return out + async_out(Rb)
 
-            new_params, new_c, new_c_k, parts, new_comm = smap(
+            outs = smap(
                 body,
                 in_specs=(rep, rep, csh, csh, csh, csh, csh, csh, csh, csh)
                 + fsp,
-                out_specs=(rep, rep, csh, rep, csh),
+                out_specs=(rep, rep, csh, rep, csh) + asp,
             )(state.params, state.c, plan.x, plan.y, plan.mask,
               plan.cohort.c_k, dw, pw, plan.rngs, plan.cohort.comm, *fx)
+            captured = None
+            if async_cfg is not None:
+                *outs, captured = outs
+            new_params, new_c, new_c_k, parts, new_comm = outs
             upd = fault_epilogue(plan, fr, state.params,
                                  dict(c_k=new_c_k, comm=new_comm))
+            new_params, upd, astats = async_epilogue(
+                plan, ar, captured, state.params, new_params, upd)
+            if ar is not None:
+                # c's aggregation is not delta-form: a zero-fresh round would
+                # zero the server control variate, so keep the old c instead
+                any_fresh = jnp.any(ar.fresh)
+                new_c = jax.tree.map(
+                    lambda n, o: jnp.where(any_fresh, n, o), new_c, state.c)
             upd = _commit_plan(plan, **upd)
             return (
                 state._replace(params=new_params, c=new_c, t=state.t + 1,
                                rng=rng, **upd),
-                finalize_metrics(parts, comm_bytes),
+                finalize_metrics(parts, comm_bytes, astats),
             )
 
         return round_fn
@@ -354,22 +459,32 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         def round_fn(state: ServerState):
             rng, plan = prologue(state)
             dw, pw, fr, fx = fault_ctx(plan, state.t)
+            dw, pw, ar = async_ctx(plan, fr, dw, pw)
 
             def body(w_t, x, y, mask, dw_, pw_, r, e, *fxa):
                 Rb, _ = fault_reduce(e, fxa)
-                return _avg_round_core(
+                Rb = async_reduce(Rb)
+                out = _avg_round_core(
                     problem, hp, use_aa, Rb, w_t, x, y, mask, dw_, pw_, r, e)
+                return out + async_out(Rb)
 
-            new_params, parts, new_comm = smap(
+            outs = smap(
                 body,
                 in_specs=(rep, csh, csh, csh, csh, csh, csh, csh) + fsp,
-                out_specs=(rep, rep, csh),
+                out_specs=(rep, rep, csh) + asp,
             )(state.params, plan.x, plan.y, plan.mask, dw, pw, plan.rngs,
               plan.cohort.comm, *fx)
+            captured = None
+            if async_cfg is not None:
+                *outs, captured = outs
+            new_params, parts, new_comm = outs
             upd = fault_epilogue(plan, fr, state.params, dict(comm=new_comm))
+            new_params, upd, astats = async_epilogue(
+                plan, ar, captured, state.params, new_params, upd)
             upd = _commit_plan(plan, **upd)
             return state._replace(params=new_params, t=state.t + 1,
-                                  rng=rng, **upd), finalize_metrics(parts, comm_bytes)
+                                  rng=rng, **upd), finalize_metrics(
+                                      parts, comm_bytes, astats)
 
         return round_fn
 
@@ -379,22 +494,32 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
         def round_fn(state: ServerState):
             rng, plan = prologue(state)
             dw, pw, fr, fx = fault_ctx(plan, state.t)
+            dw, pw, ar = async_ctx(plan, fr, dw, pw)
 
             def body(w_t, x, y, mask, dw_, pw_, r, e, *fxa):
                 Rb, _ = fault_reduce(e, fxa)
-                return _lbfgs_round_core(
+                Rb = async_reduce(Rb)
+                out = _lbfgs_round_core(
                     problem, hp, Rb, w_t, x, y, mask, dw_, pw_, r, e)
+                return out + async_out(Rb)
 
-            new_params, parts, new_comm = smap(
+            outs = smap(
                 body,
                 in_specs=(rep, csh, csh, csh, csh, csh, csh, csh) + fsp,
-                out_specs=(rep, rep, csh),
+                out_specs=(rep, rep, csh) + asp,
             )(state.params, plan.x, plan.y, plan.mask, dw, pw, plan.rngs,
               plan.cohort.comm, *fx)
+            captured = None
+            if async_cfg is not None:
+                *outs, captured = outs
+            new_params, parts, new_comm = outs
             upd = fault_epilogue(plan, fr, state.params, dict(comm=new_comm))
+            new_params, upd, astats = async_epilogue(
+                plan, ar, captured, state.params, new_params, upd)
             upd = _commit_plan(plan, **upd)
             return state._replace(params=new_params, t=state.t + 1,
-                                  rng=rng, **upd), finalize_metrics(parts, comm_bytes)
+                                  rng=rng, **upd), finalize_metrics(
+                                      parts, comm_bytes, astats)
 
         return round_fn
 
@@ -431,21 +556,31 @@ def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
     def round_fn(state: ServerState):
         rng, plan = prologue(state)
         dw, pw, fr, fx = fault_ctx(plan, state.t)
+        dw, pw, ar = async_ctx(plan, fr, dw, pw)
 
         def body(w_t, x, y, mask, dw_, pw_, r, e, *fxa):
             Rb, _ = fault_reduce(e, fxa)
-            return _dane_round_core(problem, hp, Rb, w_t, x, y, mask, dw_,
-                                    pw_, r, e)
+            Rb = async_reduce(Rb)
+            out = _dane_round_core(problem, hp, Rb, w_t, x, y, mask, dw_,
+                                   pw_, r, e)
+            return out + async_out(Rb)
 
-        new_params, parts, new_comm = smap(
+        outs = smap(
             body,
             in_specs=(rep, csh, csh, csh, csh, csh, csh, csh) + fsp,
-            out_specs=(rep, rep, csh),
+            out_specs=(rep, rep, csh) + asp,
         )(state.params, plan.x, plan.y, plan.mask, dw, pw,
           plan.rngs, plan.cohort.comm, *fx)
+        captured = None
+        if async_cfg is not None:
+            *outs, captured = outs
+        new_params, parts, new_comm = outs
         upd = fault_epilogue(plan, fr, state.params, dict(comm=new_comm))
+        new_params, upd, astats = async_epilogue(
+            plan, ar, captured, state.params, new_params, upd)
         upd = _commit_plan(plan, **upd)
         return state._replace(params=new_params, t=state.t + 1,
-                              rng=rng, **upd), finalize_metrics(parts, comm_bytes)
+                              rng=rng, **upd), finalize_metrics(
+                                  parts, comm_bytes, astats)
 
     return round_fn

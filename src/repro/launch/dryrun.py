@@ -239,7 +239,10 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
                     round_chunk: int = 1, aa_impl: str = "auto",
                     local_impl: str = "auto",
                     cohort_size: int | None = None,
-                    clip_rtol: float = 0.0) -> dict:
+                    clip_rtol: float = 0.0,
+                    drop_rate: float = 0.0, stale_rate: float = 0.0,
+                    byz_clients: int = 0, byz_mode: str = "sign_flip",
+                    dp_sigma: float = 0.0, fault_seed: int = 0) -> dict:
     """Compile + execute shard_mapped FL round(s) on the production mesh.
 
     Uses a synthetic logistic-regression problem (the paper's workload) with
@@ -267,6 +270,12 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
     byzantine screen (repro/robust) — through the sharded round, so the
     defended step's compile/collective profile is measurable on the
     production mesh (0 = screen off, the bit-identical vanilla step).
+
+    ``drop_rate``/``stale_rate``/``byz_clients``/``byz_mode``/``dp_sigma``
+    build a FaultPlan (repro/robust) threaded through the sharded round —
+    the fault-injected round's compile/collective profile on the production
+    mesh. All zero (the default) compiles the byte-identical fault-free
+    graph; ``fault_seed`` keys the injection stream.
 
     ``cohort_size`` samples a C-client cohort each round (AlgoHParams
     .cohort_size): the compiled round computes on [C, ...] tensors gathered
@@ -310,9 +319,18 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
     channel = make_channel(comm_codec)
     # algo-aware init: ServerState.comm gets exactly the buffers the
     # algorithm's uplink schema (UPLINK_SCHEMAS) declares for this channel
+    from repro.robust import FaultPlan
+    faults = FaultPlan(seed=fault_seed, drop_rate=drop_rate,
+                       stale_rate=stale_rate, byz_clients=byz_clients,
+                       byz_mode=byz_mode, dp_sigma=dp_sigma)
+    faults = faults if faults.active else None
     state = init_state(problem, jax.random.PRNGKey(0), hp, channel, algo)
+    if faults is not None and faults.stale_rate > 0.0:
+        from repro.robust import init_fault_comm
+        state = state._replace(comm=init_fault_comm(
+            state.comm, state.params, num_clients))
     raw_round_fn = make_sharded_round_fn(algo, problem, hp, mesh,
-                                         channel=channel)
+                                         channel=channel, faults=faults)
     round_fn = jax.jit(raw_round_fn)
     compiled = round_fn.lower(state).compile()
     compile_s = time.time() - t0
@@ -373,6 +391,12 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
         "channel": channel.name,
         "round_chunk": round_chunk,
         "clip_rtol": clip_rtol,
+        "faults": (None if faults is None else {
+            "seed": faults.seed, "drop_rate": faults.drop_rate,
+            "stale_rate": faults.stale_rate,
+            "byz_clients": faults.byz_clients, "byz_mode": faults.byz_mode,
+            "dp_sigma": faults.dp_sigma,
+        }),
         "aa_impl": aa_impl,
         "local_impl": local_impl,
         "compile_s": round(compile_s, 1),
@@ -423,6 +447,25 @@ def main() -> None:
                     help="with --fl-round: AAConfig.clip_rtol, the residual-"
                          "clipped AA byzantine screen (repro/robust). "
                          "0 = screen off")
+    ap.add_argument("--drop-rate", type=float, default=0.0,
+                    help="with --fl-round: FaultPlan.drop_rate — per-round "
+                         "per-client uplink drop probability")
+    ap.add_argument("--stale-rate", type=float, default=0.0,
+                    help="with --fl-round: FaultPlan.stale_rate — aged-anchor "
+                         "upload probability")
+    ap.add_argument("--byz-clients", type=int, default=0,
+                    help="with --fl-round: FaultPlan.byz_clients — number of "
+                         "persistently byzantine clients")
+    ap.add_argument("--byz-mode", choices=("sign_flip", "noise", "history"),
+                    default="sign_flip",
+                    help="with --fl-round: FaultPlan.byz_mode")
+    ap.add_argument("--dp-sigma", type=float, default=0.0,
+                    help="with --fl-round: FaultPlan.dp_sigma — post-codec "
+                         "client-side Gaussian DP noise scale")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="with --fl-round: FaultPlan.seed — keys the "
+                         "injection stream (equal seeds inject bit-identical "
+                         "rounds across runs and runtimes)")
     ap.add_argument("--aa-impl", choices=("auto", "tree", "pallas"),
                     default="auto",
                     help="with --fl-round: AlgoHParams.aa_impl (the sharded "
@@ -453,6 +496,17 @@ def main() -> None:
             engine_tag += f"chunk{eff_chunk}"
         if args.clip_rtol:
             engine_tag += ("+" if engine_tag else "") + f"clip{args.clip_rtol:g}"
+        # fault knobs name the artifact so injected dry-runs never clobber
+        # the fault-free profile of the same algo/codec/mesh combination
+        if args.drop_rate:
+            engine_tag += ("+" if engine_tag else "") + f"drop{args.drop_rate:g}"
+        if args.stale_rate:
+            engine_tag += ("+" if engine_tag else "") + f"stale{args.stale_rate:g}"
+        if args.byz_clients:
+            engine_tag += ("+" if engine_tag else "") + (
+                f"byz{args.byz_clients}-{args.byz_mode.replace('_', '')}")
+        if args.dp_sigma:
+            engine_tag += ("+" if engine_tag else "") + f"dp{args.dp_sigma:g}"
         if args.aa_impl != "auto":
             engine_tag += ("+" if engine_tag else "") + args.aa_impl
         if args.local_impl != "auto":
@@ -470,7 +524,13 @@ def main() -> None:
                                       aa_impl=args.aa_impl,
                                       local_impl=args.local_impl,
                                       cohort_size=args.cohort_size or None,
-                                      clip_rtol=args.clip_rtol)
+                                      clip_rtol=args.clip_rtol,
+                                      drop_rate=args.drop_rate,
+                                      stale_rate=args.stale_rate,
+                                      byz_clients=args.byz_clients,
+                                      byz_mode=args.byz_mode,
+                                      dp_sigma=args.dp_sigma,
+                                      fault_seed=args.fault_seed)
                 with open(os.path.join(RESULTS_DIR, tag + ".json"), "w") as f:
                     json.dump(res, f, indent=1)
                 print(f"OK   {tag}: compile={res['compile_s']}s "

@@ -45,6 +45,54 @@ def main() -> None:
                          "Gram solve — the byzantine-history defense "
                          "(repro/robust). 0 = screen off (bit-identical to "
                          "the unscreened step)")
+    # -- fault injection (repro/robust) ----------------------------------
+    ap.add_argument("--drop-rate", type=float, default=0.0,
+                    help="per-round per-client probability the uplink never "
+                         "lands (FaultPlan.drop_rate): survivors' weights "
+                         "renormalize, the dropped client's state rows stay "
+                         "bit-frozen")
+    ap.add_argument("--stale-rate", type=float, default=0.0,
+                    help="per-round per-client probability the upload is "
+                         "computed against an aged anchor w^{t-s} "
+                         "(FaultPlan.stale_rate); consecutive draws compound")
+    ap.add_argument("--byz-clients", type=int, default=0,
+                    help="number of (lowest-id) persistently byzantine "
+                         "clients (FaultPlan.byz_clients)")
+    ap.add_argument("--byz-mode", choices=("sign_flip", "noise", "history"),
+                    default="sign_flip",
+                    help="byzantine perturbation: sign_flip/noise corrupt "
+                         "the uplink, history poisons the recorded AA "
+                         "column (the attack --clip-rtol screens)")
+    ap.add_argument("--dp-sigma", type=float, default=0.0,
+                    help="client-side Gaussian DP noise scale, applied "
+                         "post-codec so error feedback tracks the noised "
+                         "wire (FaultPlan.dp_sigma)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="FaultPlan.seed: keys the whole injection stream — "
+                         "equal seeds inject bit-identical rounds across "
+                         "runs and runtimes")
+    ap.add_argument("--latency-scale", type=float, default=0.0,
+                    help="simulate per-client compute latency "
+                         "(FaultPlan.latency_scale; 0 = off) — feeds the "
+                         "--deadline gate")
+    ap.add_argument("--latency-shape", type=float, default=1.0,
+                    help="latency tail heaviness (lognormal sigma / pareto "
+                         "index; FaultPlan.latency_shape)")
+    ap.add_argument("--latency-dist", choices=("lognormal", "pareto"),
+                    default="lognormal")
+    # -- deadline-gated aggregation (repro/robust/async_agg) -------------
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="deadline-gate the round close (AsyncConfig."
+                         "deadline): only clients whose simulated latency "
+                         "beats the deadline land; late updates buffer and "
+                         "fold in later with staleness-discounted weight. "
+                         "0 = the barriered (synchronous) round")
+    ap.add_argument("--min-arrivals", type=int, default=0,
+                    help="extend the deadline in-graph whenever fewer "
+                         "latencies beat it (AsyncConfig.min_arrivals)")
+    ap.add_argument("--staleness-alpha", type=float, default=0.5,
+                    help="staleness discount exponent: a fold aged s rounds "
+                         "weighs (1+s)^-alpha (AsyncConfig.staleness_alpha)")
     ap.add_argument("--participation", type=float, default=1.0,
                     help="fraction of clients active per round: <1.0 samples "
                          "a ⌈pK⌉-client cohort each round (weighted, without "
@@ -143,6 +191,23 @@ def main() -> None:
     channel = make_channel(args.comm_codec)
     chunk = args.round_chunk if args.round_chunk > 0 else None
 
+    from repro.robust import AsyncConfig, FaultPlan
+    faults = FaultPlan(
+        seed=args.fault_seed, drop_rate=args.drop_rate,
+        stale_rate=args.stale_rate, byz_clients=args.byz_clients,
+        byz_mode=args.byz_mode, dp_sigma=args.dp_sigma,
+        latency_dist=args.latency_dist, latency_scale=args.latency_scale,
+        latency_shape=args.latency_shape)
+    faults = faults if faults.active else None
+    async_cfg = AsyncConfig(deadline=args.deadline,
+                            min_arrivals=args.min_arrivals,
+                            staleness_alpha=args.staleness_alpha)
+    async_cfg = async_cfg if async_cfg.active else None
+    if async_cfg is not None and (faults is None
+                                  or not faults.simulates_latency):
+        print("warning: --deadline without --latency-scale gates on all-zero "
+              "latencies (every client on time)")
+
     mesh = None
     if args.runtime == "sharded":
         from repro.core.sharded import num_client_shards
@@ -194,7 +259,8 @@ def main() -> None:
         h = run_federated(problem, algo, hp, args.rounds,
                           runtime=args.runtime, mesh=mesh, channel=channel,
                           chunk=chunk, sinks=sinks,
-                          trace_capture=trace_capture)
+                          trace_capture=trace_capture, faults=faults,
+                          async_cfg=async_cfg)
         results[algo] = {
             "loss_curve": [float(v) for v in h.loss],
             "grad_norm_curve": [float(v) for v in h.grad_norm],
@@ -202,6 +268,24 @@ def main() -> None:
             "comm_bytes": float(h.comm_bytes[-1]),
             "channel": h.channel,
             "wall_s": time.time() - t0,
+            # fault/async parameters travel with the artifact so a result
+            # file is self-describing about what was injected
+            "faults": (None if faults is None else {
+                "seed": faults.seed, "drop_rate": faults.drop_rate,
+                "stale_rate": faults.stale_rate,
+                "byz_clients": faults.byz_clients,
+                "byz_mode": faults.byz_mode, "dp_sigma": faults.dp_sigma,
+                "latency_dist": faults.latency_dist,
+                "latency_scale": faults.latency_scale,
+                "latency_shape": faults.latency_shape,
+            }),
+            "async": (None if async_cfg is None else {
+                "deadline": async_cfg.deadline,
+                "min_arrivals": async_cfg.min_arrivals,
+                "staleness_alpha": async_cfg.staleness_alpha,
+                "arrivals_curve": [float(v) for v in h.arrivals],
+                "staleness_max_curve": [float(v) for v in h.staleness_max],
+            }),
         }
         print(f"{algo}: loss {h.loss[0]:.4f} -> {h.loss[-1]:.4f} "
               f"|g| {h.grad_norm[-1]:.2e} "

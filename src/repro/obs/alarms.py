@@ -26,7 +26,11 @@ aa_clipping_active: the clip_rtol byzantine screen (core/anderson.py) dropped
 history columns this round — the monitor's per-rule cooldown turns a
 persistently-active screen into a periodic warning (a one-off clip stays a
 single log line) telling the operator some client's history is being
-rejected as poisoned.
+rejected as poisoned. staleness_runaway watches the deadline gate
+(repro.robust.async_agg): a landed contribution older than 10 rounds means
+the buffer is draining slower than it fills — the discounted fold is about
+to stop paying for itself (the field is null/NaN when async is off, which
+never fires a threshold op).
 """
 from __future__ import annotations
 
@@ -69,6 +73,7 @@ DEFAULT_RULES = (
     AlarmRule("rel_error_plateau", "rel_error", "no_improve",
               window=50, min_improve=1e-3),
     AlarmRule("aa_clipping_active", "aa_clipped_max", "gt", threshold=0.0),
+    AlarmRule("staleness_runaway", "staleness_max", "gt", threshold=10.0),
 )
 
 

@@ -7,14 +7,16 @@ device→host transfers (tests/test_obs.py counts them). The legacy per-round
 loop (core/server.py) feeds the same rows at round granularity.
 
 Row schema (versioned — bump SCHEMA_VERSION on any incompatible change;
-v2 added aa_clipped_max, the robustness layer's clip-screen activity):
+v2 added aa_clipped_max, the robustness layer's clip-screen activity; v3
+added arrivals/staleness_mean/staleness_max, the deadline gate's per-round
+activity — null whenever AsyncConfig is off):
 
-  header row  {"v": 2, "kind": "header", "fields": [...], ...run metadata:
+  header row  {"v": 3, "kind": "header", "fields": [...], ...run metadata:
                algo / runtime / channel / num_clients / cohort_size / chunk /
                num_rounds / uplink_bytes (per-UplinkSpec byte breakdown from
                the comm schema) / backend}
-  round row   {"v": 2, "kind": "round", "round": t, <ROW_FIELDS>}
-  footer row  {"v": 2, "kind": "footer", "rounds": T, "stopped": bool,
+  round row   {"v": 3, "kind": "round", "round": t, <ROW_FIELDS>}
+  footer row  {"v": 3, "kind": "footer", "rounds": T, "stopped": bool,
                "alarms": [...]}
 
 Round-row fields (ROW_FIELDS):
@@ -33,6 +35,12 @@ Round-row fields (ROW_FIELDS):
   cohort_ess           — effective sample size 1/Σw² of the round's
                          aggregation weights (cohort draw concentration)
   comm_bytes           — this round's wire bytes (codec-exact)
+  arrivals             — deadline-gated rounds: clients whose update landed
+                         this round, fresh or buffered (null when async off)
+  staleness_mean/_max  — mean / oldest buffer age over the round's landed
+                         contributions (null when async off or nothing
+                         landed; a climbing staleness_max trips the
+                         staleness_runaway alarm)
   comm_bytes_total     — cumulative wire bytes
   round_wall_s         — wall-clock attributed to this round (the engine
                          divides each chunk's measured time equally over its
@@ -51,7 +59,7 @@ from typing import Any, Protocol, runtime_checkable
 
 import numpy as np
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 #: canonical per-round row fields, in emission order (after "round")
 ROW_FIELDS = (
@@ -65,6 +73,9 @@ ROW_FIELDS = (
     "aa_clipped_max",
     "cohort_ess",
     "comm_bytes",
+    "arrivals",
+    "staleness_mean",
+    "staleness_max",
     "comm_bytes_total",
     "round_wall_s",
     "wall_time_s",
@@ -94,6 +105,9 @@ def build_round_row(round_idx: int, metrics: "dict[str, float]", rel: float,
         "aa_clipped_max": metrics["aa_clipped_max"],
         "cohort_ess": metrics["cohort_ess"],
         "comm_bytes": metrics["comm_bytes"],
+        "arrivals": metrics["arrivals"],
+        "staleness_mean": metrics["staleness_mean"],
+        "staleness_max": metrics["staleness_max"],
         "comm_bytes_total": comm_total,
         "round_wall_s": round_wall_s,
         "wall_time_s": wall_total_s,

@@ -1,9 +1,24 @@
-"""Robustness layer: fault injection (faults.py) + the clip_rtol defense
-(core/anderson.py) + the fault-matrix acceptance benchmark
-(benchmarks/ext_robustness.py)."""
+"""Robustness layer: fault injection (faults.py), deadline-gated buffered
+aggregation (async_agg.py), the clip_rtol defense (core/anderson.py), and the
+acceptance benchmarks (benchmarks/ext_robustness.py, benchmarks/ext_async.py)."""
+from repro.robust.async_agg import (  # noqa: F401
+    ASYNC_AGE_KEY,
+    ASYNC_BUF_KEY,
+    AsyncConfig,
+    AsyncRealization,
+    CaptureReduce,
+    advance_buffer,
+    async_round_stats,
+    discounted_weights,
+    fold_buffered,
+    guard_history_rows,
+    init_async_comm,
+    plan_async,
+)
 from repro.robust.faults import (  # noqa: F401
     BYZ_MODES,
     FAULT_ANCHOR_KEY,
+    LATENCY_DISTS,
     FaultPlan,
     FaultRealization,
     FaultyReduce,

@@ -1,0 +1,282 @@
+"""Deadline-gated, staleness-discounted aggregation (the straggler half).
+
+:mod:`repro.robust.faults` simulates per-client compute latency (the
+``latency_*`` fields on ``FaultPlan``); this module decides what the server
+does with it. An :class:`AsyncConfig` turns the barriered round into a
+FedBuff-style deadline-gated one:
+
+* a client whose simulated latency beats the (possibly extended) deadline
+  lands **fresh** this round — its post-codec update enters the aggregation
+  exactly as in the synchronous round;
+* a late client keeps grinding: its post-codec update is parked in a
+  per-client **buffer row** (under :data:`ASYNC_BUF_KEY` / :data:`ASYNC_AGE_KEY`
+  in the comm state, so it rides the cohort gather/scatter and checkpoints for
+  free, the ``FAULT_ANCHOR_KEY`` precedent) and **folds** into the first later
+  round in which the client is sampled and on time, with weight discounted by
+  its staleness ``s`` (rounds spent in the buffer) as ``(1+s)^-alpha``;
+* a client still busy with a buffered round does not start fresh work — a
+  sampled busy+late client just ages (``retain``).
+
+Graceful degradation: if fewer than ``min_arrivals`` latencies beat
+``deadline``, the deadline extends in-graph to the ``min_arrivals``-th order
+statistic (the server waits for the fastest m — never a garbage step from an
+empty quorum); a round with zero contributors produces all-zero weights, and
+the delta-form aggregation then keeps ``w^t`` bit-exactly (the PR-2
+``_participation_weights`` / drop-weights precedent).
+
+Composition with dropout: ``drop`` models the *wire* failing, the deadline
+models the *compute* being slow. A dropped on-time client contributes nothing
+and buffers nothing (it finished; the upload vanished). A dropped fold means
+the buffered delivery failed — the buffer row is retained and ages one more
+round. A late client buffers client-side regardless of drop.
+
+Staleness guard for AA: a busy client's recorded residual history this round
+describes a trajectory that semantically never ran (the sim computes it, the
+deadline says the client didn't finish it). With ``guard_history=True`` the
+builders bit-freeze busy clients' ``hist_s``/``hist_y`` rows so stale folds
+never enter the Gram solve as fresh secant columns; the alternative —
+age-screening via ``AAConfig.clip_rtol`` — is measured against it in
+``benchmarks/ext_async.py``.
+
+Like ``FaultPlan``, everything here is python-gated: an inactive config
+(``deadline == 0``) compiles the byte-identical synchronous graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.robust.faults import _bc
+
+Pytree = Any
+
+#: reserved comm-state tags for the per-client [K, ...] buffered post-codec
+#: deltas and their [K] int32 ages (0 = empty; dunder names cannot collide
+#: with codec tags, which comm/schema.py restricts to short identifiers)
+ASYNC_BUF_KEY = "__async_buf__"
+ASYNC_AGE_KEY = "__async_age__"
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Declarative deadline gate for the federated round.
+
+    deadline        simulated-time budget per round; 0 disables the gate
+                    entirely (synchronous barriered round, byte-identical
+                    graph).
+    min_arrivals    extend the deadline in-graph to the m-th latency order
+                    statistic whenever fewer than m clients beat it (m is
+                    clamped to the cohort size). Note: extension looks at
+                    latency only — a simultaneously dropped client still
+                    counts toward the quorum it extends for, because the
+                    server cannot see wire faults ahead of time.
+    staleness_alpha discount exponent: a fold aged s rounds contributes with
+                    base weight scaled by ``(1+s)^-alpha``.
+    guard_history   bit-freeze busy clients' AA history rows (see module
+                    docstring); False leaves the history writes untouched so
+                    ``clip_rtol`` age-screening can be measured against it.
+    """
+
+    deadline: float = 0.0
+    min_arrivals: int = 0
+    staleness_alpha: float = 0.5
+    guard_history: bool = True
+
+    def __post_init__(self):
+        if self.deadline < 0.0:
+            raise ValueError(f"deadline must be >= 0, got {self.deadline}")
+        if self.min_arrivals < 0:
+            raise ValueError(
+                f"min_arrivals must be >= 0, got {self.min_arrivals}")
+        if self.staleness_alpha < 0.0:
+            raise ValueError(
+                f"staleness_alpha must be >= 0, got {self.staleness_alpha}")
+
+    @property
+    def active(self) -> bool:
+        """False = synchronous round; the builders compile the exact
+        barriered graph (python-gated, the ``FaultPlan.active`` contract)."""
+        return self.deadline > 0.0
+
+
+class AsyncRealization(NamedTuple):
+    """One round's deadline-gate partition for the C cohort clients.
+
+    The five masks are disjoint by construction except ``contribute``
+    (= fresh | fold); every [C] client falls in exactly one of
+    {fresh, fold, defer, retain, idle} where idle = on-time-but-dropped
+    with an empty buffer.
+    """
+
+    contribute: jax.Array     # bool — lands this round (fresh or fold)
+    fresh: jax.Array          # bool — on time, buffer empty: update lands now
+    fold: jax.Array           # bool — on time, buffer full: buffered delta lands
+    defer: jax.Array          # bool — late, buffer empty: fresh delta buffers
+    retain: jax.Array         # bool — busy and not folding: buffer ages
+    staleness: jax.Array      # float — age of what landed (0 for fresh rows)
+    weights: jax.Array        # discounted renormalized aggregation weights
+    fresh_weights: jax.Array  # weights · fresh (what the in-core wsum uses)
+    fold_weights: jax.Array   # weights · fold (the jit-level buffer fold)
+    deadline: jax.Array       # scalar — effective deadline after extension
+
+
+def discounted_weights(base: jax.Array, contribute: jax.Array,
+                       staleness: jax.Array, alpha: float) -> jax.Array:
+    """Staleness-discounted aggregation weights over the contributors.
+
+    ``base`` is the round's participation weights (non-negative); each
+    contributor's weight is scaled by ``(1+s)^-alpha`` and the result is
+    renormalized over contributors. Zero contributors yield the all-zero
+    vector — the delta-form no-op, never a divide-by-zero.
+    """
+    s = jnp.maximum(staleness.astype(base.dtype), 0.0)
+    w = jnp.where(contribute, base * (1.0 + s) ** (-alpha), 0.0)
+    return w / jnp.maximum(jnp.sum(w), 1e-30)
+
+
+def plan_async(cfg: AsyncConfig, latency: jax.Array, age: jax.Array,
+               pweight: jax.Array,
+               drop: jax.Array | None = None) -> AsyncRealization:
+    """Partition the cohort for one deadline-gated round (all [C] ops).
+
+    ``latency`` is the realized per-client compute time (``FaultRealization
+    .latency``), ``age`` the cohort's buffered-round ages (0 = empty buffer),
+    ``pweight`` the base participation weights, ``drop`` the optional wire
+    dropout mask. Pure function of its arguments — the host-side wall-clock
+    replay in benchmarks/ext_async.py calls it with the same realized draws
+    the compiled round saw.
+    """
+    lat = latency.astype(jnp.result_type(latency, jnp.float32))
+    d_eff = jnp.asarray(cfg.deadline, lat.dtype)
+    if cfg.min_arrivals > 0:
+        m = min(int(cfg.min_arrivals), lat.shape[0])
+        d_eff = jnp.maximum(d_eff, jnp.sort(lat)[m - 1])
+    ontime = lat <= d_eff
+    landed = ontime if drop is None else ontime & ~drop
+    busy = age > 0
+    fresh = landed & ~busy
+    fold = landed & busy
+    # defer keys off ontime, not landed: a late client buffers client-side
+    # whether or not this round's wire would have dropped it
+    defer = ~ontime & ~busy
+    retain = busy & ~fold
+    contribute = fresh | fold
+    staleness = jnp.where(fold, age, 0).astype(pweight.dtype)
+    w = discounted_weights(pweight, contribute, staleness,
+                           cfg.staleness_alpha)
+    return AsyncRealization(
+        contribute=contribute, fresh=fresh, fold=fold, defer=defer,
+        retain=retain, staleness=staleness, weights=w,
+        fresh_weights=jnp.where(fresh, w, jnp.zeros_like(w)),
+        fold_weights=jnp.where(fold, w, jnp.zeros_like(w)),
+        deadline=d_eff,
+    )
+
+
+# -- carried buffer state ----------------------------------------------------
+
+def init_async_comm(comm: dict | None, params: Pytree,
+                    num_clients: int) -> dict:
+    """Attach the [K, ...] zero buffer rows + [K] zero ages to the comm
+    state (rides ClientStateStore gather/scatter and checkpoints for free)."""
+    buf = jax.tree.map(
+        lambda p: jnp.zeros((num_clients,) + p.shape, p.dtype), params)
+    age = jnp.zeros((num_clients,), jnp.int32)
+    return {**(comm or {}), ASYNC_BUF_KEY: buf, ASYNC_AGE_KEY: age}
+
+
+def fold_buffered(params: Pytree, fold_weights: jax.Array,
+                  buf: Pytree) -> Pytree:
+    """Add the staleness-discounted buffered deltas into the aggregated
+    params: ``params + Σ_k w_k · buf_k``. All-zero fold weights add exactly
+    0.0 — a no-fold round's params are numerically untouched."""
+    return jax.tree.map(
+        lambda p, b: p + jnp.tensordot(
+            fold_weights.astype(b.dtype), b, axes=1).astype(p.dtype),
+        params, buf)
+
+
+def advance_buffer(ar: AsyncRealization, delta: Pytree, buf: Pytree,
+                   age: jax.Array) -> tuple[Pytree, jax.Array]:
+    """Post-round buffer transition for the cohort's [C, ...] rows.
+
+    defer  → the client's fresh post-codec delta enters its buffer, age 1;
+    retain → the buffered delta is kept, age + 1;
+    else   → (fresh landed, fold delivered, or idle) the buffer empties.
+    """
+    new_buf = jax.tree.map(
+        lambda d, b: jnp.where(
+            _bc(ar.defer, b), d.astype(b.dtype),
+            jnp.where(_bc(ar.retain, b), b, jnp.zeros_like(b))),
+        delta, buf)
+    new_age = jnp.where(ar.defer, 1,
+                        jnp.where(ar.retain, age + 1, 0)).astype(age.dtype)
+    return new_buf, new_age
+
+
+def guard_history_rows(busy: jax.Array, cohort, updates: dict) -> dict:
+    """Bit-freeze busy clients' AA history rows (``hist_s``/``hist_y``) at
+    their pre-round values: the trajectory the sim computed for a client that
+    did not finish must not enter the recorded residual history as fresh
+    secant columns (the Gram solve amplifies anchor drift exactly like the
+    PR-8 poisoned columns). Same whole-row mechanics as ``freeze_dropped``,
+    restricted to the history fields."""
+    out = dict(updates)
+    for name in ("hist_s", "hist_y"):
+        new = out.get(name)
+        if new is None:
+            continue
+        old = getattr(cohort, name)
+        out[name] = jax.tree.map(
+            lambda o, n: jnp.where(_bc(busy, n), o, n), old, new)
+    return out
+
+
+def async_round_stats(ar: AsyncRealization) -> tuple[jax.Array, jax.Array,
+                                                     jax.Array]:
+    """(arrivals, staleness_mean, staleness_max) over the round's
+    contributors, for RoundMetrics. A zero-contributor round reports
+    arrivals=0 and NaN staleness (nothing landed to be stale)."""
+    n = jnp.sum(ar.contribute)
+    s = ar.staleness
+    sm = jnp.where(n > 0,
+                   jnp.sum(jnp.where(ar.contribute, s, 0.0))
+                   / jnp.maximum(n, 1).astype(s.dtype),
+                   jnp.nan)
+    sx = jnp.where(n > 0,
+                   jnp.max(jnp.where(ar.contribute, s, -jnp.inf)),
+                   jnp.nan)
+    return n.astype(jnp.float32), sm, sx
+
+
+# -- the capturing wire ------------------------------------------------------
+
+class CaptureReduce:
+    """A reduce view that stashes the anchored model aggregation's post-codec
+    stacked updates for the buffer write.
+
+    Every delta-form round core makes exactly one *anchored* ``wsum`` call —
+    the model aggregation of the decoded [C, ...] client params — so capturing
+    that call's ``stacked`` argument hands the async epilogue the post-codec
+    per-client updates without touching any core. Encode-at-send semantics: a
+    deferred client encoded its update when it finished computing; only the
+    delivery is late, so codec error-feedback (client-local) advances
+    normally. Composes outside ``FaultyReduce`` (attribute access delegates
+    down the chain) and inside shard_map bodies (the stash is the local
+    shard's rows, returned as an extra body output).
+    """
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.captured = None  # [C, ...] post-codec stacked model updates
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def wsum(self, weights, stacked, anchor=None):
+        if anchor is not None:
+            self.captured = stacked
+        return self.inner.wsum(weights, stacked, anchor=anchor)

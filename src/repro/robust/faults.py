@@ -32,6 +32,12 @@ Fault kinds
   codec's encode (via ``CrossClientReduce.uplink(post_codec=...)``), so
   error-feedback residuals and difference-coding references track the noised
   wire rather than silently eating the noise.
+* **latency** (``latency_scale`` > 0) — per-round, per-client compute-time
+  draws from a heavy-tailed ``latency_dist`` ("lognormal": ``scale ·
+  exp(shape·N(0,1))``; "pareto": ``scale · U^{-1/shape}``). Pure simulation
+  data: the draw alone perturbs nothing — it feeds the deadline gate in
+  :mod:`repro.robust.async_agg`, which decides which clients' uplinks land
+  this round and which enter the staleness buffer.
 
 ``FaultyReduce`` wraps a runtime's ``CrossClientReduce``/``ShardReduce`` and
 applies the uplink-level faults; the weight/freeze/anchor plumbing lives in
@@ -56,6 +62,8 @@ Pytree = Any
 
 BYZ_MODES = ("sign_flip", "noise", "history")
 
+LATENCY_DISTS = ("lognormal", "pareto")
+
 #: reserved tag for the per-client [K, ...] lagged-anchor rows in the comm
 #: state dict (codec tags are short names like "grad"/"delta" and
 #: comm/schema.py rejects duplicates, so the dunder name cannot collide)
@@ -79,11 +87,17 @@ class FaultPlan:
     byz_mode: str = "sign_flip"
     byz_scale: float = 10.0
     dp_sigma: float = 0.0
+    latency_dist: str = "lognormal"
+    latency_scale: float = 0.0  # 0 = no latency simulation
+    latency_shape: float = 1.0  # lognormal sigma / pareto tail index
 
     def __post_init__(self):
         if self.byz_mode not in BYZ_MODES:
             raise ValueError(
                 f"unknown byz_mode {self.byz_mode!r}; choose from {BYZ_MODES}")
+        if self.latency_dist not in LATENCY_DISTS:
+            raise ValueError(f"unknown latency_dist {self.latency_dist!r}; "
+                             f"choose from {LATENCY_DISTS}")
         for name in ("drop_rate", "stale_rate"):
             v = getattr(self, name)
             if not 0.0 <= v <= 1.0:
@@ -92,13 +106,24 @@ class FaultPlan:
             raise ValueError(f"byz_clients must be >= 0, got {self.byz_clients}")
         if self.dp_sigma < 0.0:
             raise ValueError(f"dp_sigma must be >= 0, got {self.dp_sigma}")
+        if self.latency_scale < 0.0:
+            raise ValueError(
+                f"latency_scale must be >= 0, got {self.latency_scale}")
+        if self.latency_shape <= 0.0:
+            raise ValueError(
+                f"latency_shape must be > 0, got {self.latency_shape}")
 
     @property
     def active(self) -> bool:
         """False = the plan is a no-op and the builders compile the exact
         fault-free graph (python-gated: no dead fault code in the jit)."""
         return (self.drop_rate > 0.0 or self.stale_rate > 0.0
-                or self.byz_clients > 0 or self.dp_sigma > 0.0)
+                or self.byz_clients > 0 or self.dp_sigma > 0.0
+                or self.latency_scale > 0.0)
+
+    @property
+    def simulates_latency(self) -> bool:
+        return self.latency_scale > 0.0
 
     @property
     def poisons_history(self) -> bool:
@@ -112,10 +137,11 @@ class FaultPlan:
 class FaultRealization(NamedTuple):
     """One round's realized faults for the C cohort clients (all [C])."""
 
-    drop: jax.Array   # bool — uplink never lands
-    stale: jax.Array  # bool — delta re-based on the aged anchor
-    byz: jax.Array    # bool — client is byzantine this round
-    keys: jax.Array   # per-client fault PRNG keys (noise draws)
+    drop: jax.Array     # bool — uplink never lands
+    stale: jax.Array    # bool — delta re-based on the aged anchor
+    byz: jax.Array      # bool — client is byzantine this round
+    keys: jax.Array     # per-client fault PRNG keys (noise draws)
+    latency: jax.Array  # float — simulated compute time (0 when not modeled)
 
 
 def realize(plan: FaultPlan, t: jax.Array, num_clients: int,
@@ -137,11 +163,24 @@ def realize(plan: FaultPlan, t: jax.Array, num_clients: int,
         jax.random.fold_in(round_key, 2), (num_clients,)) < plan.stale_rate
     per_client = jax.vmap(
         lambda i: jax.random.fold_in(jax.random.fold_in(round_key, 3), i))
+    if plan.latency_scale > 0.0:
+        lat_key = jax.random.fold_in(round_key, 4)
+        if plan.latency_dist == "lognormal":
+            lat_k = plan.latency_scale * jnp.exp(
+                plan.latency_shape
+                * jax.random.normal(lat_key, (num_clients,)))
+        else:  # "pareto"
+            u = jax.random.uniform(lat_key, (num_clients,),
+                                   minval=jnp.finfo(jnp.float32).tiny)
+            lat_k = plan.latency_scale * u ** (-1.0 / plan.latency_shape)
+    else:
+        lat_k = jnp.zeros((num_clients,), jnp.float32)
     return FaultRealization(
         drop=drop_k[ids],
         stale=stale_k[ids],
         byz=ids < plan.byz_clients,
         keys=per_client(ids),
+        latency=lat_k[ids],
     )
 
 

@@ -1,0 +1,399 @@
+"""Deadline-gated buffered aggregation (repro/robust/async_agg).
+
+Contracts, matching the subsystem's acceptance criteria:
+
+  1. An inactive AsyncConfig (deadline=0, or async_cfg=None) compiles the
+     BYTE-IDENTICAL synchronous round on both runtimes — the gate is
+     python-gated out of the graph (TestInactiveGate).
+  2. A zero-arrival round (every latency past the deadline, min_arrivals=0)
+     is a bit-exact no-op on the global iterate: every late client's delta
+     lands in the carried buffer instead (TestZeroArrivals).
+  3. min_arrivals extends the effective deadline in-graph: at least that
+     many latencies always beat it (TestPlanAsync).
+  4. The buffer lifecycle: a late client's update is deferred with age 1,
+     ages while it waits, and folds into the first round whose deadline it
+     beats with weight discounted as (1+s)^-alpha (TestBufferLifecycle).
+  5. Discounted weights are finite, non-negative, and renormalize to 1 —
+     or the round contributes nothing at all (the hypothesis property,
+     TestWeightsProperty; degrades to corner examples without hypothesis).
+  6. Mixed latency+dropout gated rounds are bit-deterministic across
+     repeats, and the vmap/sharded runtimes realize bit-identical
+     arrival/staleness schedules (TestDeterminism).
+  7. Stale folds never enter recorded AA residual history as fresh: with
+     guard_history=True the folded/waiting clients' history rows keep their
+     exact bits (TestHistoryGuard).
+  8. The async triple reaches RoundMetrics and the staleness_runaway alarm
+     watches it (TestTelemetry); Newton-family rounds (directions, not
+     deltas) refuse an active gate loudly (TestNewtonRefusal).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degraded single-example mode; see tests/_hypothesis_stub
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.core import AlgoHParams, init_state, make_round_fn, run_federated
+from repro.core.sharded import make_sharded_round_fn
+from repro.data import make_binary_classification, partition
+from repro.launch.mesh import make_host_mesh
+from repro.models.logreg import make_logreg_problem
+from repro.robust import (
+    ASYNC_AGE_KEY,
+    ASYNC_BUF_KEY,
+    AsyncConfig,
+    FaultPlan,
+    discounted_weights,
+    init_async_comm,
+    plan_async,
+)
+
+K = 8
+
+#: heavy-tailed latency plan + a gate that usually lands most clients
+LATENCY_PLAN = FaultPlan(seed=5, latency_scale=1.0, latency_shape=1.5)
+GATE = AsyncConfig(deadline=2.0, min_arrivals=2, staleness_alpha=0.5)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    X, y = make_binary_classification("synthetic_small", n=800, seed=0)
+    clients = partition(X, y, num_clients=K, scheme="iid")
+    prob = make_logreg_problem(clients, gamma=1e-3)
+    return prob, make_host_mesh()
+
+
+@pytest.fixture
+def setup64():
+    """f64 for cross-runtime sweeps: the AA Gram solve amplifies the shard
+    boundary ulp past f32's rtol headroom (see tests/test_robust.py)."""
+    was = jax.config.read("jax_enable_x64")
+    jax.config.update("jax_enable_x64", True)
+    try:
+        X, y = make_binary_classification("synthetic_small", n=800, seed=0)
+        clients = partition(X, y, num_clients=K, scheme="iid")
+        prob = make_logreg_problem(clients, gamma=1e-3, dtype=jnp.float64)
+        yield prob, make_host_mesh()
+    finally:
+        jax.config.update("jax_enable_x64", was)
+
+
+def _init(prob, hp, algo="fedosaa_svrg", async_cfg=None):
+    state = init_state(prob, jax.random.PRNGKey(0), hp, None, algo)
+    if async_cfg is not None and async_cfg.active:
+        state = state._replace(comm=init_async_comm(
+            state.comm, state.params, prob.clients.num_clients))
+    return state
+
+
+def _leaves_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+class TestConfig:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            AsyncConfig(deadline=-1.0)
+        with pytest.raises(ValueError):
+            AsyncConfig(deadline=1.0, min_arrivals=-1)
+        with pytest.raises(ValueError):
+            AsyncConfig(deadline=1.0, staleness_alpha=-0.5)
+
+    def test_active(self):
+        assert not AsyncConfig().active
+        assert AsyncConfig(deadline=0.5).active
+
+
+class TestInactiveGate:
+    """async_cfg=None and AsyncConfig(deadline=0) compile the same round."""
+
+    @pytest.mark.parametrize("runtime", ["vmap", "sharded"])
+    def test_bit_identical(self, setup, runtime):
+        prob, mesh = setup
+        hp = AlgoHParams(eta=0.5, local_epochs=3)
+        if runtime == "sharded":
+            f0 = make_sharded_round_fn("fedosaa_svrg", prob, hp, mesh)
+            f1 = make_sharded_round_fn("fedosaa_svrg", prob, hp, mesh,
+                                       async_cfg=AsyncConfig())
+        else:
+            f0 = make_round_fn("fedosaa_svrg", prob, hp)
+            f1 = make_round_fn("fedosaa_svrg", prob, hp,
+                               async_cfg=AsyncConfig())
+        state = _init(prob, hp)
+        s0, m0 = jax.jit(f0)(state)
+        s1, m1 = jax.jit(f1)(state)
+        for field in s0._fields:
+            assert _leaves_equal(getattr(s0, field), getattr(s1, field)), field
+        np.testing.assert_array_equal(np.asarray(m0.loss), np.asarray(m1.loss))
+        # inactive gate reports the null async triple
+        assert not np.isfinite(float(m1.staleness_mean))
+        assert not np.isfinite(float(m1.staleness_max))
+
+
+class TestPlanAsync:
+    def test_min_arrivals_extends_deadline(self):
+        lat = jnp.asarray([5.0, 3.0, 9.0, 1.0])
+        age = jnp.zeros(4, jnp.int32)
+        pw = jnp.full((4,), 0.25)
+        cfg = AsyncConfig(deadline=0.5, min_arrivals=2)
+        ar = plan_async(cfg, lat, age, pw)
+        assert float(ar.deadline) == 3.0  # 2nd order statistic
+        assert int(jnp.sum(ar.fresh)) == 2
+        np.testing.assert_allclose(float(jnp.sum(ar.fresh_weights)), 1.0,
+                                   rtol=1e-6)
+
+    def test_drop_blocks_landing_but_not_deferral(self):
+        """A dropped on-time client contributes nothing this round, yet a
+        dropped LATE client still buffers client-side (the dropout models
+        the uplink, not the client's compute)."""
+        lat = jnp.asarray([0.1, 0.1, 9.0, 9.0])
+        age = jnp.zeros(4, jnp.int32)
+        pw = jnp.full((4,), 0.25)
+        drop = jnp.asarray([True, False, True, False])
+        ar = plan_async(AsyncConfig(deadline=1.0), lat, age, pw, drop=drop)
+        np.testing.assert_array_equal(np.asarray(ar.fresh),
+                                      [False, True, False, False])
+        np.testing.assert_array_equal(np.asarray(ar.defer),
+                                      [False, False, True, True])
+
+    def test_fold_staleness_discount(self):
+        lat = jnp.asarray([0.1, 0.1])
+        age = jnp.asarray([0, 3], jnp.int32)
+        pw = jnp.full((2,), 0.5)
+        ar = plan_async(AsyncConfig(deadline=1.0, staleness_alpha=1.0),
+                        lat, age, pw)
+        # fresh weight 0.5, fold weight 0.5*(1+3)^-1 — renormalized
+        w = np.asarray(ar.weights)
+        np.testing.assert_allclose(w[1] / w[0], 0.25, rtol=1e-6)
+        np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(ar.staleness), [0.0, 3.0])
+
+
+class TestZeroArrivals:
+    def test_noop_round_buffers_everyone(self, setup):
+        """Every client late: w^{t+1} == w^t bit-exactly, every delta lands
+        in the carried buffer with age 1."""
+        prob, _ = setup
+        hp = AlgoHParams(eta=0.5, local_epochs=3)
+        # latencies ~ 5*lognormal(0.01): all ≈ 5, deadline far below
+        plan = FaultPlan(seed=1, latency_scale=5.0, latency_shape=0.01)
+        cfg = AsyncConfig(deadline=0.5)
+        state = _init(prob, hp, async_cfg=cfg)
+        rf = jax.jit(make_round_fn("fedosaa_svrg", prob, hp, faults=plan,
+                                   async_cfg=cfg))
+        s, m = rf(state)
+        assert _leaves_equal(state.params, s.params)
+        assert float(m.arrivals) == 0.0
+        assert not np.isfinite(float(m.staleness_mean))  # nothing landed
+        ages = np.asarray(s.comm[ASYNC_AGE_KEY])
+        np.testing.assert_array_equal(ages, np.ones(K, np.int32))
+        buf_norm = sum(float(jnp.sum(jnp.abs(l)))
+                       for l in jax.tree.leaves(s.comm[ASYNC_BUF_KEY]))
+        assert buf_norm > 0.0  # the computed deltas were kept, not lost
+
+
+class TestBufferLifecycle:
+    def test_defer_then_fold(self, setup):
+        """Round 0 buffers every client (tight deadline); round 1's loose
+        deadline folds them back discounted: ages return to 0 and the
+        iterate moves."""
+        prob, _ = setup
+        hp = AlgoHParams(eta=0.5, local_epochs=3)
+        plan = FaultPlan(seed=1, latency_scale=5.0, latency_shape=0.01)
+        tight = AsyncConfig(deadline=0.5)
+        loose = AsyncConfig(deadline=50.0)
+        state = _init(prob, hp, async_cfg=tight)
+        rf_tight = jax.jit(make_round_fn("fedosaa_svrg", prob, hp,
+                                         faults=plan, async_cfg=tight))
+        rf_loose = jax.jit(make_round_fn("fedosaa_svrg", prob, hp,
+                                         faults=plan, async_cfg=loose))
+        s1, _ = rf_tight(state)
+        s2, m2 = rf_loose(s1)
+        assert not _leaves_equal(s1.params, s2.params)
+        assert float(m2.arrivals) == float(K)
+        assert float(m2.staleness_max) == 1.0
+        np.testing.assert_array_equal(np.asarray(s2.comm[ASYNC_AGE_KEY]),
+                                      np.zeros(K, np.int32))
+
+    def test_retained_buffer_ages(self, setup):
+        prob, _ = setup
+        hp = AlgoHParams(eta=0.5, local_epochs=3)
+        plan = FaultPlan(seed=1, latency_scale=5.0, latency_shape=0.01)
+        cfg = AsyncConfig(deadline=0.5)
+        state = _init(prob, hp, async_cfg=cfg)
+        rf = jax.jit(make_round_fn("fedosaa_svrg", prob, hp, faults=plan,
+                                   async_cfg=cfg))
+        s, _ = rf(state)
+        buf1 = s.comm[ASYNC_BUF_KEY]
+        s, _ = rf(s)
+        np.testing.assert_array_equal(np.asarray(s.comm[ASYNC_AGE_KEY]),
+                                      np.full(K, 2, np.int32))
+        # a waiting client's buffered delta keeps its exact bits
+        assert _leaves_equal(buf1, s.comm[ASYNC_BUF_KEY])
+
+
+class TestWeightsProperty:
+    """For ANY arrival mask and staleness vector — all-late, all-on-time,
+    and everything between — the discounted weights are finite,
+    non-negative, and renormalize to 1, or the round contributes nothing."""
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           n=st.integers(1, 16),
+           alpha=st.floats(0.0, 4.0, allow_nan=False),
+           mode=st.sampled_from(["random", "none", "all"]))
+    def test_weights_partition_of_unity(self, seed, n, alpha, mode):
+        rng = np.random.default_rng(seed)
+        if mode == "none":
+            contribute = np.zeros(n, bool)
+        elif mode == "all":
+            contribute = np.ones(n, bool)
+        else:
+            contribute = rng.random(n) < rng.random()
+        staleness = rng.integers(0, 1000, n).astype(np.float32)
+        base = rng.random(n).astype(np.float32) + 1e-3
+        base /= base.sum()
+        w = np.asarray(discounted_weights(
+            jnp.asarray(base), jnp.asarray(contribute),
+            jnp.asarray(staleness), alpha))
+        assert np.all(np.isfinite(w))
+        assert np.all(w >= 0.0)
+        assert np.all(w[~contribute] == 0.0)
+        total = float(w.sum())
+        if contribute.any():
+            np.testing.assert_allclose(total, 1.0, rtol=1e-5)
+        else:
+            assert total == 0.0
+
+
+class TestDeterminism:
+    PLAN = FaultPlan(seed=3, drop_rate=0.2,
+                     latency_scale=1.0, latency_shape=1.5)
+
+    def test_repeats_bit_identical(self, setup):
+        prob, _ = setup
+        hp = AlgoHParams(eta=0.5, local_epochs=3)
+        runs = [run_federated(prob, "fedosaa_svrg", hp, 4, faults=self.PLAN,
+                              async_cfg=GATE) for _ in range(2)]
+        np.testing.assert_array_equal(np.asarray(runs[0].loss),
+                                      np.asarray(runs[1].loss))
+        np.testing.assert_array_equal(np.asarray(runs[0].arrivals),
+                                      np.asarray(runs[1].arrivals))
+
+    def test_runtime_schedules_bit_identical(self, setup64):
+        """vmap and sharded realize the same arrivals/staleness schedule
+        (the gate is keyed by (seed, round, global id), never layout)."""
+        prob, mesh = setup64
+        hp = AlgoHParams(eta=0.5, local_epochs=3)
+        fv = jax.jit(make_round_fn("fedosaa_svrg", prob, hp,
+                                   faults=self.PLAN, async_cfg=GATE))
+        fs = jax.jit(make_sharded_round_fn("fedosaa_svrg", prob, hp, mesh,
+                                           faults=self.PLAN, async_cfg=GATE))
+        sv = ss = _init(prob, hp, async_cfg=GATE)
+        for t in range(3):
+            sv, mv = fv(sv)
+            ss, ms = fs(ss)
+            for f in ("arrivals", "staleness_mean", "staleness_max"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(mv, f)), np.asarray(getattr(ms, f)),
+                    err_msg=f"round {t} {f}")
+            np.testing.assert_array_equal(
+                np.asarray(sv.comm[ASYNC_AGE_KEY]),
+                np.asarray(ss.comm[ASYNC_AGE_KEY]), err_msg=f"round {t}")
+            for a, b in zip(jax.tree.leaves(sv.params),
+                            jax.tree.leaves(ss.params)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-6, atol=1e-9,
+                                           err_msg=f"round {t}")
+
+
+class TestHistoryGuard:
+    def _states(self, setup, guard):
+        """Round 1: heavy-tailed latencies against a median deadline — the
+        fast clients land fresh (the iterate moves), the stragglers buffer.
+        Round 2: a loose deadline folds the stragglers back. Returns the
+        pre/post states of round 2 and the straggler mask."""
+        prob, _ = setup
+        hp = AlgoHParams(eta=0.5, local_epochs=3, carry_history=2)
+        cfg = AsyncConfig(deadline=1.0, guard_history=guard)
+        loose = AsyncConfig(deadline=1e6, guard_history=guard)
+        state = _init(prob, hp, async_cfg=cfg)
+        s1, _ = jax.jit(make_round_fn("fedosaa_svrg", prob, hp,
+                                      faults=LATENCY_PLAN,
+                                      async_cfg=cfg))(state)
+        busy = np.asarray(s1.comm[ASYNC_AGE_KEY]) > 0
+        assert busy.any() and (~busy).any()  # the scenario needs both kinds
+        s2, _ = jax.jit(make_round_fn("fedosaa_svrg", prob, hp,
+                                      faults=LATENCY_PLAN,
+                                      async_cfg=loose))(s1)
+        return s1, s2, busy
+
+    @staticmethod
+    def _rows(tree, rows):
+        return [np.asarray(l)[rows] for l in jax.tree.leaves(tree)]
+
+    def test_guard_freezes_fold_rows(self, setup):
+        """A stale fold must not enter recorded AA residual history as
+        fresh: with the guard on, the folded clients' history rows keep
+        their exact pre-round bits while fresh clients' rows advance."""
+        s1, s2, busy = self._states(setup, guard=True)
+        for field in ("hist_s", "hist_y"):
+            for a, b in zip(self._rows(getattr(s1, field), busy),
+                            self._rows(getattr(s2, field), busy)):
+                np.testing.assert_array_equal(a, b, err_msg=field)
+        moved = any(
+            not np.array_equal(a, b)
+            for a, b in zip(self._rows(s1.hist_y, ~busy),
+                            self._rows(s2.hist_y, ~busy)))
+        assert moved
+
+    def test_unguarded_fold_writes_history(self, setup):
+        """guard_history=False is the measured alternative (clip_rtol
+        age-screening): the fold's history write goes through."""
+        s1, s2, busy = self._states(setup, guard=False)
+        moved = any(
+            not np.array_equal(a, b)
+            for a, b in zip(self._rows(s1.hist_y, busy),
+                            self._rows(s2.hist_y, busy)))
+        assert moved
+
+
+class TestTelemetry:
+    def test_staleness_runaway_alarm(self):
+        from repro.obs.alarms import AlarmMonitor
+
+        mon = AlarmMonitor()
+        row = {"kind": "round", "round": 1, "loss": 1.0, "staleness_max": 12.0}
+        mon.emit([row])
+        assert any(e["rule"] == "staleness_runaway" for e in mon.events)
+        # async-off rows carry null — the alarm must never fire on them
+        mon2 = AlarmMonitor()
+        mon2.emit([{"kind": "round", "round": 1, "loss": 1.0,
+                    "staleness_max": None}])
+        assert not any(e["rule"] == "staleness_runaway" for e in mon2.events)
+
+    def test_history_carries_async_columns(self, setup):
+        prob, _ = setup
+        hp = AlgoHParams(eta=0.5, local_epochs=3)
+        plan = FaultPlan(seed=5, latency_scale=1.0, latency_shape=1.5)
+        h = run_federated(prob, "fedosaa_svrg", hp, 4, faults=plan,
+                          async_cfg=GATE, chunk=2)
+        assert h.arrivals is not None and len(h.arrivals) == 4
+        assert np.all(h.arrivals >= 0)
+        assert h.staleness_max is not None
+
+
+class TestNewtonRefusal:
+    def test_newton_family_raises(self, setup):
+        prob, mesh = setup
+        hp = AlgoHParams(eta=1.0, local_epochs=10)
+        with pytest.raises(ValueError, match="delta-form"):
+            make_round_fn("giant", prob, hp,
+                          async_cfg=AsyncConfig(deadline=1.0))
+        with pytest.raises(ValueError, match="delta-form"):
+            make_sharded_round_fn("newton_gmres", prob, hp, mesh,
+                                  async_cfg=AsyncConfig(deadline=1.0))

@@ -403,6 +403,22 @@ class TestDefenseEndToEnd:
         assert np.isfinite(dfd.loss).all()
         assert dfd.loss[-1] < dfd.loss[0]
 
+    def test_int8_codec_sanitizes_undefended_history_poison(self, setup):
+        """Regression pin for the measured ext_robustness curiosity: the
+        SAME byz-history plan that kills the undefended identity-codec run
+        (test above) leaves the undefended int8 run finite — the quantizer's
+        finite code range never reproduces the poisoned client's non-finite
+        delta on the wire, so the aggregate stays finite. The acceptance
+        pair is therefore pinned on the identity codec; if this test fails,
+        the int8 encode path started forwarding non-finite values and the
+        ext_robustness matrix needs re-measuring."""
+        prob, _ = setup
+        plan = FaultPlan(byz_clients=1, byz_mode="history", byz_scale=1e24)
+        hp = AlgoHParams(eta=0.5, local_epochs=5)
+        und_int8 = run_federated(prob, "fedosaa_svrg", hp, 5, rng=0,
+                                 faults=plan, channel="int8")
+        assert np.isfinite(und_int8.loss).all()
+
     def test_clipped_metric_reaches_sinks(self, setup):
         """aa_clipped_max flows AAStats -> RoundMetrics -> sink rows."""
         from repro.obs.sinks import MemorySink
