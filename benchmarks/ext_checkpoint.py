@@ -1,0 +1,204 @@
+"""Beyond-paper: what a preemption-tolerant checkpoint costs per chunk —
+the save-overlap economics of repro/checkpoint (async per-shard saves
+dispatched from the engine's chunk-boundary host sync, policy.py) vs the
+two blocking alternatives.
+
+Three runs of the same compiled FedOSAA-SVRG engine schedule (chunked
+device-resident rounds, core/engine.py), differing only in the checkpoint
+policy at the chunk boundary:
+
+  * ``none``        — no checkpointing: the floor every mode is billed
+                      against;
+  * ``async``       — the tentpole path: the boundary snapshots addressable
+                      shards (host copies of arrays the next chunk is about
+                      to donate) and hands serialization + atomic commit to
+                      a background thread that overlaps the next chunk's
+                      device execution;
+  * ``sync_gather`` — the naive baseline the async path replaces: a full
+                      ``jax.device_get`` of the state plus a blocking
+                      legacy npz save, all inside the boundary.
+
+Per-chunk wall is measured from History.wall_time diffs at chunk
+boundaries; the first chunk (compile) is excluded and the median of the
+rest is the per-mode cost. ``every`` equals the chunk size, so EVERY
+boundary pays its mode's save — the measured overhead is the worst-case
+cadence, real runs save less often.
+
+Acceptance (committed in results/ext_checkpoint.json, validated by
+scripts/check_ext_checkpoint.py, smoke-gated in scripts/ci.sh):
+  * the async mode's median per-chunk overhead over ``none`` is <= 10%
+    (the ISSUE's ceiling for "checkpointing is effectively free");
+  * every mode converges identically (same loss curve — checkpointing
+    must not perturb the math);
+  * each checkpointing run commits the expected number of checkpoints and
+    reports non-zero checkpoint_bytes in its v4 footer.
+
+  PYTHONPATH=src python -m benchmarks.ext_checkpoint           # quick
+  PYTHONPATH=src python -m benchmarks.ext_checkpoint --full
+  PYTHONPATH=src python -m benchmarks.ext_checkpoint --smoke   # CI gate
+"""
+from __future__ import annotations
+
+import shutil
+import sys
+import tempfile
+
+import numpy as np
+
+from repro.checkpoint import CheckpointPolicy, list_checkpoints
+from repro.core import AAConfig, AlgoHParams, run_federated
+from repro.obs import MemorySink
+
+from benchmarks.common import logreg_setup, print_csv, save_results
+
+ALGO = "fedosaa_svrg"
+OVERHEAD_BUDGET = 0.10   # async per-chunk overhead vs no-checkpoint floor
+
+# carried history + int8 channel: the state a checkpoint actually has to
+# serialize is every buffer class, not just params. local_epochs=10 keeps
+# the chunk wall representative — on this 1-core container the save's CPU
+# cannot truly overlap device compute, so the per-save cost is a constant
+# that only amortizes against a realistically sized chunk (production
+# chunks are seconds; a 35ms chunk would overstate the relative overhead).
+HP = dict(eta=1.0, local_epochs=10, carry_history=2,
+          aa=AAConfig(tikhonov=1e-6, damping=0.7))
+
+
+def _chunk_walls(wall_time, chunk: int) -> list[float]:
+    """Per-chunk walls from the cumulative per-round timer, compile chunk
+    excluded."""
+    w = np.asarray(wall_time, dtype=float)
+    bounds = w[chunk - 1::chunk]
+    walls = np.diff(np.concatenate([[0.0], bounds]))
+    return [float(v) for v in walls[1:]]  # drop chunk 0 (compile)
+
+
+def _run_mode(prob, wstar, hp, rounds: int, chunk: int, mode: str | None,
+              tag: str) -> dict:
+    sink = MemorySink()
+    ckpt_dir = None
+    policy = None
+    if mode is not None:
+        ckpt_dir = tempfile.mkdtemp(prefix=f"ext_ckpt_{mode}_")
+        policy = CheckpointPolicy(directory=ckpt_dir, every=chunk, keep=0,
+                                  mode=mode)
+    try:
+        h = run_federated(prob, ALGO, hp, rounds, w_star=wstar,
+                          channel="int8", chunk=chunk, sinks=[sink],
+                          checkpoint=policy)
+        walls = _chunk_walls(h.wall_time, chunk)
+        n_ckpts = (len(list_checkpoints(ckpt_dir)) if mode == "async"
+                   or mode == "sync" else None)
+        return {
+            "name": tag,
+            "us_per_call": 1e6 * float(np.median(walls)) / chunk,
+            "derived": float(h.rel_error[-1]),
+            "mode": mode or "none",
+            "rounds": int(len(h.rounds)),
+            "chunk": chunk,
+            "chunk_wall_median_s": float(np.median(walls)),
+            "chunk_wall_p90_s": float(np.quantile(walls, 0.9)),
+            "chunk_walls_s": walls,
+            "final_loss": float(h.loss[-1]),
+            "loss_curve": [float(v) for v in h.loss],
+            "checkpoints_committed": n_ckpts,
+            "checkpoint_save_ms": sink.footer["checkpoint_save_ms"],
+            "checkpoint_bytes": sink.footer["checkpoint_bytes"],
+            "checkpoint_failures": sink.footer["checkpoint_failures"],
+        }
+    finally:
+        if ckpt_dir is not None:
+            shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+def _summary(rows: list[dict]) -> dict:
+    by = {r["mode"]: r for r in rows}
+    floor = by["none"]["chunk_wall_median_s"]
+
+    def overhead(mode: str) -> float:
+        return (by[mode]["chunk_wall_median_s"] - floor) / floor
+
+    same_math = all(
+        len(r["loss_curve"]) == len(by["none"]["loss_curve"])
+        and bool(np.all(np.asarray(r["loss_curve"])
+                        == np.asarray(by["none"]["loss_curve"])))
+        for r in rows)
+    return {
+        "name": "ext_checkpoint/summary",
+        "us_per_call": 0.0,
+        "derived": overhead("async"),
+        # acceptance: <= OVERHEAD_BUDGET / True / True
+        "async_overhead": overhead("async"),
+        "sync_gather_overhead": overhead("sync_gather"),
+        "loss_curves_identical_across_modes": same_math,
+        "async_saves_committed": by["async"]["checkpoints_committed"],
+        "async_checkpoint_bytes": by["async"]["checkpoint_bytes"],
+        "none_chunk_wall_s": floor,
+        "async_chunk_wall_s": by["async"]["chunk_wall_median_s"],
+        "sync_gather_chunk_wall_s": by["sync_gather"]["chunk_wall_median_s"],
+        "overhead_budget": OVERHEAD_BUDGET,
+    }
+
+
+def run(quick: bool = True) -> list[dict]:
+    n, k = (20_000, 32) if quick else (58_100, 100)
+    rounds, chunk = (42, 6) if quick else (48, 6)
+    prob, wstar = logreg_setup("covtype", n=n, k=k)
+    hp = AlgoHParams(**HP)
+
+    def best_of(mode, tag, reps=2):
+        # best-of-N medians: the shared 1-core container injects tens-of-ms
+        # noise spikes per run; the floor is the honest per-mode cost
+        runs = [_run_mode(prob, wstar, hp, rounds, chunk, mode, tag)
+                for _ in range(reps)]
+        return min(runs, key=lambda r: r["chunk_wall_median_s"])
+
+    rows = [
+        best_of(None, "ext_checkpoint/none"),
+        best_of("async", "ext_checkpoint/async"),
+        best_of("sync_gather", "ext_checkpoint/sync_gather"),
+    ]
+    rows.append(_summary(rows))
+    save_results("ext_checkpoint", rows)
+    return rows
+
+
+def smoke() -> int:
+    """Tiny CI gate (seconds): all three modes run the same math, the
+    checkpointing modes commit saves with clean footers. Writes nothing —
+    the committed results/ext_checkpoint.json is validated by
+    scripts/check_ext_checkpoint.py."""
+    prob, wstar = logreg_setup("covtype", n=2_000, k=8)
+    hp = AlgoHParams(**HP)
+    rows = [
+        _run_mode(prob, wstar, hp, 8, 4, None, "smoke/none"),
+        _run_mode(prob, wstar, hp, 8, 4, "async", "smoke/async"),
+        _run_mode(prob, wstar, hp, 8, 4, "sync_gather",
+                  "smoke/sync_gather"),
+    ]
+    print_csv(rows)
+    failures = []
+    base = rows[0]["loss_curve"]
+    for r in rows:
+        if not np.isfinite(r["final_loss"]):
+            failures.append(f"{r['name']}: non-finite final loss")
+        if not np.all(np.asarray(r["loss_curve"]) == np.asarray(base)):
+            failures.append(f"{r['name']}: checkpointing perturbed the math")
+        if r["checkpoint_failures"]:
+            failures.append(f"{r['name']}: {r['checkpoint_failures']} "
+                            "checkpoint failures")
+    if rows[1]["checkpoints_committed"] != 2:
+        failures.append("async mode did not commit one save per chunk "
+                        f"(got {rows[1]['checkpoints_committed']})")
+    if rows[1]["checkpoint_bytes"] <= 0:
+        failures.append("async footer reports zero checkpoint_bytes")
+    for f in failures:
+        print(f"SMOKE FAIL: {f}")
+    print("ext_checkpoint smoke:", "FAIL" if failures else "OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        raise SystemExit(smoke())
+    print_csv(run(quick="--full" not in sys.argv))

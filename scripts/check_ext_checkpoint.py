@@ -1,0 +1,87 @@
+"""Validate the committed checkpoint save-overlap artifact
+(benchmarks/results/ext_checkpoint.json).
+
+Shared by scripts/ci.sh and .github/workflows/ci.yml so the gate cannot
+drift between the two.
+
+  python scripts/check_ext_checkpoint.py [path]
+
+Checks structure (the none/async/sync_gather rows plus the summary) and
+the PR's acceptance invariants:
+
+  * the async checkpoint mode's median per-chunk overhead over the
+    no-checkpoint floor is <= the committed budget (10% — "checkpointing
+    is effectively free at chunk cadence"),
+  * every mode ran the bit-identical math (checkpointing must never
+    perturb the training trajectory),
+  * the checkpointing runs committed saves, accounted non-zero bytes, and
+    recorded zero checkpoint failures in their v4 footers.
+
+Failures raise (never bare `assert`, which python -O strips — this script
+is a CI gate).
+"""
+import json
+import math
+import sys
+
+args = [a for a in sys.argv[1:] if not a.startswith("--")]
+path = args[0] if args else "benchmarks/results/ext_checkpoint.json"
+
+
+def fail(msg: str):
+    raise SystemExit(f"check_ext_checkpoint: {path}: {msg}")
+
+
+with open(path) as f:
+    rows = json.load(f)
+by = {r["name"]: r for r in rows}
+
+expected = {
+    "ext_checkpoint/none",
+    "ext_checkpoint/async",
+    "ext_checkpoint/sync_gather",
+    "ext_checkpoint/summary",
+}
+got = {r["name"] for r in rows}
+if got != expected:
+    fail(f"not the full row set: missing {sorted(expected - got)}, "
+         f"unexpected {sorted(got - expected)}")
+
+for r in rows:
+    if r["name"].endswith("summary"):
+        continue
+    if r.get("rounds", 0) < 1:
+        fail(f"{r['name']}: no rounds executed")
+    if not math.isfinite(r["final_loss"]):
+        fail(f"{r['name']}: final loss is non-finite")
+    if r.get("chunk_wall_median_s", 0) <= 0:
+        fail(f"{r['name']}: no per-chunk wall recorded")
+    if r.get("checkpoint_failures", 0) != 0:
+        fail(f"{r['name']}: {r['checkpoint_failures']} checkpoint "
+             "failures during the benchmark")
+    if r["name"] != "ext_checkpoint/none":
+        if r.get("checkpoint_bytes", 0) <= 0:
+            fail(f"{r['name']}: footer accounted zero checkpoint bytes")
+        if r.get("checkpoint_save_ms", 0) <= 0:
+            fail(f"{r['name']}: footer accounted zero save time")
+
+if by["ext_checkpoint/async"].get("checkpoints_committed", 0) < 1:
+    fail("async mode committed no checkpoints")
+
+s = by["ext_checkpoint/summary"]
+budget = s.get("overhead_budget", 0.10)
+overhead = s.get("async_overhead")
+if overhead is None or not overhead <= budget:
+    fail(f"async per-chunk overhead {overhead} exceeds the {budget:.0%} "
+         "budget over the no-checkpoint floor")
+if not s.get("loss_curves_identical_across_modes"):
+    fail("checkpointing modes did not produce bit-identical loss curves — "
+         "a save perturbed the math")
+if s.get("async_checkpoint_bytes", 0) <= 0:
+    fail("summary accounted zero async checkpoint bytes")
+
+print(f"ci: {path} well-formed (async overhead {overhead:+.1%} of "
+      f"{1e3 * s['none_chunk_wall_s']:.0f}ms chunks, budget {budget:.0%}; "
+      f"sync_gather {s['sync_gather_overhead']:+.1%}; "
+      f"{by['ext_checkpoint/async']['checkpoints_committed']} saves, "
+      f"{s['async_checkpoint_bytes']} bytes)")

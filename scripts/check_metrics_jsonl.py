@@ -18,7 +18,12 @@ Checks the versioned row contract the sink promises:
     internally consistent: arrivals is null exactly when the deadline gate
     is off (the whole run — the gate is a compile-time config, not a
     per-round toggle), a present arrivals is a non-negative count, and
-    staleness_mean never exceeds staleness_max when both landed.
+    staleness_mean never exceeds staleness_max when both landed;
+  * the v4 footer checkpoint triple (checkpoint_save_ms / checkpoint_bytes /
+    checkpoint_failures) is present and sane: all three numeric and
+    non-negative (zeros when checkpointing was off), failures an integer,
+    and every checkpoint_failed alarm in the footer is reflected by a
+    non-zero failure count.
 
 Exit 0 and a one-line summary on success; exit 1 with the first violation
 otherwise.
@@ -113,6 +118,24 @@ def check_file(path: str) -> dict:
     if footer.get("rounds") != len(body):
         fail(len(lines), f"footer rounds={footer.get('rounds')} but file "
              f"has {len(body)} round rows")
+    # v4 footer checkpoint triple
+    for field in ("checkpoint_save_ms", "checkpoint_bytes",
+                  "checkpoint_failures"):
+        v = footer.get(field)
+        if not isinstance(v, (int, float)) or isinstance(v, bool):
+            fail(len(lines), f"footer {field}={v!r}, expected a number "
+                 "(zeros when checkpointing is off)")
+        if v < 0:
+            fail(len(lines), f"footer {field}={v} is negative")
+    if footer["checkpoint_failures"] != int(footer["checkpoint_failures"]):
+        fail(len(lines), "footer checkpoint_failures="
+             f"{footer['checkpoint_failures']} is not an integer count")
+    n_failed_alarms = sum(
+        1 for a in footer.get("alarms", [])
+        if a.get("rule") == "checkpoint_failed")
+    if n_failed_alarms and footer["checkpoint_failures"] < 1:
+        fail(len(lines), f"{n_failed_alarms} checkpoint_failed alarm(s) in "
+             "the footer but checkpoint_failures == 0")
     return {"rounds": len(body), "algo": header.get("algo"),
             "stopped": footer.get("stopped"),
             "alarms": len(footer.get("alarms", []))}

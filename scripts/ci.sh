@@ -90,3 +90,21 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.fl_train \
     --metrics-out benchmarks/results/metrics_smoke.jsonl
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/check_metrics_jsonl.py \
     benchmarks/results/metrics_smoke.jsonl
+
+# Checkpoint save-overlap smoke (repro/checkpoint): all three boundary
+# policies (none / async per-shard / sync_gather baseline) run the
+# bit-identical math and the checkpointing modes commit clean saves with
+# v4 footers. The checker then validates the COMMITTED save-overlap
+# artifact's acceptance invariant (async per-chunk overhead <= 10% of the
+# no-checkpoint floor; smoke writes nothing — the committed artifact is
+# regenerated only by `python -m benchmarks.ext_checkpoint`).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.ext_checkpoint --smoke
+python scripts/check_ext_checkpoint.py benchmarks/results/ext_checkpoint.json
+
+# Kill-resume smoke (the preemption story end-to-end): a real fl_train
+# subprocess is hard-killed MID-SAVE by the crash-injection fs (exit 43),
+# leaving a committed checkpoint plus a torn staging remnant; `--resume
+# auto` must skip the remnant, restore the newest complete checkpoint, and
+# finish the run — both segments' JSONL rows unioning to one contiguous
+# history (segment 2 passes the full v4 contract). Scratch artifacts only.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/kill_resume_smoke.py

@@ -1,0 +1,130 @@
+"""Kill-resume smoke: a real fl_train process hard-killed MID-SAVE (the
+crash-injection fs, repro/robust/fs_faults) must leave a directory that
+``--resume auto`` turns back into one contiguous run.
+
+Shared by scripts/ci.sh and .github/workflows/ci.yml. The scenario:
+
+  1. segment 1: fl_train with checkpointing every 2 rounds and
+     ``--inject-kill-save 2`` — the process os._exit()s with code 43 in
+     the middle of its SECOND save (round 4), after the round-2 save
+     committed. The checkpoint dir must hold the committed round-2
+     checkpoint AND the torn ``.tmp-*`` staging remnant of the fatal save;
+     the metrics JSONL must hold a header and contiguous round rows but NO
+     footer (the process died mid-run).
+  2. segment 2: the same command with ``--resume auto`` — discovery skips
+     the torn remnant, restores round 2, and finishes rounds 2..7. Its
+     JSONL must pass the FULL v4 contract (scripts/check_metrics_jsonl.py,
+     imported — same validator CI runs elsewhere) with start_round=2.
+  3. the two segments' round rows must union to one contiguous 0..7 run.
+
+Scratch artifacts only (a temp dir); writes nothing into the repo.
+
+  PYTHONPATH=src python scripts/kill_resume_smoke.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+sys.path.insert(0, os.path.dirname(__file__))
+
+from check_metrics_jsonl import check_file  # noqa: E402
+
+from repro.robust.fs_faults import KILL_EXIT_CODE  # noqa: E402
+
+ROUNDS = 8
+
+
+def fail(msg: str):
+    raise SystemExit(f"kill_resume_smoke: {msg}")
+
+
+def fl_train(ckpt_dir: str, metrics: str, *extra: str) -> int:
+    cmd = [
+        sys.executable, "-m", "repro.launch.fl_train",
+        "--arch", "smollm-135m", "--reduced", "--algo", "fedosaa_svrg",
+        "--rounds", str(ROUNDS), "--clients", "4", "--round-chunk", "2",
+        "--checkpoint-dir", ckpt_dir, "--checkpoint-every", "2",
+        "--metrics-out", metrics, *extra,
+    ]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.run(cmd, env=env).returncode
+
+
+def check_headless_segment(path: str) -> list[int]:
+    """Segment 1 died mid-run: header + contiguous finite rows, no footer."""
+    with open(path) as f:
+        rows = [json.loads(line) for line in f.read().splitlines()]
+    if not rows or rows[0].get("kind") != "header":
+        fail(f"{path}: first row is not a header")
+    start = int(rows[0].get("start_round", 0))
+    if any(r.get("kind") == "footer" for r in rows):
+        fail(f"{path}: a killed run must not have written a footer")
+    seen = []
+    for i, r in enumerate(rows[1:]):
+        if r.get("kind") != "round":
+            fail(f"{path}: row {i + 2} kind={r.get('kind')!r}")
+        if r["round"] != start + i:
+            fail(f"{path}: round {r['round']} breaks contiguity at "
+                 f"row {i + 2}")
+        if r.get("loss") is None:
+            fail(f"{path}: round {r['round']} has null loss")
+        seen.append(r["round"])
+    if not seen:
+        fail(f"{path}: the killed run streamed no round rows")
+    return seen
+
+
+def main() -> None:
+    work = tempfile.mkdtemp(prefix="kill_resume_")
+    ckpt = os.path.join(work, "ckpt")
+    seg1 = os.path.join(work, "seg1.jsonl")
+    seg2 = os.path.join(work, "seg2.jsonl")
+    try:
+        # --- segment 1: die during save #2 -------------------------------
+        rc = fl_train(ckpt, seg1, "--inject-kill-save", "2")
+        if rc != KILL_EXIT_CODE:
+            fail(f"segment 1 exited {rc}, expected the injected kill "
+                 f"({KILL_EXIT_CODE})")
+        names = os.listdir(ckpt)
+        committed = sorted(n for n in names if n.startswith("ckpt_"))
+        torn = [n for n in names if n.startswith(".tmp-")]
+        if committed != ["ckpt_00000002"]:
+            fail(f"expected exactly the committed round-2 checkpoint, "
+                 f"found {committed}")
+        if not torn:
+            fail("the mid-save kill left no torn .tmp-* staging remnant")
+        rounds1 = check_headless_segment(seg1)
+
+        # --- segment 2: resume auto over the torn directory --------------
+        rc = fl_train(ckpt, seg2, "--resume", "auto")
+        if rc != 0:
+            fail(f"resume run exited {rc}")
+        info = check_file(seg2)  # the full v4 JSONL contract
+        with open(seg2) as f:
+            header = json.loads(f.readline())
+        if header.get("start_round") != 2:
+            fail(f"resume started at round {header.get('start_round')}, "
+                 "expected 2 (the newest COMPLETE checkpoint)")
+        rounds2 = list(range(2, 2 + info["rounds"]))
+
+        # --- the union must be one contiguous run ------------------------
+        union = sorted(set(rounds1) | set(rounds2))
+        if union != list(range(ROUNDS)):
+            fail(f"segments union to {union}, expected 0..{ROUNDS - 1}")
+        print(f"kill_resume_smoke: OK — killed at save #2 (exit "
+              f"{KILL_EXIT_CODE}) with rows {rounds1}, resumed from round 2 "
+              f"over the torn remnant, rows {rounds2} complete the run")
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,1 +1,15 @@
-from repro.checkpoint.checkpoint import latest_step, restore_checkpoint, save_checkpoint  # noqa: F401
+from repro.checkpoint.atomic import (  # noqa: F401
+    LOCAL_FS, LocalFs, commit_dir, sha256_hex, with_retries,
+    write_bytes_atomic,
+)
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    latest_step, restore_checkpoint, save_checkpoint,
+)
+from repro.checkpoint.policy import (  # noqa: F401
+    CheckpointManager, CheckpointPolicy,
+)
+from repro.checkpoint.sharded_ckpt import (  # noqa: F401
+    CheckpointConfigMismatch, ckpt_name, inventory_of, list_checkpoints,
+    load_checkpoint, load_latest, prune_checkpoints, snapshot_shards,
+    verify_checkpoint, write_checkpoint,
+)

@@ -3,15 +3,25 @@
 Flattens the pytree with '/'-joined key paths; restores into an identical
 structure. Sharded arrays are fetched to host (per-process save) and restored
 with ``jax.device_put`` against provided shardings when given.
+
+Saves are ATOMIC: both the ``.npz`` and its ``.meta.json`` go through the
+write-temp-then-rename helper (checkpoint/atomic.py), so an interrupted or
+concurrent save never leaves a torn file under the final name — a reader
+sees the previous complete checkpoint or the new one, nothing in between.
+For the preemption-tolerant sharded directory format (per-shard saves,
+manifest commit marker, crash recovery) see checkpoint/sharded_ckpt.py.
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 from typing import Any
 
 import jax
 import numpy as np
+
+from repro.checkpoint.atomic import LOCAL_FS, LocalFs, write_bytes_atomic
 
 Pytree = Any
 
@@ -32,13 +42,15 @@ def _flatten(tree: Pytree) -> dict[str, np.ndarray]:
 
 
 def save_checkpoint(path: str, params: Pytree, step: int = 0,
-                    extra: dict | None = None) -> None:
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+                    extra: dict | None = None, fs: LocalFs = LOCAL_FS) -> None:
     flat = _flatten(params)
-    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    buf = io.BytesIO()
+    np.savez(buf, **flat)
+    npz_path = path if path.endswith(".npz") else path + ".npz"
+    write_bytes_atomic(npz_path, buf.getvalue(), fs=fs)
     meta = {"step": step, "keys": sorted(flat), **(extra or {})}
-    with open((path[:-4] if path.endswith(".npz") else path) + ".meta.json", "w") as f:
-        json.dump(meta, f)
+    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".meta.json"
+    write_bytes_atomic(meta_path, json.dumps(meta).encode(), fs=fs)
 
 
 def restore_checkpoint(path: str, like: Pytree, shardings: Pytree | None = None) -> Pytree:

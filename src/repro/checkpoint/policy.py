@@ -1,0 +1,250 @@
+"""Async checkpoint policy: chunk-boundary snapshots, background commits,
+one-in-flight backpressure, graceful failure.
+
+``CheckpointPolicy`` is the declarative knob set (directory / every / keep /
+mode); ``CheckpointManager`` is the engine-side driver:
+
+  * ``maybe_save(state, round_idx, chunk_wall)`` runs at the engine's
+    existing chunk-boundary host sync. When a save is due it snapshots the
+    state's addressable shards to host numpy (a COPY — the engine donates
+    the device buffers to the next chunk) and dispatches serialization +
+    checksums + atomic commit + GC to ONE background thread, so the write
+    overlaps the next chunk's compute. The snapshot itself adds no
+    ``jax.device_get``: the chunk results are already host-synced, and the
+    per-shard copies go through the arrays' own host buffers
+    (core/sharded.leaf_addressable_shards) — pinned by the same
+    device_get-counting idiom as the sinks.
+  * **backpressure, wait-and-warn**: at most one save is in flight. If the
+    next save comes due while the previous one is still writing, the
+    manager WAITS for it (state consistency beats save frequency) and
+    records a ``checkpoint_stalled`` event — the save exceeded the chunk
+    wall time, i.e. the chunk compute no longer hides the write. The event
+    rides the run footer's alarm list like any obs/alarms event.
+  * **graceful failure**: a save that exhausts its I/O retries (ENOSPC, a
+    dying disk) is counted and alarmed (``checkpoint_failed``), its staging
+    remnant is swept, and the run continues — the next due save starts
+    clean. A :class:`repro.robust.fs_faults.SimulatedKill` is NOT handled:
+    the manager marks itself dead and stops writing, modeling the process
+    death it simulates.
+  * ``mode="sync_gather"`` is the deliberately-bad baseline the benchmark
+    compares against: a blocking full ``jax.device_get`` of the state
+    through this one process and an inline legacy npz save — the stall the
+    async path exists to remove (benchmarks/ext_checkpoint.py).
+
+Telemetry: ``telemetry()`` returns the SCHEMA_VERSION-4 footer fields
+(checkpoint_save_ms / checkpoint_bytes / checkpoint_failures); ``events``
+holds the structured alarm records.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import os
+import threading
+import time
+from typing import Any
+
+from repro.checkpoint.atomic import LOCAL_FS, LocalFs
+from repro.checkpoint.sharded_ckpt import (
+    prune_checkpoints, snapshot_shards, write_checkpoint,
+)
+
+Pytree = Any
+
+logger = logging.getLogger("repro.checkpoint")
+
+MODES = ("async", "sync", "sync_gather")
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """When and where to checkpoint.
+
+    every — save at the first chunk boundary at/after each multiple of
+    ``every`` rounds (the engine only has host control at chunk boundaries;
+    with ``every`` a multiple of the chunk size the boundary is exact).
+    keep — retention: committed checkpoints beyond the newest ``keep`` are
+    GC'd after each successful commit (0 = keep everything).
+    """
+
+    directory: str
+    every: int = 10
+    keep: int = 3
+    mode: str = "async"
+    retries: int = 3
+    backoff_s: float = 0.05
+
+    def __post_init__(self):
+        if self.every < 1:
+            raise ValueError(f"every must be >= 1, got {self.every}")
+        if self.keep < 0:
+            raise ValueError(f"keep must be >= 0, got {self.keep}")
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode}")
+
+
+class CheckpointManager:
+    """Drives a CheckpointPolicy from the engine's chunk loop. Not
+    thread-safe beyond its own single worker: one manager per run."""
+
+    def __init__(self, policy: CheckpointPolicy, *,
+                 config: dict | None = None, fs: LocalFs = LOCAL_FS,
+                 last_saved: int = 0):
+        self.policy = policy
+        self.config = config or {}
+        self.fs = fs
+        self.events: "list[dict]" = []
+        self.dead = False          # a (simulated) kill landed mid-save
+        self._worker: threading.Thread | None = None
+        # round of the last DISPATCHED save; a resumed run seeds this with
+        # its resume round so the cadence stays aligned across preemptions
+        self._last_saved = last_saved
+        self._save_ms_total = 0.0
+        self._bytes_total = 0
+        self._failures = 0
+        self._saves = 0
+        self._lock = threading.Lock()
+
+    # -- engine hooks -----------------------------------------------------
+    def maybe_save(self, state: Pytree, round_idx: int,
+                   chunk_wall: float | None = None) -> bool:
+        """Call at every chunk boundary with the state AFTER ``round_idx``
+        global rounds. Returns True when a save was dispatched."""
+        if self.dead:
+            return False
+        if round_idx - self._last_saved < self.policy.every:
+            return False
+        self._wait_for_inflight(round_idx, chunk_wall)
+        if self.dead:
+            return False
+        self._last_saved = round_idx
+        t0 = time.perf_counter()
+        if getattr(self.fs, "on_save_start", None) is not None:
+            self.fs.on_save_start()   # crash-injection save counter
+        if self.policy.mode == "sync_gather":
+            self._sync_gather_save(state, round_idx, t0)
+            return True
+        snapshot = snapshot_shards(state)
+        snap_ms = 1e3 * (time.perf_counter() - t0)
+        if self.policy.mode == "sync":
+            self._write(snapshot, round_idx, t0, snap_ms)
+            return True
+        self._worker = threading.Thread(
+            target=self._write, args=(snapshot, round_idx, t0, snap_ms),
+            name=f"ckpt-save-{round_idx}", daemon=True)
+        self._worker.start()
+        return True
+
+    def finalize(self) -> None:
+        """Join any in-flight save (end of run / driver finally-block)."""
+        w = self._worker
+        if w is not None and w.is_alive():
+            w.join()
+        self._worker = None
+
+    def telemetry(self) -> dict:
+        """The v4 footer fields."""
+        with self._lock:
+            return {
+                "checkpoint_save_ms": round(self._save_ms_total, 3),
+                "checkpoint_bytes": int(self._bytes_total),
+                "checkpoint_failures": int(self._failures),
+            }
+
+    @property
+    def saves_completed(self) -> int:
+        with self._lock:
+            return self._saves
+
+    # -- internals --------------------------------------------------------
+    def _wait_for_inflight(self, round_idx: int, chunk_wall: float | None):
+        w = self._worker
+        if w is None or not w.is_alive():
+            return
+        t0 = time.perf_counter()
+        w.join()
+        waited_ms = 1e3 * (time.perf_counter() - t0)
+        event = {
+            "rule": "checkpoint_stalled",
+            "field": "checkpoint_save_ms",
+            "op": "gt",
+            "threshold": None if chunk_wall is None
+            else round(1e3 * chunk_wall, 3),
+            "round": int(round_idx),
+            "value": round(waited_ms, 3),
+            "action": "warn",
+        }
+        self.events.append(event)
+        logger.warning(
+            "alarm checkpoint_stalled: save still in flight at round %d — "
+            "backpressure engaged, waited %.1fms (chunk wall %.1fms)",
+            round_idx, waited_ms,
+            1e3 * chunk_wall if chunk_wall is not None else float("nan"))
+
+    def _write(self, snapshot, round_idx: int, t0: float, snap_ms: float):
+        from repro.robust.fs_faults import SimulatedKill
+
+        try:
+            path, nbytes = write_checkpoint(
+                self.policy.directory, snapshot, round_idx,
+                config=self.config, fs=self.fs,
+                retries=self.policy.retries,
+                backoff_s=self.policy.backoff_s)
+            prune_checkpoints(self.policy.directory, self.policy.keep,
+                              fs=self.fs)
+        except SimulatedKill:
+            # the process "died" between save-start and commit: stop doing
+            # anything at all (the torn .tmp-* stays on disk for recovery
+            # tests to trip over, exactly like a real preemption)
+            self.dead = True
+            return
+        except Exception as e:
+            with self._lock:
+                self._failures += 1
+                self._save_ms_total += 1e3 * (time.perf_counter() - t0)
+            event = {
+                "rule": "checkpoint_failed",
+                "field": "checkpoint_failures",
+                "op": "gt",
+                "threshold": 0.0,
+                "round": int(round_idx),
+                "value": float(self._failures),
+                "action": "warn",
+            }
+            self.events.append(event)
+            logger.warning("alarm checkpoint_failed: save at round %d "
+                           "failed after retries: %s", round_idx, e)
+            return
+        with self._lock:
+            self._saves += 1
+            self._bytes_total += nbytes
+            self._save_ms_total += 1e3 * (time.perf_counter() - t0)
+        logger.info("checkpoint committed: %s (%.1f KiB, %.1fms incl. "
+                    "%.1fms snapshot)", path, nbytes / 1024,
+                    1e3 * (time.perf_counter() - t0), snap_ms)
+
+    def _sync_gather_save(self, state, round_idx: int, t0: float):
+        """The legacy stall, kept as the benchmark baseline: full-state
+        device_get through this one process + blocking npz save."""
+        import jax
+
+        from repro.checkpoint.checkpoint import save_checkpoint
+
+        host_state = jax.device_get(state)
+        path = os.path.join(self.policy.directory, "sync_gather",
+                            f"state_{round_idx:08d}")
+        save_checkpoint(path, host_state, step=round_idx, fs=self.fs)
+        nbytes = 0
+        npz = path + ".npz"
+        if self.fs.exists(npz):
+            try:
+                nbytes = len(self.fs.read_bytes(npz))
+            except OSError:
+                pass
+        with self._lock:
+            self._saves += 1
+            self._bytes_total += nbytes
+            self._save_ms_total += 1e3 * (time.perf_counter() - t0)
+
+
+__all__ = ["MODES", "CheckpointManager", "CheckpointPolicy"]

@@ -202,6 +202,7 @@ def run_rounds(
     run_info: "dict | None" = None,
     trace_capture=None,
     start_round: int = 0,
+    checkpoint=None,
 ):
     """Run up to ``num_rounds`` rounds in chunks of ``chunk``; one host sync
     per chunk. Returns ``(final_state, RoundTrace)`` — the state stays
@@ -231,8 +232,17 @@ def run_rounds(
                       boundaries to open/close jax.profiler windows.
       start_round   — global index of the first round (resumed runs), offsets
                       the "round" field of emitted rows.
+      checkpoint    — checkpoint/policy.CheckpointManager; its ``maybe_save``
+                      is called at every chunk boundary (from THIS one host
+                      sync — the save path copies the state's addressable
+                      shards host-side and never calls jax.device_get, so the
+                      one-sync-per-chunk contract holds with checkpointing
+                      on), and it is finalized (in-flight save joined) when
+                      the run ends. Its telemetry and alarm events ride the
+                      footer.
     """
-    from repro.obs.sinks import ROW_FIELDS, SCHEMA_VERSION, build_round_row
+    from repro.obs.sinks import ROW_FIELDS, SCHEMA_VERSION, build_footer, \
+        build_round_row
 
     chunk = max(1, min(chunk, num_rounds))
     if runner is None:
@@ -290,14 +300,23 @@ def run_rounds(
                 stopped = True
             if trace_capture is not None:
                 trace_capture.on_chunk_end(start_round + executed)
+            if checkpoint is not None:
+                # state buffers are about to be donated to the NEXT chunk:
+                # maybe_save snapshots host copies before dispatching the
+                # (async) write
+                checkpoint.maybe_save(state, start_round + executed, elapsed)
     finally:
         if trace_capture is not None:
             trace_capture.close()
-        footer = {
-            "v": SCHEMA_VERSION, "kind": "footer", "rounds": executed,
-            "stopped": stopped,
-            "alarms": [e for s in sinks for e in getattr(s, "events", [])],
-        }
+        if checkpoint is not None:
+            checkpoint.finalize()
+        alarms = [e for s in sinks for e in getattr(s, "events", [])]
+        if checkpoint is not None:
+            alarms.extend(checkpoint.events)
+        footer = build_footer(
+            executed, stopped, alarms,
+            checkpoint=checkpoint.telemetry() if checkpoint is not None
+            else None)
         for s in sinks:
             s.close(footer)
     trace = RoundTrace(

@@ -8,6 +8,7 @@ round, communication, wall time).
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from typing import Any, Callable
 
@@ -64,6 +65,28 @@ class History:
         )
 
 
+def checkpoint_config_fingerprint(algo: str, runtime: str, channel_name: str,
+                                  num_clients: int, cohort_size: int,
+                                  faults=None, async_cfg=None) -> dict:
+    """The run-identity dict embedded in every checkpoint manifest and
+    demanded back at resume: a checkpoint written under one algorithm /
+    runtime / channel / cohort / fault schedule / async gate must not be
+    silently continued under another (the carried AA history, EF residuals
+    and buffers would be statistically meaningless). JSON-normalized so the
+    comparison survives the manifest's serialization round-trip."""
+    fp = {
+        "algo": algo,
+        "runtime": runtime,
+        "channel": channel_name,
+        "num_clients": int(num_clients),
+        "cohort_size": int(cohort_size) if cohort_size is not None else None,
+        "faults": dataclasses.asdict(faults) if faults is not None else None,
+        "async": dataclasses.asdict(async_cfg)
+        if async_cfg is not None else None,
+    }
+    return json.loads(json.dumps(fp))
+
+
 def run_federated(
     problem: FLProblem,
     algo: str,
@@ -83,6 +106,9 @@ def run_federated(
     tap=None,
     faults=None,
     async_cfg=None,
+    checkpoint=None,
+    resume=None,
+    checkpoint_fs=None,
 ) -> History:
     """Iterate ``num_rounds`` of ``algo`` and collect the metric history.
 
@@ -138,6 +164,31 @@ def run_federated(
                     compiles the byte-identical synchronous graph on either
                     runtime. ``History.arrivals``/``staleness_*`` surface the
                     gate's per-round activity.
+    checkpoint    — checkpoint/policy.CheckpointPolicy: preemption-tolerant
+                    saves of the full ServerState (params + control variates
+                    + AA history + codec EF/ref buffers + fault anchors +
+                    async buffers). On the engine path saves dispatch from
+                    the chunk-boundary host sync to a background thread
+                    (policy.mode="async"); the per-round loop saves inline.
+                    Every checkpoint's manifest embeds this run's config
+                    fingerprint (algo/runtime/channel/cohort/faults/async),
+                    and the save telemetry rides the v4 footer.
+    resume        — None: fresh start. "auto": restore the newest COMPLETE
+                    checkpoint under ``checkpoint.directory`` (torn/corrupt
+                    saves are skipped; nothing restorable → fresh start). A
+                    path: restore exactly that checkpoint directory (raises
+                    if torn). Either way the restored manifest's config
+                    fingerprint must match this run's — a resumed run
+                    REFUSES to continue under different hyperparameters/
+                    faults (CheckpointConfigMismatch) instead of silently
+                    blending histories. Round numbering continues from the
+                    checkpoint round: ``num_rounds`` stays the TOTAL budget,
+                    so a run preempted at round r executes rounds
+                    r..num_rounds-1 and History/rows stay contiguous.
+    checkpoint_fs — filesystem override for the save/restore path (the
+                    crash-injection harness passes a
+                    repro.robust.fs_faults.FaultyFs here); None = the real
+                    filesystem.
     """
     from repro.comm import make_channel
     from repro.comm.schema import uplink_byte_breakdown
@@ -192,6 +243,38 @@ def run_federated(
             channel, UPLINK_SCHEMAS[algo], state.params),
     }
 
+    ckpt_mgr = None
+    start_round = 0
+    if checkpoint is not None or resume not in (None, "none"):
+        from repro.checkpoint import (
+            LOCAL_FS, CheckpointManager, load_checkpoint, load_latest,
+        )
+
+        ckpt_fs = checkpoint_fs if checkpoint_fs is not None else LOCAL_FS
+        fingerprint = checkpoint_config_fingerprint(
+            algo, runtime, channel.name, problem.clients.num_clients,
+            run_info["cohort_size"], faults, async_cfg)
+        if resume not in (None, "none"):
+            # the freshly-initialized state (incl. fault-anchor/async-buffer
+            # comm attachments) is the shape/dtype/sharding template
+            if resume == "auto":
+                if checkpoint is None:
+                    raise ValueError(
+                        'resume="auto" needs a checkpoint policy (it names '
+                        "the directory to scan)")
+                found = load_latest(checkpoint.directory, state, fs=ckpt_fs,
+                                    expect_config=fingerprint)
+            else:
+                found = (load_checkpoint(resume, state, fs=ckpt_fs,
+                                         expect_config=fingerprint))
+            if found is not None:
+                state, manifest = found
+                start_round = int(manifest["round"])
+        if checkpoint is not None:
+            ckpt_mgr = CheckpointManager(
+                checkpoint, config=fingerprint, fs=ckpt_fs,
+                last_saved=start_round)
+
     if chunk is not None:
         if chunk < 1:
             # the CLIs map their 0-means-loop knob to None before calling;
@@ -202,14 +285,16 @@ def run_federated(
         from repro.core import engine
 
         state, trace = engine.run_rounds(
-            round_fn, state, num_rounds, chunk=chunk, w_star=w_star,
+            round_fn, state, max(0, num_rounds - start_round), chunk=chunk,
+            w_star=w_star,
             stop_rel_error=stop_rel_error, stop_grad_norm=stop_grad_norm,
             sinks=sinks, run_info=run_info, trace_capture=trace_capture,
-            tap=tap,
+            tap=tap, start_round=start_round, checkpoint=ckpt_mgr,
         )
         return History(
             algo=algo,
-            rounds=np.arange(trace.num_rounds, dtype=np.float64),
+            rounds=np.arange(start_round, start_round + trace.num_rounds,
+                             dtype=np.float64),
             loss=trace.loss,
             grad_norm=trace.grad_norm,
             rel_error=trace.rel_error,
@@ -233,20 +318,22 @@ def run_federated(
         # eagerly dispatched O(n_leaves) kernels per round
         rel_fn = jax.jit(lambda p: tm.tree_norm(tm.tree_sub(p, w_star)))
 
-    from repro.obs.sinks import ROW_FIELDS, SCHEMA_VERSION, build_round_row
+    from repro.obs.sinks import (
+        ROW_FIELDS, SCHEMA_VERSION, build_footer, build_round_row,
+    )
 
     for s in sinks:
         s.open({
             "v": SCHEMA_VERSION, "kind": "header", "fields": list(ROW_FIELDS),
-            "num_rounds": num_rounds, "chunk": None, "start_round": 0,
-            **run_info,
+            "num_rounds": num_rounds, "chunk": None,
+            "start_round": start_round, **run_info,
         })
     rows = []
     comm_total = 0.0
     t_total = 0.0
     stopped = False
     try:
-        for t in range(num_rounds):
+        for t in range(start_round, num_rounds):
             if trace_capture is not None:
                 trace_capture.on_chunk_start(t, 1)
             t0 = time.perf_counter()
@@ -269,6 +356,10 @@ def run_federated(
                                         t_total)])
             if trace_capture is not None:
                 trace_capture.on_chunk_end(t + 1)
+            if ckpt_mgr is not None:
+                # loop path: no donation hazard, but the same snapshot-copy
+                # save path as the engine (inline here, async per policy)
+                ckpt_mgr.maybe_save(state, t + 1, dt)
             if not np.isfinite(m.loss):
                 stopped = True
                 break
@@ -284,15 +375,22 @@ def run_federated(
     finally:
         if trace_capture is not None:
             trace_capture.close()
-        footer = {
-            "v": SCHEMA_VERSION, "kind": "footer", "rounds": len(rows),
-            "stopped": stopped,
-            "alarms": [e for s in sinks for e in getattr(s, "events", [])],
-        }
+        if ckpt_mgr is not None:
+            ckpt_mgr.finalize()
+        alarms = [e for s in sinks for e in getattr(s, "events", [])]
+        if ckpt_mgr is not None:
+            alarms.extend(ckpt_mgr.events)
+        footer = build_footer(
+            len(rows), stopped, alarms,
+            checkpoint=ckpt_mgr.telemetry() if ckpt_mgr is not None
+            else None)
         for s in sinks:
             s.close(footer)
 
     arr = np.asarray(rows, dtype=np.float64)
+    if arr.size == 0:
+        # resumed at (or past) the round budget: nothing left to run
+        arr = arr.reshape(0, 11)
     return History(
         algo=algo,
         rounds=arr[:, 0],

@@ -144,6 +144,53 @@ def num_client_shards(mesh, axes: tuple[str, ...] | None = None) -> int:
     return math.prod(mesh.shape[a] for a in axes)
 
 
+# -- shard addressability (the checkpoint subsystem's view of an array) -----
+
+def leaf_addressable_shards(leaf) -> "list[tuple[tuple[tuple[int, int], ...], object]]":
+    """The shards of ``leaf`` THIS process can read, as
+    ``[(box, host_copy), ...]`` — ``box`` is one ``(start, stop)`` pair per
+    dimension and ``host_copy`` a fresh numpy COPY of that shard's data.
+
+    This is the primitive the per-shard checkpoint save is built on: each
+    host saves exactly the boxes it holds, so no cross-host ``device_get``
+    (and no full-array gather through one process) ever happens on the save
+    path. Replicated leaves yield one shard per local device with identical
+    boxes — callers dedupe by box. The copy is deliberate: the engine DONATES
+    state buffers to the next chunk's jit, so a zero-copy view taken at the
+    chunk boundary would silently alias memory XLA is about to reuse.
+    """
+    import numpy as np
+
+    shards = getattr(leaf, "addressable_shards", None)
+    if shards is None:  # plain numpy / scalar leaf: one process-local box
+        arr = np.array(leaf, copy=True)
+        return [(tuple((0, n) for n in arr.shape), arr)]
+    out = []
+    for sh in shards:
+        data = np.array(sh.data, copy=True)
+        box = tuple(
+            (0 if idx.start is None else int(idx.start),
+             dim if idx.stop is None else int(idx.stop))
+            for idx, dim in zip(sh.index, leaf.shape))
+        if not box:  # 0-d leaf
+            box = ()
+        out.append((box, data))
+    return out
+
+
+def dedupe_shard_boxes(shards):
+    """Drop replicated copies: keep the first shard seen per distinct box
+    (replication puts bit-identical data at every copy, so which copy wins
+    is immaterial)."""
+    seen, out = set(), []
+    for box, data in shards:
+        if box in seen:
+            continue
+        seen.add(box)
+        out.append((box, data))
+    return out
+
+
 def make_sharded_round_fn(algo: str, problem: FLProblem, hp: AlgoHParams,
                           mesh, client_axes: tuple[str, ...] | None = None,
                           channel: "CommChannel | str | None" = None,

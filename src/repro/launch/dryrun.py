@@ -242,7 +242,9 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
                     clip_rtol: float = 0.0,
                     drop_rate: float = 0.0, stale_rate: float = 0.0,
                     byz_clients: int = 0, byz_mode: str = "sign_flip",
-                    dp_sigma: float = 0.0, fault_seed: int = 0) -> dict:
+                    dp_sigma: float = 0.0, fault_seed: int = 0,
+                    checkpoint_dir: str = "", checkpoint_every: int = 10,
+                    checkpoint_keep: int = 3, resume: str = "none") -> dict:
     """Compile + execute shard_mapped FL round(s) on the production mesh.
 
     Uses a synthetic logistic-regression problem (the paper's workload) with
@@ -276,6 +278,15 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
     the fault-injected round's compile/collective profile on the production
     mesh. All zero (the default) compiles the byte-identical fault-free
     graph; ``fault_seed`` keys the injection stream.
+
+    ``checkpoint_dir`` checkpoints the ServerState through the
+    preemption-tolerant sharded format (repro/checkpoint) every
+    ``checkpoint_every`` rounds; on the engine path (``round_chunk > 1``)
+    saves dispatch from the chunk-boundary sync to a background thread.
+    ``resume="auto"`` restores the newest COMPLETE checkpoint under the
+    directory and continues toward the same total ``rounds`` (the manifest's
+    config fingerprint — algo/mesh/channel/cohort/faults — must match, else
+    the resume refuses).
 
     ``cohort_size`` samples a C-client cohort each round (AlgoHParams
     .cohort_size): the compiled round computes on [C, ...] tensors gathered
@@ -335,11 +346,50 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
     compiled = round_fn.lower(state).compile()
     compile_s = time.time() - t0
 
+    ckpt_mgr = None
+    start_round = 0
+    if checkpoint_dir or resume != "none":
+        from repro.checkpoint import (
+            CheckpointManager, CheckpointPolicy, load_checkpoint, load_latest,
+        )
+        from repro.core.server import checkpoint_config_fingerprint
+
+        fingerprint = checkpoint_config_fingerprint(
+            algo, "sharded", channel.name, num_clients, cohort_size, faults)
+        fingerprint["mesh"] = "2x16x16" if multi_pod else "16x16"
+        if resume != "none":
+            if resume == "auto":
+                if not checkpoint_dir:
+                    raise ValueError('resume="auto" needs checkpoint_dir')
+                found = load_latest(checkpoint_dir, state,
+                                    expect_config=fingerprint)
+            else:
+                found = load_checkpoint(resume, state,
+                                        expect_config=fingerprint)
+            if found is not None:
+                state, manifest = found
+                start_round = int(manifest["round"])
+                print(f"resumed from round {start_round} "
+                      f"({manifest.get('inventory', {}).get('num_leaves')} "
+                      "leaves)")
+        if checkpoint_dir:
+            ckpt_mgr = CheckpointManager(
+                CheckpointPolicy(directory=checkpoint_dir,
+                                 every=checkpoint_every,
+                                 keep=checkpoint_keep),
+                config=fingerprint, last_saved=start_round)
+    rounds_left = max(0, rounds - start_round)
+
     # d=54 reference solve is cheap; rel-error traces make the dryrun a
     # convergence measurement, not just a compile check (ROADMAP: Newton-row
     # numerics under lossy codecs on the multi-pod mesh)
     wstar = solve_reference(problem, iters=50)
     wstar_norm = float(tm.tree_norm(wstar))
+
+    if rounds_left == 0:
+        raise ValueError(
+            f"resume landed at round {start_round} of a {rounds}-round "
+            "budget — nothing left to run (raise --fl-rounds)")
 
     engine_compile_s = None
     if round_chunk > 1:
@@ -359,8 +409,10 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
         jax.block_until_ready(out[1])
         engine_compile_s = round(time.time() - t0, 1)
         t0 = time.time()
-        state, trace = run_rounds(raw_round_fn, state, rounds, chunk=chunk,
-                                  w_star=wstar, runner=runner)
+        state, trace = run_rounds(raw_round_fn, state, rounds_left,
+                                  chunk=chunk, w_star=wstar, runner=runner,
+                                  start_round=start_round,
+                                  checkpoint=ckpt_mgr)
         losses = [float(v) for v in trace.loss]
         rel_errors = [float(v) for v in trace.rel_error]
         gram_conds = [float(v) for v in trace.gram_cond_max]
@@ -369,16 +421,20 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
     else:
         t0 = time.time()
         losses, rel_errors, gram_conds = [], [], []
-        for _ in range(rounds):
+        for t in range(start_round, rounds):
             state, metrics = round_fn(state)
             losses.append(float(metrics.loss))
             gram_conds.append(float(metrics.gram_cond_max))
             rel_errors.append(
                 float(tm.tree_norm(tm.tree_sub(state.params, wstar)))
                 / max(wstar_norm, 1e-30))
+            if ckpt_mgr is not None:
+                ckpt_mgr.maybe_save(state, t + 1)
         jax.block_until_ready(metrics.loss)
+        if ckpt_mgr is not None:
+            ckpt_mgr.finalize()
         comm_bytes = float(metrics.comm_bytes)
-        run_s = (time.time() - t0) / rounds
+        run_s = (time.time() - t0) / rounds_left
 
     cost = _cost_dict(compiled)
     return {
@@ -399,6 +455,8 @@ def dryrun_fl_round(algo: str, multi_pod: bool = False,
         }),
         "aa_impl": aa_impl,
         "local_impl": local_impl,
+        "start_round": start_round,
+        "checkpoint": (None if ckpt_mgr is None else ckpt_mgr.telemetry()),
         "compile_s": round(compile_s, 1),
         "engine_compile_s": engine_compile_s,
         "run_s": round(run_s, 2),
@@ -476,6 +534,22 @@ def main() -> None:
                     help="with --fl-round: AlgoHParams.local_impl (the "
                          "sharded runtime resolves to 'tree' — exercises "
                          "the fused-kernel fallback path)")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="with --fl-round: checkpoint the ServerState under "
+                         "this directory (preemption-tolerant sharded "
+                         "format, repro/checkpoint; async at chunk "
+                         "boundaries under --round-chunk)")
+    ap.add_argument("--checkpoint-every", type=int, default=10,
+                    help="with --fl-round: rounds between checkpoint saves")
+    ap.add_argument("--checkpoint-keep", type=int, default=3,
+                    help="with --fl-round: retention — GC checkpoints "
+                         "beyond the newest N (0 = keep all)")
+    ap.add_argument("--resume", default="none",
+                    help="with --fl-round: 'auto' restores the newest "
+                         "COMPLETE checkpoint under --checkpoint-dir and "
+                         "continues toward the same --fl-rounds total; "
+                         "'none' starts fresh; otherwise a ckpt_* path. "
+                         "Mismatched manifest config refuses to resume")
     args = ap.parse_args()
 
     if args.fl_round:
@@ -530,7 +604,11 @@ def main() -> None:
                                       byz_clients=args.byz_clients,
                                       byz_mode=args.byz_mode,
                                       dp_sigma=args.dp_sigma,
-                                      fault_seed=args.fault_seed)
+                                      fault_seed=args.fault_seed,
+                                      checkpoint_dir=args.checkpoint_dir,
+                                      checkpoint_every=args.checkpoint_every,
+                                      checkpoint_keep=args.checkpoint_keep,
+                                      resume=args.resume)
                 with open(os.path.join(RESULTS_DIR, tag + ".json"), "w") as f:
                     json.dump(res, f, indent=1)
                 print(f"OK   {tag}: compile={res['compile_s']}s "

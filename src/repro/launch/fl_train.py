@@ -138,6 +138,37 @@ def main() -> None:
                          "mesh instead of the single-pod 16x16 (requires "
                          "enough devices, e.g. the dryrun host-device env)")
     ap.add_argument("--out", default="")
+    # -- preemption-tolerant checkpointing (repro/checkpoint) ------------
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="checkpoint the full ServerState under this "
+                         "directory (atomic per-shard saves with a manifest "
+                         "commit marker — checkpoint/sharded_ckpt.py). "
+                         "Under --round-chunk the save dispatches from the "
+                         "chunk-boundary sync to a background thread and "
+                         "overlaps the next chunk's compute")
+    ap.add_argument("--checkpoint-every", type=int, default=10,
+                    help="rounds between saves (saves land at the first "
+                         "chunk boundary at/after each multiple)")
+    ap.add_argument("--checkpoint-keep", type=int, default=3,
+                    help="retention: GC committed checkpoints beyond the "
+                         "newest N (0 = keep all)")
+    ap.add_argument("--resume", default="none",
+                    help="'auto': restore the newest COMPLETE checkpoint "
+                         "under --checkpoint-dir (torn/partial saves are "
+                         "skipped) and continue with contiguous round "
+                         "numbering; 'none': fresh start; otherwise a path "
+                         "to one ckpt_* directory. Resume REFUSES a "
+                         "checkpoint whose manifest config (algo/runtime/"
+                         "channel/cohort/faults/async) mismatches this run")
+    ap.add_argument("--checkpoint-sync", action="store_true",
+                    help="save inline at the boundary instead of on the "
+                         "background thread (debugging/benchmark baseline)")
+    ap.add_argument("--inject-kill-save", type=int, default=0, metavar="N",
+                    help="crash-injection harness: hard-exit the process "
+                         "(exit code 43, robust/fs_faults.KILL_EXIT_CODE) "
+                         "mid-write during the N-th checkpoint save, before "
+                         "its commit rename — the kill-resume recovery smoke "
+                         "(scripts/kill_resume_smoke.py). 0 = off")
     # -- telemetry (repro/obs) -------------------------------------------
     ap.add_argument("--metrics-out", default="",
                     help="stream per-round telemetry rows to this JSONL file "
@@ -208,6 +239,25 @@ def main() -> None:
         print("warning: --deadline without --latency-scale gates on all-zero "
               "latencies (every client on time)")
 
+    ckpt_policy = None
+    ckpt_fs = None
+    resume = args.resume if args.resume != "none" else None
+    if args.checkpoint_dir:
+        from repro.checkpoint import CheckpointPolicy
+
+        ckpt_policy = CheckpointPolicy(
+            directory=args.checkpoint_dir, every=args.checkpoint_every,
+            keep=args.checkpoint_keep,
+            mode="sync" if args.checkpoint_sync else "async")
+        if args.inject_kill_save > 0:
+            from repro.robust.fs_faults import FaultyFs, FSFaultPlan
+
+            ckpt_fs = FaultyFs(FSFaultPlan(
+                kill_at_save=args.inject_kill_save, kill_after_writes=1,
+                kill_hard=True))
+    elif resume == "auto":
+        ap.error("--resume auto needs --checkpoint-dir")
+
     mesh = None
     if args.runtime == "sharded":
         from repro.core.sharded import num_client_shards
@@ -255,12 +305,23 @@ def main() -> None:
     algos = [args.algo] + ([args.baseline] if args.baseline else [])
     for algo in algos:
         sinks, trace_capture = build_sinks(algo)
+        pol = ckpt_policy
+        if pol is not None and len(algos) > 1:
+            # per-algo subdir: the manifests carry per-algo config
+            # fingerprints, so sharing one directory would make resume
+            # refuse the second algo's checkpoints
+            import dataclasses as _dc
+
+            pol = _dc.replace(pol,
+                              directory=os.path.join(pol.directory, algo))
         t0 = time.time()
         h = run_federated(problem, algo, hp, args.rounds,
                           runtime=args.runtime, mesh=mesh, channel=channel,
                           chunk=chunk, sinks=sinks,
                           trace_capture=trace_capture, faults=faults,
-                          async_cfg=async_cfg)
+                          async_cfg=async_cfg,
+                          checkpoint=pol, resume=resume,
+                          checkpoint_fs=ckpt_fs)
         results[algo] = {
             "loss_curve": [float(v) for v in h.loss],
             "grad_norm_curve": [float(v) for v in h.grad_norm],

@@ -9,15 +9,24 @@ loop (core/server.py) feeds the same rows at round granularity.
 Row schema (versioned — bump SCHEMA_VERSION on any incompatible change;
 v2 added aa_clipped_max, the robustness layer's clip-screen activity; v3
 added arrivals/staleness_mean/staleness_max, the deadline gate's per-round
-activity — null whenever AsyncConfig is off):
+activity — null whenever AsyncConfig is off; v4 added the checkpoint
+telemetry triple to the footer — always present, zeros when checkpointing
+is off):
 
-  header row  {"v": 3, "kind": "header", "fields": [...], ...run metadata:
+  header row  {"v": 4, "kind": "header", "fields": [...], ...run metadata:
                algo / runtime / channel / num_clients / cohort_size / chunk /
                num_rounds / uplink_bytes (per-UplinkSpec byte breakdown from
                the comm schema) / backend}
-  round row   {"v": 3, "kind": "round", "round": t, <ROW_FIELDS>}
-  footer row  {"v": 3, "kind": "footer", "rounds": T, "stopped": bool,
-               "alarms": [...]}
+  round row   {"v": 4, "kind": "round", "round": t, <ROW_FIELDS>}
+  footer row  {"v": 4, "kind": "footer", "rounds": T, "stopped": bool,
+               "alarms": [...],
+               "checkpoint_save_ms": cumulative wall spent in saves
+               (snapshot + serialize + commit, async or not),
+               "checkpoint_bytes": cumulative committed bytes,
+               "checkpoint_failures": saves that exhausted their I/O
+               retries (the run continued; each also appears in "alarms"
+               as a checkpoint_failed event, and a save overrunning its
+               chunk's compute appears as checkpoint_stalled)}
 
 Round-row fields (ROW_FIELDS):
 
@@ -59,7 +68,7 @@ from typing import Any, Protocol, runtime_checkable
 
 import numpy as np
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 #: canonical per-round row fields, in emission order (after "round")
 ROW_FIELDS = (
@@ -111,6 +120,24 @@ def build_round_row(round_idx: int, metrics: "dict[str, float]", rel: float,
         "comm_bytes_total": comm_total,
         "round_wall_s": round_wall_s,
         "wall_time_s": wall_total_s,
+    }
+
+
+def build_footer(rounds: int, stopped: bool, alarms: "list[dict]",
+                 checkpoint: dict | None = None) -> dict:
+    """The versioned run footer. ``checkpoint`` is a CheckpointManager's
+    ``telemetry()`` dict; the three fields are always emitted (zeros when no
+    checkpointing ran) so v4 consumers never branch on presence."""
+    ckpt = checkpoint or {}
+    return {
+        "v": SCHEMA_VERSION,
+        "kind": "footer",
+        "rounds": int(rounds),
+        "stopped": bool(stopped),
+        "alarms": alarms,
+        "checkpoint_save_ms": float(ckpt.get("checkpoint_save_ms", 0.0)),
+        "checkpoint_bytes": int(ckpt.get("checkpoint_bytes", 0)),
+        "checkpoint_failures": int(ckpt.get("checkpoint_failures", 0)),
     }
 
 
@@ -269,6 +296,7 @@ __all__ = [
     "MemorySink",
     "MetricsSink",
     "StdoutSink",
+    "build_footer",
     "build_round_row",
     "make_sink",
 ]

@@ -1,0 +1,484 @@
+"""Preemption-tolerant checkpointing (repro/checkpoint sharded format +
+crash-injection recovery harness, repro/robust/fs_faults).
+
+The property under test is the checkpoint subsystem's whole reason to exist:
+a process killed at ANY byte of a save leaves the directory in a state from
+which ``load_latest`` resumes BIT-identically from the newest complete
+checkpoint — torn temp directories are invisible to discovery, corrupt or
+partial checkpoints are skipped (never raised on), a full disk degrades the
+run gracefully instead of crashing it, and the async save path adds no
+device→host sync beyond the engine's one-per-chunk.
+
+Fault realizations are deterministic (FSFaultPlan is keyed, not random), so
+every scenario here replays bit-identically.
+"""
+import io
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.checkpoint import (
+    CheckpointConfigMismatch,
+    CheckpointManager,
+    CheckpointPolicy,
+    ckpt_name,
+    list_checkpoints,
+    load_latest,
+    prune_checkpoints,
+    restore_checkpoint,
+    save_checkpoint,
+    snapshot_shards,
+    write_bytes_atomic,
+    write_checkpoint,
+)
+from repro.checkpoint.policy import MODES
+from repro.core import AAConfig, AlgoHParams, init_state, make_round_fn, run_rounds
+from repro.core.server import run_federated
+from repro.data import make_binary_classification, partition
+from repro.models.logreg import make_logreg_problem
+from repro.obs import AlarmMonitor, MemorySink
+from repro.robust import AsyncConfig, FaultPlan
+from repro.robust.fs_faults import FaultyFs, FSFaultPlan, SimulatedKill
+
+K = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    X, y = make_binary_classification("synthetic_small", n=400, seed=0)
+    clients = partition(X, y, num_clients=K, scheme="iid")
+    prob = make_logreg_problem(clients, gamma=1e-3)
+    return prob
+
+
+def _tiny_state():
+    """A cheap pytree standing in for ServerState where the protocol, not
+    the algorithm, is under test."""
+    return {
+        "w": np.arange(24.0, dtype=np.float32).reshape(4, 6),
+        "t": np.int32(3),
+        "comm": {"int8/ef": np.ones((8,), np.float32)},
+    }
+
+
+def _save(directory, round_idx, state=None, fs=None, config=None):
+    snap = snapshot_shards(state if state is not None else _tiny_state())
+    kw = {} if fs is None else {"fs": fs}
+    return write_checkpoint(directory, snap, round_idx,
+                            config=config or {}, **kw)
+
+
+# ---------------------------------------------------------------------------
+# corruption helpers: turn a COMMITTED checkpoint into each defect class the
+# recovery property quantifies over
+# ---------------------------------------------------------------------------
+def _corrupt(path: str, kind: str) -> None:
+    manifest = os.path.join(path, "manifest.json")
+    if kind == "none":
+        return
+    if kind == "torn_manifest":
+        data = open(manifest, "rb").read()
+        with open(manifest, "wb") as f:
+            f.write(data[: len(data) // 2])
+    elif kind == "bad_digest":
+        m = json.load(open(manifest))
+        first = next(iter(m["leaves"].values()))
+        first["shards"][0]["sha256"] = "0" * 64
+        with open(manifest, "w") as f:
+            json.dump(m, f)
+    elif kind == "missing_shard":
+        for name in os.listdir(path):
+            if name.startswith("shards_"):
+                os.remove(os.path.join(path, name))
+    elif kind == "empty":
+        for name in os.listdir(path):
+            os.remove(os.path.join(path, name))
+    else:  # pragma: no cover
+        raise ValueError(kind)
+
+
+class TestAtomicCommit:
+    def test_kill_mid_save_leaves_torn_tmp_invisible(self, tmp_path):
+        """Death between save-start and commit: the staging dir stays on
+        disk, but discovery and load_latest never see it."""
+        d = str(tmp_path)
+        fs = FaultyFs(FSFaultPlan(kill_at_save=1, kill_after_writes=1))
+        fs.on_save_start()
+        with pytest.raises(SimulatedKill):
+            _save(d, 5, fs=fs)
+        remnants = [n for n in os.listdir(d) if n.startswith(".tmp-")]
+        assert remnants, "the kill must leave the torn staging dir behind"
+        assert list_checkpoints(d) == []
+        assert load_latest(d, _tiny_state()) is None
+
+    def test_kill_before_commit_rename(self, tmp_path):
+        """Even with every shard and the manifest staged, death before the
+        directory rename means the checkpoint never existed."""
+        d = str(tmp_path)
+        # writes per save: shards npz (1), manifest (2) — die at the rename
+        fs = FaultyFs(FSFaultPlan(kill_at_save=1, kill_after_writes=2))
+        fs.on_save_start()
+        with pytest.raises(SimulatedKill):
+            _save(d, 5, fs=fs)
+        assert list_checkpoints(d) == []
+
+    def test_torn_write_never_under_final_name(self, tmp_path):
+        """A torn write (power cut mid-write) persists only under the temp
+        name; the final name either doesn't exist or holds complete bytes."""
+        path = str(tmp_path / "blob.bin")
+        fs = FaultyFs(FSFaultPlan(torn_write_rate=1.0))
+        with pytest.raises(OSError):
+            write_bytes_atomic(path, b"x" * 4096, fs=fs, retries=1,
+                               backoff_s=0.0, sleep=lambda _: None)
+        assert not os.path.exists(path)
+
+    def test_transient_error_retried(self, tmp_path):
+        """A once-flaky write (EIO then fine) succeeds via the exponential
+        backoff — no failure surfaces to the caller."""
+        d = str(tmp_path)
+        fs = FaultyFs(FSFaultPlan(flaky_writes=(0,)))
+        path, nbytes = write_checkpoint(
+            d, snapshot_shards(_tiny_state()), 7, config={}, fs=fs,
+            backoff_s=0.0, sleep=lambda _: None)
+        assert list_checkpoints(d) == [(7, path)]
+        assert nbytes > 0
+
+    def test_retention_gc_and_tmp_sweep(self, tmp_path):
+        d = str(tmp_path)
+        for r in (2, 4, 6, 8):
+            _save(d, r)
+        os.makedirs(os.path.join(d, ".tmp-ckpt_00000010-999"))
+        removed = prune_checkpoints(d, keep=2)
+        assert [r for r, _ in list_checkpoints(d)] == [8, 6]
+        assert any(".tmp-" in p for p in removed)
+        assert not any(n.startswith(".tmp-") for n in os.listdir(d))
+
+    def test_keep_zero_keeps_everything(self, tmp_path):
+        d = str(tmp_path)
+        for r in (1, 2, 3):
+            _save(d, r)
+        prune_checkpoints(d, keep=0)
+        assert [r for r, _ in list_checkpoints(d)] == [3, 2, 1]
+
+    def test_resave_same_round_overwrites(self, tmp_path):
+        """A rerun into the same directory supersedes an existing committed
+        round instead of failing the rename (ENOTEMPTY)."""
+        d = str(tmp_path)
+        _save(d, 4)
+        state = _tiny_state()
+        state["w"] = state["w"] + 1.0
+        _save(d, 4, state=state)
+        tree, _ = load_latest(d, _tiny_state())
+        np.testing.assert_array_equal(np.asarray(tree["w"]), state["w"])
+
+
+class TestRecoveryProperty:
+    """load_latest over ANY subset of {complete, torn-manifest, bad-digest,
+    missing-shard, empty}: never raises, never selects an incomplete
+    checkpoint, always lands on the newest complete one (or None)."""
+
+    @settings(max_examples=30, deadline=None)
+    @given(newest_kind=st.sampled_from(
+               ["none", "torn_manifest", "bad_digest", "missing_shard",
+                "empty"]),
+           middle_kind=st.sampled_from(["none", "torn_manifest", "empty"]),
+           oldest_ok=st.booleans())
+    def test_skips_defective_selects_newest_complete(
+            self, tmp_path_factory, newest_kind, middle_kind, oldest_ok):
+        d = str(tmp_path_factory.mktemp("prop"))
+        by_round = {}
+        for r in (2, 4, 6):
+            state = _tiny_state()
+            state["w"] = state["w"] + float(r)
+            path, _ = _save(d, r, state=state)
+            by_round[r] = (path, state)
+        _corrupt(by_round[6][0], newest_kind)
+        _corrupt(by_round[4][0], middle_kind)
+        if not oldest_ok:
+            _corrupt(by_round[2][0], "missing_shard")
+
+        complete = [r for r, kind in ((6, newest_kind), (4, middle_kind),
+                                      (2, "none" if oldest_ok else "empty"))
+                    if kind == "none"]
+        found = load_latest(d, _tiny_state())
+        if not complete:
+            assert found is None
+        else:
+            tree, manifest = found
+            assert manifest["round"] == max(complete)
+            np.testing.assert_array_equal(
+                np.asarray(tree["w"]), by_round[max(complete)][1]["w"])
+
+    def test_garbage_directory_never_raises(self, tmp_path):
+        """Stray files, misnamed dirs, and empty ckpt dirs are all ignored."""
+        d = str(tmp_path)
+        open(os.path.join(d, "notes.txt"), "w").write("hi")
+        os.makedirs(os.path.join(d, "ckpt_not_a_number"))
+        os.makedirs(os.path.join(d, ckpt_name(3)))  # committed name, empty
+        assert load_latest(d, _tiny_state()) is None
+        assert list_checkpoints(d) == [(3, os.path.join(d, ckpt_name(3)))]
+
+    def test_missing_directory_is_fresh_start(self, tmp_path):
+        assert load_latest(str(tmp_path / "never_created"),
+                           _tiny_state()) is None
+
+    def test_config_mismatch_refuses(self, tmp_path):
+        d = str(tmp_path)
+        _save(d, 3, config={"algo": "fedosaa_svrg", "channel": "int8"})
+        with pytest.raises(CheckpointConfigMismatch):
+            load_latest(d, _tiny_state(),
+                        expect_config={"algo": "fedosaa_svrg",
+                                       "channel": "identity"})
+        # matching config restores fine
+        assert load_latest(
+            d, _tiny_state(),
+            expect_config={"algo": "fedosaa_svrg",
+                           "channel": "int8"}) is not None
+
+
+class TestEnospcGracefulDegrade:
+    def test_run_continues_failure_counted_next_save_clean(self, setup):
+        """A full disk during save N: the run keeps training, the failure is
+        counted and alarmed in the v4 footer, and save N+1 (disk freed)
+        commits normally."""
+        prob = setup
+        hp = AlgoHParams(eta=0.5, local_epochs=3)
+        rf = make_round_fn("fedosaa_svrg", prob, hp)
+        state = init_state(prob, jax.random.PRNGKey(0), hp, None,
+                           "fedosaa_svrg")
+        import tempfile
+
+        d = tempfile.mkdtemp()
+        # first save = write steps 0..3 (1 write + 3 retries), all ENOSPC;
+        # the second save starts at step 4 and succeeds
+        fs = FaultyFs(FSFaultPlan(enospc_writes=(0, 1, 2, 3)))
+        mgr = CheckpointManager(
+            CheckpointPolicy(directory=d, every=2, mode="sync",
+                             backoff_s=0.0),
+            fs=fs)
+        sink = MemorySink()
+        _, trace = run_rounds(rf, state, 4, chunk=2, sinks=[sink],
+                              checkpoint=mgr)
+        assert trace.num_rounds == 4, "the run must survive the full disk"
+        tel = mgr.telemetry()
+        assert tel["checkpoint_failures"] == 1
+        assert [e["rule"] for e in mgr.events] == ["checkpoint_failed"]
+        assert sink.footer["checkpoint_failures"] == 1
+        assert any(a["rule"] == "checkpoint_failed"
+                   for a in sink.footer["alarms"])
+        # the round-4 save committed despite round-2's full disk
+        assert [r for r, _ in list_checkpoints(d, fs=fs)] == [4]
+        assert not any(n.startswith(".tmp-") for n in os.listdir(d)), \
+            "the failed save must sweep its staging dir"
+
+
+#: the adversarial carried state: int8 EF residuals + diff refs, two AA
+#: history columns, per-client async buffers fed by heavy-tailed latency
+#: faults — every buffer class a checkpoint can silently drop
+RICH_HP = dict(eta=0.5, local_epochs=3, carry_history=2,
+               aa=AAConfig(tikhonov=1e-6, damping=0.7))
+LATENCY_PLAN = FaultPlan(seed=5, latency_scale=1.0, latency_shape=1.5)
+GATE = AsyncConfig(deadline=2.0, min_arrivals=2, staleness_alpha=0.5)
+
+
+class TestKillRecoveryBitExact:
+    @pytest.mark.parametrize("runtime", ["vmap", "sharded"])
+    def test_kill_during_save_then_resume_auto(self, setup, tmp_path,
+                                               runtime):
+        """The acceptance scenario end-to-end on BOTH runtimes: a run killed
+        DURING a checkpoint save resumes from the newest complete checkpoint
+        and finishes bit-identical to the never-killed run — params, int8
+        comm state, carried AA history, and async buffers all included."""
+        prob = setup
+        hp = AlgoHParams(**RICH_HP)
+        d = str(tmp_path / runtime)
+        pol = CheckpointPolicy(directory=d, every=2, keep=0, mode="sync")
+        kw = dict(problem=prob, algo="fedosaa_svrg", hp=hp, rng=0,
+                  channel="int8", chunk=2, runtime=runtime,
+                  faults=LATENCY_PLAN, async_cfg=GATE)
+
+        straight = run_federated(num_rounds=6, **kw)
+
+        # the save at round 4 (save #2) dies mid-write: only round 2 commits
+        fs = FaultyFs(FSFaultPlan(kill_at_save=2, kill_after_writes=1))
+        run_federated(num_rounds=6, checkpoint=pol, checkpoint_fs=fs, **kw)
+        assert [r for r, _ in list_checkpoints(d)] == [2]
+        assert any(n.startswith(".tmp-") for n in os.listdir(d))
+
+        sink = MemorySink()
+        resumed = run_federated(num_rounds=6, checkpoint=pol, resume="auto",
+                                sinks=[sink], **kw)
+        assert sink.header["start_round"] == 2
+        assert [r["round"] for r in sink.rows] == [2, 3, 4, 5]
+        np.testing.assert_array_equal(resumed.rounds, [2, 3, 4, 5])
+        np.testing.assert_array_equal(resumed.loss, straight.loss[2:])
+        np.testing.assert_array_equal(resumed.grad_norm,
+                                      straight.grad_norm[2:])
+        for a, b in zip(jax.tree.leaves(straight.final_params),
+                        jax.tree.leaves(resumed.final_params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # the resumed run's own saves land alongside the survivor
+        # (keep=0 retains everything: rounds 4 and 6 joined round 2)
+        assert [r for r, _ in list_checkpoints(d)] == [6, 4, 2]
+
+    def test_resume_refuses_mismatched_run_config(self, setup, tmp_path):
+        """A checkpoint written under one fault plan must not resume under
+        another — the carried anchors/buffers would be meaningless."""
+        prob = setup
+        hp = AlgoHParams(**RICH_HP)
+        d = str(tmp_path)
+        pol = CheckpointPolicy(directory=d, every=2, mode="sync")
+        kw = dict(problem=prob, algo="fedosaa_svrg", hp=hp, rng=0,
+                  channel="int8", chunk=2)
+        run_federated(num_rounds=2, checkpoint=pol, faults=LATENCY_PLAN,
+                      async_cfg=GATE, **kw)
+        with pytest.raises(CheckpointConfigMismatch):
+            run_federated(num_rounds=4, checkpoint=pol, resume="auto",
+                          faults=None, async_cfg=None, **kw)
+
+
+class TestNoExtraDeviceSync:
+    @pytest.mark.parametrize("mode", ["async", "sync"])
+    def test_checkpointing_adds_no_device_get(self, setup, tmp_path,
+                                              monkeypatch, mode):
+        """The save path copies addressable shards through the arrays' own
+        host buffers: with checkpointing attached the engine still performs
+        EXACTLY one jax.device_get per chunk (the acceptance criterion the
+        sinks already pin in tests/test_obs.py)."""
+        prob = setup
+        hp = AlgoHParams(eta=0.5, local_epochs=3)
+        rf = make_round_fn("fedosaa_svrg", prob, hp)
+        state = init_state(prob, jax.random.PRNGKey(0), hp, None,
+                           "fedosaa_svrg")
+        calls = []
+        orig = jax.device_get
+
+        def counting(x):
+            calls.append(1)
+            return orig(x)
+
+        monkeypatch.setattr(jax, "device_get", counting)
+        mgr = CheckpointManager(CheckpointPolicy(
+            directory=str(tmp_path), every=4, mode=mode))
+        sink = MemorySink()
+        _, trace = run_rounds(rf, state, 8, chunk=4,
+                              sinks=[sink, AlarmMonitor()], checkpoint=mgr)
+        assert trace.num_rounds == 8
+        assert mgr.saves_completed == 2
+        assert len(calls) == 2  # 8 rounds / chunk 4 = 2 chunks = 2 syncs
+        assert sink.footer["checkpoint_bytes"] > 0
+
+    def test_sync_gather_baseline_does_device_get(self, tmp_path):
+        """The benchmark's sync_gather baseline is the stall the async path
+        removes — it DOES full-state device_get (sanity check that the
+        comparison in benchmarks/ext_checkpoint.py measures what it says)."""
+        assert "sync_gather" in MODES
+        mgr = CheckpointManager(CheckpointPolicy(
+            directory=str(tmp_path), every=1, mode="sync_gather"))
+        calls = []
+        orig = jax.device_get
+        state = {"w": jax.numpy.ones((4,))}
+        try:
+            jax.device_get = lambda x: (calls.append(1), orig(x))[1]
+            mgr.maybe_save(state, 1, 0.01)
+            mgr.finalize()
+        finally:
+            jax.device_get = orig
+        assert len(calls) >= 1
+
+
+class TestBackpressure:
+    def test_one_in_flight_wait_and_warn(self, tmp_path):
+        """A save still in flight when the next comes due: the manager waits
+        (never two writers) and records a checkpoint_stalled event."""
+        import threading
+
+        gate = threading.Event()
+
+        class SlowFs(FaultyFs):
+            def write_bytes(self, path, data):
+                gate.wait(timeout=5.0)
+                super().write_bytes(path, data)
+
+        fs = SlowFs(FSFaultPlan())
+        mgr = CheckpointManager(CheckpointPolicy(
+            directory=str(tmp_path), every=1, mode="async"), fs=fs)
+        state = _tiny_state()
+        assert mgr.maybe_save(state, 1, 0.001)
+
+        def release():
+            gate.set()
+
+        threading.Timer(0.05, release).start()
+        assert mgr.maybe_save(state, 2, 0.001)   # must wait, then dispatch
+        mgr.finalize()
+        rules = [e["rule"] for e in mgr.events]
+        assert "checkpoint_stalled" in rules
+        assert mgr.saves_completed == 2
+        assert [r for r, _ in list_checkpoints(str(tmp_path), fs=fs)] \
+            == [2, 1]
+
+
+class TestLegacyNpzAtomic:
+    def test_interrupted_save_never_corrupts_existing(self, tmp_path):
+        """Regression for the silent-overwrite hazard: the legacy npz save
+        used to np.savez straight onto the final path, so a crash mid-write
+        destroyed the previous checkpoint. Now a failed save leaves the
+        original bytes untouched and restorable."""
+        path = str(tmp_path / "legacy_state")
+        tree = {"w": np.arange(6.0, dtype=np.float32)}
+        save_checkpoint(path, tree, step=1)
+        before = open(path + ".npz", "rb").read()
+
+        fs = FaultyFs(FSFaultPlan(torn_write_rate=1.0))
+        with pytest.raises(OSError):
+            save_checkpoint(path, {"w": np.zeros(6, np.float32)}, step=2,
+                            fs=fs)
+        assert open(path + ".npz", "rb").read() == before
+        restored = restore_checkpoint(
+            path, like={"w": np.zeros(6, np.float32)})
+        np.testing.assert_array_equal(np.asarray(restored["w"]), tree["w"])
+
+    def test_no_tmp_litter_on_success(self, tmp_path):
+        path = str(tmp_path / "clean")
+        save_checkpoint(path, {"w": np.ones(3, np.float32)}, step=0)
+        litter = [n for n in os.listdir(tmp_path) if ".tmp-" in n]
+        assert litter == []
+
+
+class TestManifestInventory:
+    def test_manifest_names_every_subsystem_buffer(self, setup, tmp_path):
+        """The manifest's inventory must account for the state's comm tags,
+        AA history, and async buffers — the human-auditable record that
+        nothing was silently dropped."""
+        prob = setup
+        hp = AlgoHParams(**RICH_HP)
+        from repro.comm import make_channel
+        from repro.robust import init_async_comm
+
+        channel = make_channel("int8")
+        state = init_state(prob, jax.random.PRNGKey(0), hp, channel,
+                           "fedosaa_svrg")
+        state = state._replace(comm=init_async_comm(
+            state.comm, state.params, prob.clients.num_clients))
+        d = str(tmp_path)
+        _save(d, 1, state=state)
+        manifest = json.load(
+            open(os.path.join(d, ckpt_name(1), "manifest.json")))
+        inv = manifest["inventory"]
+        assert inv["aa_history"] is True
+        assert inv["async_buffers"] is True
+        assert inv["rng"] is True and inv["round_counter"] is True
+        assert inv["num_leaves"] == len(jax.tree.leaves(state))
+        # every npz entry digest in the manifest is 64 hex chars
+        for leaf in manifest["leaves"].values():
+            for sh in leaf["shards"]:
+                assert len(sh["sha256"]) == 64
